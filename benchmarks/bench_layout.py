@@ -1,0 +1,34 @@
+"""Paper §3.3 — layout-operator throughput: the compiler-side cost of
+canonicalize / group / tile / tile_of / slice, which run at trace time
+for every operator dispatch."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.core import (
+    canonicalize, direct_sum, from_shape, group, slice_layout, strided, tile, tile_of,
+)
+
+
+def _timeit(fn, iters=2000) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list:
+    L = strided((4, 8, 4, 8), (2048, 64, 16, 1))
+    A = strided((8, 8), (8, 1))
+    B = strided((128, 128), (128, 1))
+    T, _ = tile(A, (8, 8), B, (128, 128))
+    rows = [
+        row("layout.canonicalize", _timeit(lambda: canonicalize(L)), "4-iter layout"),
+        row("layout.group", _timeit(lambda: group(L, (32, 32))), "to rank-2"),
+        row("layout.tile", _timeit(lambda: tile(A, (8, 8), B, (128, 128))), "8x8 ⊗ 128x128"),
+        row("layout.tile_of", _timeit(lambda: tile_of(T, (1024, 1024), B, (128, 128)), iters=500), "recover C"),
+        row("layout.slice", _timeit(lambda: slice_layout(L, (8, 8), (16, 16), (32, 32))), "16x16 region"),
+        row("layout.direct_sum", _timeit(lambda: direct_sum(A, (8, 8), B, (128, 128))), "strided atom"),
+    ]
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Fig. 13 — multi-head attention across input lengths (the
+Trainium workload, adapted): full-materialization attention vs the
+blocked online-softmax schedule (identical math to the Pallas kernel),
+plus a kernel-vs-oracle check in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_jitted
+from repro.kernels import ops as kops, ref as kref
+from repro.models import attention as attn_mod
+
+LENS = [512, 1024, 2048]
+
+
+def run() -> list:
+    rows = []
+    cfgish = type("C", (), {"num_heads": 8, "num_kv_heads": 8, "head_dim": 64})()
+    b, h, hd = 1, 8, 64
+    for s in LENS:
+        ks = jax.random.split(jax.random.PRNGKey(s), 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+        full = jax.jit(functools.partial(attn_mod._gqa_full, cfg=None, causal=False, window=None))
+        blocked = jax.jit(functools.partial(
+            attn_mod._gqa_blocked, cfg=None, causal=False, window=None, chunk=256))
+        us_full = time_jitted(full, q, k, v)
+        us_blk = time_jitted(blocked, q, k, v)
+        flops = 4 * b * h * s * s * hd
+        rows.append(row(f"mha.full.s{s}", us_full, f"{flops/(us_full*1e-6)/1e9:.1f}GFLOP/s"))
+        rows.append(row(f"mha.blocked.s{s}", us_blk, f"{flops/(us_blk*1e-6)/1e9:.1f}GFLOP/s"))
+    # Pallas kernel check (interpret) on one shape
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, 2, 256, 64), jnp.float32)
+    kk = jax.random.normal(jax.random.PRNGKey(8), (1, 2, 256, 64), jnp.float32)
+    vv = jax.random.normal(jax.random.PRNGKey(9), (1, 2, 256, 64), jnp.float32)
+    got = kops.flash_attention(q, kk, vv, causal=True)
+    err = float(jnp.max(jnp.abs(got - kref.attention_ref(q, kk, vv, causal=True))))
+    rows.append(row("mha.pallas_check", 0.0, f"max_err={err:.2e}"))
+    return rows

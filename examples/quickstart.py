@@ -1,0 +1,63 @@
+"""Quickstart: the Axe layout algebra and how the framework uses it.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DTensorSpec, It, Layout, canonicalize, from_shape, group, layouts_equal,
+    slice_layout, strided, tile, tile_of, za,
+)
+from repro.core.blockspec import derive_tiling
+
+
+def main():
+    # --- 1. An Axe layout: the paper's tensor-core example (§2.2) -----
+    L = Layout(
+        D=(It(8, 4, "lane"), It(2, 1, "warp"), It(4, 1, "lane"), It(2, 1, "reg")),
+        R=(It(2, 4, "warp"),),
+        O=za(warp=5),
+    )
+    print("tensor-core tile layout:", L)
+    print("  f(0,0) ->", sorted(map(str, L.call_shaped((0, 0), (8, 16)))))
+    print("  span per axis:", L.span())
+
+    # --- 2. Tiling (Kronecker) and recovery ---------------------------
+    A = strided((2, 3), (3, 1))
+    B = strided((8, 8), (8, 1))
+    T, S_T = tile(A, (2, 3), B, (8, 8))
+    print("\n(2x3 of 8x8 tiles) =", T)
+    C, S_C = tile_of(T, (16, 24), B, (8, 8))
+    print("recovered outer layout:", C, "shape", S_C)
+
+    # --- 3. Slicing ----------------------------------------------------
+    Ld = strided((2, 8, 3, 8), (192, 8, 64, 1))
+    sl = slice_layout(Ld, (0, 8), (8, 16), (16, 24))
+    print("\nslice [0:8, 8:24]:", canonicalize(sl))
+
+    # --- 4. Distributed tensors: Axe <-> PartitionSpec ----------------
+    mesh_shape = {"data": 16, "model": 16}
+    spec = DTensorSpec.from_pspec((8192, 4096), ("data", "model"), mesh_shape)
+    print("\nDTensor layout for S0S1 sharding:", spec.layout)
+    print("round-trips to pspec:", spec.pspec(mesh_shape))
+
+    # --- 5. Kernel tiling derivation (BlockSpec from Axe) -------------
+    d = derive_tiling((4096, 8192), (256, 512), jnp.bfloat16)
+    print("\nPallas grid for 4096x8192 bf16 tiled 256x512:", d.grid,
+          "| vreg aligned:", d.vreg_aligned, "| mxu aligned:", d.mxu_aligned)
+
+    # --- 6. A tiny model forward --------------------------------------
+    from repro.configs import get_config, smoke_variant
+    from repro.models.model_zoo import ShapeSpec, build_model
+
+    cfg = smoke_variant(get_config("qwen3-4b"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = api.make_train_batch(jax.random.PRNGKey(1), ShapeSpec("s", "train", 64, 2))
+    loss = api.loss_fn(params, batch)
+    print("\nsmoke qwen3-4b loss:", float(loss))
+
+
+if __name__ == "__main__":
+    main()

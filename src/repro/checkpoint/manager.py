@@ -1,0 +1,155 @@
+"""Sharded checkpointing with atomic commit and elastic restore.
+
+Layout on disk:
+    <dir>/step_000123.tmp/...   (in-flight)
+    <dir>/step_000123/          (committed via atomic rename)
+        manifest.json           (step, leaf paths, shapes, dtypes)
+        <leaf-path>.npy         (full logical arrays; per-shard files
+                                 in a true multi-host job — single
+                                 process here, so one file per leaf)
+
+Restore re-shards onto whatever mesh the restoring job uses (elastic
+restart onto fewer/more nodes), via device_put with the target
+shardings. Failed/partial saves are invisible (tmp dir never renamed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_paths(tree: Any) -> List[str]:
+    paths = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+        paths.append("/".join(parts) if parts else "leaf")
+    return paths
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = False
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, state: Any, step: int) -> None:
+        if self.async_save:
+            if self._thread is not None:
+                self._thread.join()
+            host_state = jax.tree.map(np.asarray, jax.device_get(state))
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(host_state, step)
+            )
+            self._thread.start()
+        else:
+            self._save_sync(jax.device_get(state), step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _save_sync(self, state: Any, step: int) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = jax.tree.leaves(state)
+        paths = _leaf_paths(state)
+        manifest: Dict[str, Any] = {"step": step, "leaves": []}
+        for path, leaf in zip(paths, leaves):
+            arr = np.asarray(leaf)
+            fname = path.replace("/", "__") + ".npy"
+            # bfloat16 has no numpy dtype: store raw uint16 + tag
+            if arr.dtype == jnp.bfloat16:
+                np.save(os.path.join(tmp, fname), arr.view(np.uint16))
+                manifest["leaves"].append(
+                    {"path": path, "file": fname, "dtype": "bfloat16", "shape": list(arr.shape)}
+                )
+            else:
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append(
+                    {"path": path, "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+                )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, template: Any, shardings: Any = None) -> Any:
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        paths = _leaf_paths(template)
+        leaves_t, treedef = jax.tree_util.tree_flatten(template)
+        sh_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(leaves_t)
+        )
+        out = []
+        for path, tleaf, sh in zip(paths, leaves_t, sh_leaves):
+            entry = by_path[path]
+            arr = np.load(os.path.join(d, entry["file"]))
+            if entry["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            if tuple(arr.shape) != tuple(tleaf.shape):
+                raise ValueError(
+                    f"checkpoint leaf {path} shape {arr.shape} != template {tleaf.shape}"
+                )
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))  # reshard onto new mesh
+            else:
+                out.append(jnp.asarray(arr))
+        return treedef.unflatten(out)
+
+    def restore_latest(self, template: Any, shardings: Any = None) -> Optional[Any]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, template, shardings)

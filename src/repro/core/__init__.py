@@ -1,0 +1,34 @@
+"""Axe core: the paper's layout algebra + the layout-driven
+distribution/codegen layer built on it."""
+from repro.core.za import ZA, za
+from repro.core.layout import (
+    It,
+    Iter,
+    Layout,
+    GroupedLayout,
+    GroupingError,
+    SliceError,
+    TileError,
+    canonicalize,
+    direct_sum,
+    from_shape,
+    group,
+    layouts_equal,
+    slice_layout,
+    strided,
+    tile,
+    tile_merged,
+    tile_of,
+)
+from repro.core.axes import MESH_AXES, MEM_AXIS, AxisKind, axis_kind, is_mesh_axis
+from repro.core.dtensor import DTensorSpec, layout_of_pspec, pspec_of_layout
+from repro.core.scopes import Scope, current_scope, scope
+
+__all__ = [
+    "ZA", "za", "It", "Iter", "Layout", "GroupedLayout", "GroupingError",
+    "SliceError", "TileError", "canonicalize", "direct_sum", "from_shape",
+    "group", "layouts_equal", "slice_layout", "strided", "tile",
+    "tile_merged", "tile_of", "MESH_AXES", "MEM_AXIS", "AxisKind",
+    "axis_kind", "is_mesh_axis", "DTensorSpec", "layout_of_pspec",
+    "pspec_of_layout", "Scope", "current_scope", "scope",
+]

@@ -1,0 +1,148 @@
+"""Axe-layout-driven Pallas BlockSpec derivation (paper §3.4 adapted to TPU).
+
+The paper dispatches a TMA copy by (1) slicing the layouts to the region,
+(2) finding a tiler T with ``L_S ≡ T ⊗ L_atom`` for the *compact*
+shared-memory atom, and (3) verifying the *global-memory* side is a
+strided box — recognized by the direct-sum operator (App. F), since
+global boxes may be strided while on-chip atoms must be compact.
+
+TPU analogue: a ``pl.pallas_call`` grid step copies an HBM tile into
+VMEM.  The HBM side of tile (i, j) must be a strided box (direct-sum
+decomposition of the dense layout), and the VMEM side must be a compact
+atom aligned to the VREG plane (sublane × lane = 8×128 for f32, 16×128
+bf16, 32×128 int8/fp8) and, for matmul operands, to the 128×128 MXU.
+
+``derive_blockspec`` performs exactly this derivation and returns the
+grid + BlockSpec; it *raises* when the Axe check fails, which is how
+kernel wrappers validate their tilings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.layout import (
+    Layout,
+    canonicalize,
+    direct_sum,
+    from_shape,
+    layouts_equal,
+    strided,
+)
+
+
+def vreg_atom(dtype) -> Tuple[int, int]:
+    """The TPU vector-register tile (sublane, lane) for a dtype."""
+    itemsize = jnp.dtype(dtype).itemsize
+    sublane = {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+    return (sublane, 128)
+
+
+MXU_TILE = (128, 128)
+
+
+class TilingError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class TileDerivation:
+    shape: Tuple[int, ...]
+    tile: Tuple[int, ...]
+    grid: Tuple[int, ...]
+    hbm_box_strides: Tuple[int, ...]   # strides of the per-cell HBM box
+    vreg_aligned: bool
+    mxu_aligned: bool
+
+
+def derive_tiling(shape: Sequence[int], tile: Sequence[int], dtype=jnp.float32) -> TileDerivation:
+    """Verify (via the Axe algebra) that ``tile`` induces a valid
+    grid decomposition of a dense row-major tensor of ``shape``.
+
+    Checks ``dense(shape) == Grid + Box`` (direct sum, App. F) where
+    Grid enumerates tile origins and Box is the strided HBM tile.
+    """
+    shape = tuple(int(s) for s in shape)
+    tile = tuple(int(t) for t in tile)
+    if len(shape) != len(tile):
+        raise TilingError(f"rank mismatch {shape} vs {tile}")
+    for s, t in zip(shape, tile):
+        if t <= 0 or s % t:
+            raise TilingError(f"tile {tile} does not divide shape {shape}")
+    grid = tuple(s // t for s, t in zip(shape, tile))
+
+    # row-major strides of the full tensor
+    full_strides = []
+    acc = 1
+    for s in reversed(shape):
+        full_strides.append(acc)
+        acc *= s
+    full_strides.reverse()
+
+    grid_strides = tuple(t * st for t, st in zip(tile, full_strides))
+    A = strided(grid, grid_strides)           # tile origins
+    B = strided(tile, tuple(full_strides))    # strided HBM box
+    T, _ = direct_sum(A, grid, B, tile)
+    if not layouts_equal(T, from_shape(shape)):
+        raise TilingError(f"direct-sum decomposition failed for {shape} / {tile}")
+
+    sub, lane = vreg_atom(dtype)
+    vreg_ok = len(tile) >= 2 and tile[-1] % lane == 0 and tile[-2] % sub == 0
+    mxu_ok = len(tile) >= 2 and tile[-1] % MXU_TILE[1] == 0 and tile[-2] % MXU_TILE[0] == 0
+    return TileDerivation(shape, tile, grid, tuple(full_strides), vreg_ok, mxu_ok)
+
+
+def derive_blockspec(
+    shape: Sequence[int],
+    tile: Sequence[int],
+    dtype=jnp.float32,
+    *,
+    index_map=None,
+    require_vreg: bool = False,
+):
+    """Return ``(grid, pl.BlockSpec)`` for a dense tensor, Axe-verified."""
+    from jax.experimental import pallas as pl  # deferred: keep core import-light
+
+    d = derive_tiling(shape, tile, dtype)
+    if require_vreg and not d.vreg_aligned:
+        raise TilingError(
+            f"tile {tile} not VREG-aligned for {jnp.dtype(dtype).name} "
+            f"(atom {vreg_atom(dtype)})"
+        )
+    if index_map is None:
+        rank = len(d.grid)
+        index_map = lambda *ids: ids[:rank]
+    return d.grid, pl.BlockSpec(d.tile, index_map)
+
+
+def pick_tile(
+    shape: Sequence[int],
+    dtype=jnp.float32,
+    *,
+    vmem_budget_bytes: int = 4 * 1024 * 1024,
+    prefer: Sequence[int] = (512, 256, 128),
+    mxu: bool = True,
+) -> Tuple[int, ...]:
+    """Choose the largest aligned tile for the trailing 2 dims that fits
+    the VMEM budget; leading dims get tile size 1 (grid-iterated)."""
+    shape = tuple(int(s) for s in shape)
+    itemsize = jnp.dtype(dtype).itemsize
+    sub, lane = vreg_atom(dtype)
+    min_r, min_c = (MXU_TILE if mxu else (sub, lane))
+
+    def best(dim: int, minimum: int) -> int:
+        for cand in prefer:
+            c = min(cand, dim)
+            if c % minimum == 0 and dim % c == 0:
+                return c
+        return math.gcd(dim, minimum) if dim % minimum else minimum
+
+    rows = best(shape[-2], min_r) if len(shape) >= 2 else 1
+    cols = best(shape[-1], min_c)
+    while rows * cols * itemsize > vmem_budget_bytes and rows > min_r:
+        rows //= 2
+    lead = (1,) * (len(shape) - 2) if len(shape) >= 2 else ()
+    return lead + ((rows,) if len(shape) >= 2 else ()) + (cols,)

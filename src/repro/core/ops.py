@@ -1,0 +1,166 @@
+"""Multi-granularity operators with layout-driven schedule dispatch
+(paper §3.2 "Operators and schedules").
+
+Each operator has several *schedules*; the one chosen depends on the
+current execution scope and the Axe layouts / shapes of its operands —
+the JAX/TPU analogue of the paper's copy dispatching to LDG/TMA/NVSHMEM:
+
+``matmul``:
+  * BLOCK scope              → ``jnp.dot`` on VMEM tiles (MXU)
+  * DEVICE scope, aligned    → Pallas tiled kernel (Axe-derived BlockSpec)
+  * DEVICE scope, unaligned  → XLA dot
+  * MESH scope, K sharded    → collective matmul (psum_scatter), optionally
+                               the overlapped ring schedule (§4.2 analogue)
+
+``copy``:
+  * same placement           → identity / with_sharding_constraint
+  * placement differs        → collective plan inferred from the layout
+                               pair (core.collective), applied in shard_map
+
+``reduce_scatter`` / ``all_reduce``: Fig. 8 semantics with DTensorSpec
+signatures checked at trace time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import collective as coll
+from repro.core.blockspec import TilingError, derive_tiling
+from repro.core.dtensor import DTensorSpec
+from repro.core.scopes import Scope, current_scope
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    prefer_kernel: bool = True,
+    out_dtype=None,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jax.Array:
+    """Dispatch a 2-D matmul to the best schedule for the current scope."""
+    scope = current_scope()
+    out_dtype = out_dtype or a.dtype
+    if scope == Scope.BLOCK:
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+    if scope in (Scope.DEVICE, Scope.GRID) and prefer_kernel and a.ndim == b.ndim == 2:
+        try:
+            derive_tiling((a.shape[0], b.shape[1]), (min(block_m, a.shape[0]), min(block_n, b.shape[1])), a.dtype)
+            from repro.kernels import ops as kops
+
+            return kops.matmul(a, b, block_m=block_m, block_n=block_n, block_k=block_k).astype(out_dtype)
+        except (TilingError, ImportError):
+            pass
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def collective_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    axis_name: str,
+    mode: str = "psum_scatter",
+    overlap: bool = True,
+) -> jax.Array:
+    """K-sharded GEMM + reduce-scatter inside shard_map (paper §4.2).
+
+    ``a``: [M, K_local], ``b``: [K_local, N]; K is sharded over
+    ``axis_name`` (P devices). Output: rows scattered over the axis,
+    [M / P, N] per device.
+
+    overlap=False — baseline schedule: full local GEMM then psum_scatter
+    (the cuBLAS+NCCL analogue).
+    overlap=True  — ring schedule: M is chunked into P pieces; each step
+    computes one chunk's partial GEMM and accumulates into a rotating
+    buffer (ppermute), so ICI transfer of chunk t overlaps the MXU work
+    of chunk t+1 — the paper's fused GEMM+RS kernel, on ICI.
+    """
+    p = jax.lax.axis_size(axis_name)
+    if not overlap or p == 1:
+        partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        return jax.lax.psum_scatter(
+            partial, axis_name, scatter_dimension=0, tiled=True
+        ).astype(a.dtype)
+
+    m = a.shape[0]
+    assert m % p == 0, f"M={m} must divide over {axis_name}={p}"
+    chunk = m // p
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def body(t, acc):
+        # the accumulator on device i at step t is destined for chunk
+        # d = (i - t - 1) mod p (it still has to traverse the remaining
+        # devices and land on device d with no permute after the last add)
+        src = (idx + p - 1 - t) % p
+        part = jnp.dot(
+            jax.lax.dynamic_slice_in_dim(a, src * chunk, chunk, axis=0),
+            b,
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc + part
+        acc = jax.lax.cond(
+            t < p - 1,
+            lambda x: jax.lax.ppermute(x, axis_name, perm),
+            lambda x: x,
+            acc,
+        )
+        return acc
+
+    acc = jnp.zeros((chunk, b.shape[1]), jnp.float32)
+    acc = jax.lax.fori_loop(0, p, body, acc, unroll=True)
+    return acc.astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# copy / redistribute
+# ---------------------------------------------------------------------------
+
+
+def copy(
+    x: jax.Array,
+    src: DTensorSpec,
+    dst: DTensorSpec,
+    mesh_shape: Mapping[str, int],
+    *,
+    partial_axes: Sequence[str] = (),
+) -> jax.Array:
+    """Layout-to-layout copy inside shard_map: infer + apply collectives."""
+    src.check_consistent(mesh_shape)
+    dst.check_consistent(mesh_shape)
+    plan = coll.infer_redistribution(src, dst, mesh_shape, partial_axes=partial_axes)
+    return coll.apply_plan(x, plan)
+
+
+def constrain(x: jax.Array, spec: DTensorSpec, mesh: Mesh) -> jax.Array:
+    """MESH-scope copy schedule: annotate; GSPMD inserts the collectives."""
+    return jax.lax.with_sharding_constraint(x, spec.sharding(mesh))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8-style signatures
+# ---------------------------------------------------------------------------
+
+
+def reduce_scatter(x: jax.Array, *, axis_name: str, dim: int = 0) -> jax.Array:
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)
+
+
+def all_reduce(x: jax.Array, *, axis_name: str) -> jax.Array:
+    return jax.lax.psum(x, axis_name)
+
+
+def all_gather(x: jax.Array, *, axis_name: str, dim: int = 0) -> jax.Array:
+    return jax.lax.all_gather(x, axis_name, axis=dim, tiled=True)

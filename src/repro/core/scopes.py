@@ -1,0 +1,69 @@
+"""Execution scopes (paper §3.2): nested granularities an operator can
+be issued at. On TPU/JAX the hierarchy is
+
+    MESH   — whole-mesh jitted program (pjit / GSPMD)
+    DEVICE — per-device body inside shard_map
+    GRID   — a Pallas grid program (one (i, j, ...) step)
+    BLOCK  — inside a Pallas kernel body (VMEM-resident tiles)
+
+``ops`` dispatches schedules on ``current_scope()`` — e.g. a ``matmul``
+at MESH scope becomes a sharded einsum with collectives; at DEVICE scope
+a Pallas kernel launch; at BLOCK scope a jnp.dot on VMEM refs.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import threading
+from typing import Iterator, List, Optional
+
+
+class Scope(enum.Enum):
+    MESH = "mesh"
+    DEVICE = "device"
+    GRID = "grid"
+    BLOCK = "block"
+
+
+_ORDER = [Scope.MESH, Scope.DEVICE, Scope.GRID, Scope.BLOCK]
+
+_state = threading.local()
+
+
+def _stack() -> List[Scope]:
+    if not hasattr(_state, "stack"):
+        _state.stack = [Scope.MESH]
+    return _state.stack
+
+
+def current_scope() -> Scope:
+    return _stack()[-1]
+
+
+@contextlib.contextmanager
+def scope(s: Scope | str) -> Iterator[Scope]:
+    s = Scope(s) if isinstance(s, str) else s
+    cur = current_scope()
+    if _ORDER.index(s) < _ORDER.index(cur):
+        raise ValueError(f"cannot open {s} inside finer scope {cur}")
+    _stack().append(s)
+    try:
+        yield s
+    finally:
+        _stack().pop()
+
+
+def mesh_scope():
+    return scope(Scope.MESH)
+
+
+def device_scope():
+    return scope(Scope.DEVICE)
+
+
+def grid_scope():
+    return scope(Scope.GRID)
+
+
+def block_scope():
+    return scope(Scope.BLOCK)

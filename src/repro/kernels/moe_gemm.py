@@ -1,0 +1,75 @@
+"""Grouped (per-expert) GEMM for fused MoE layers (paper §4.1).
+
+With capacity-based routing the dispatched activations are a dense
+[E, C, d] tensor (E experts × capacity C), so the expert FFN is a
+batched GEMM with per-expert weights [E, d, f]. The kernel tiles
+(C, f, d) per expert on the MXU; the expert dim is the outermost
+"parallel" grid axis — the analogue of the paper's group-GEMM tiles,
+which its finer-grained pipeline then chains into the second GEMM.
+
+The second group GEMM (f -> d) reuses the same kernel with swapped
+weight dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.blockspec import derive_tiling
+
+
+def _moe_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _done():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gemm_pallas(
+    x: jax.Array,  # [E, C, d]
+    w: jax.Array,  # [E, d, f]
+    *,
+    block_c: int = 128,
+    block_f: int = 256,
+    block_d: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    e, c, d = x.shape
+    e2, d2, f = w.shape
+    assert e == e2 and d == d2, (x.shape, w.shape)
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+    out_dtype = out_dtype or x.dtype
+
+    derive_tiling((c, d), (block_c, block_d), x.dtype)
+    derive_tiling((d, f), (block_d, block_f), w.dtype)
+    k_steps = d // block_d
+
+    return pl.pallas_call(
+        functools.partial(_moe_kernel, k_steps=k_steps),
+        grid=(e, c // block_c, f // block_f, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda ei, ci, fi, ki: (ei, ci, ki)),
+            pl.BlockSpec((1, block_d, block_f), lambda ei, ci, fi, ki: (ei, ki, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f), lambda ei, ci, fi, ki: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,52 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode — the kernel
+body runs in Python per grid step, validating the exact TPU program. On
+a TPU backend the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import moe_gemm as _mg
+from repro.kernels import rmsnorm as _rn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(a, b, *, block_m: int = 256, block_n: int = 256, block_k: int = 512):
+    return _mm.matmul_pallas(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k, interpret=_interpret()
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "block_q", "block_kv")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = False, window=None, scale=None,
+    block_q: int = 128, block_kv: int = 128,
+):
+    return _fa.flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv, interpret=_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def moe_gemm(x, w, *, block_c: int = 128, block_f: int = 256, block_d: int = 512):
+    return _mg.moe_gemm_pallas(
+        x, w, block_c=block_c, block_f=block_f, block_d=block_d, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
+    return _rn.rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows, interpret=_interpret())

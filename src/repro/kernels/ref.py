@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against
+these references (kernels run in interpret mode on CPU; on TPU they
+compile to Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """f32-accumulated GEMM."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, H, Skv, D]
+    v: jax.Array,  # [B, H, Skv, D]
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Multi-head attention oracle with optional causal / sliding-window
+    masking (paper §4.3 MHA workload; Gemma-style local attention)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    sq, skv = q.shape[-2], k.shape[-2]
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned queries
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped (per-expert) GEMM oracle: x [E, C, d] @ w [E, d, f]."""
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell
+with ShapeDtypeStruct inputs (no allocation), record memory/cost
+analysis + collective bytes for the roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --out results.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import SHAPES, build_model, shape_applicable
+from repro.optim.adamw import AdamW
+from repro.train import sharding as rules
+from repro.train.train_loop import TrainState, make_train_step
+
+
+def _tree_specs(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    fsdp: bool = True,
+    zero1: bool = True,
+    microbatches: int = 1,
+    compress_pod_grads: bool = False,
+    remat: bool = True,
+    remat_policy: str = "full",
+    dump_hlo: str = None,
+):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    api = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_shape = rules.mesh_shape_of(mesh)
+    n_chips = 512 if multi_pod else 256
+
+    from repro.train import act_sharding
+    from repro.models import transformer as _tf
+
+    act_sharding.set_mesh(mesh)  # activation constraints (Axe logical dims)
+    _tf.set_remat_policy(remat_policy if remat else "none")
+    # per-arch layout policy: VLM keeps a replicated-seq residual stream
+    # (SP + the patch concat measured net-negative: EXPERIMENTS §Perf)
+    act_sharding.set_logical_overrides(
+        {"seq_res": (None,)} if cfg.family == "vlm" else None
+    )
+
+    t0 = time.time()
+    params_s = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_pspecs = rules.param_pspecs(params_s, mesh_shape, fsdp=fsdp)
+    p_sh = rules.shardings_of(p_pspecs, mesh)
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "kind": shape.kind, "batch": shape.batch, "seq": shape.seq,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "options": {"fsdp": fsdp, "zero1": zero1, "microbatches": microbatches,
+                    "compress_pod_grads": compress_pod_grads, "remat": remat},
+    }
+
+    if shape.kind == "train":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.optim.adamw import AdamWState
+
+        opt = AdamW(learning_rate=1e-4)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        o_pspecs = rules.opt_pspecs(params_s, p_pspecs, mesh_shape, zero1=zero1)
+        o_sh = rules.shardings_of(o_pspecs, mesh)
+        scalar_sh = NamedSharding(mesh, P())
+        state_s = TrainState(params_s, opt_s, jax.ShapeDtypeStruct((), jnp.int32))
+        state_sh = TrainState(p_sh, AdamWState(mu=o_sh, nu=o_sh, count=scalar_sh), scalar_sh)
+
+        batch_s = api.train_batch_specs(shape)
+        b_pspecs = rules.batch_pspecs(batch_s, mesh_shape)
+        b_sh = {k: jax.sharding.NamedSharding(mesh, v) for k, v in b_pspecs.items()}
+
+        step = make_train_step(
+            api.loss_fn, opt, microbatches=microbatches,
+            compress_pod_grads=compress_pod_grads,
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(state_sh, b_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            lowered = fn.lower(state_s, batch_s)
+    elif shape.kind == "prefill":
+        cache_s = jax.eval_shape(lambda: api.cache_init(shape.batch, shape.seq))
+        c_pspecs = rules.cache_pspecs(cache_s, mesh_shape)
+        c_sh = rules.shardings_of(c_pspecs, mesh)
+        batch_s = api.train_batch_specs(shape)
+        del batch_s["labels"]
+        b_pspecs = rules.batch_pspecs(batch_s, mesh_shape)
+        b_sh = {k: jax.sharding.NamedSharding(mesh, v) for k, v in b_pspecs.items()}
+        fn = jax.jit(
+            api.prefill,
+            in_shardings=(p_sh, b_sh, c_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(2,),
+        )
+        with mesh:
+            lowered = fn.lower(params_s, batch_s, cache_s)
+    else:  # decode
+        cache_s = jax.eval_shape(lambda: api.cache_init(shape.batch, shape.seq))
+        c_pspecs = rules.cache_pspecs(cache_s, mesh_shape)
+        c_sh = rules.shardings_of(c_pspecs, mesh)
+        tok_s = api.decode_token_specs(shape)["tokens"]
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(
+            api.decode_step,
+            in_shardings=(p_sh, None, c_sh, None),
+            out_shardings=(None, c_sh),
+            donate_argnums=(2,),
+        )
+        with mesh:
+            lowered = fn.lower(params_s, tok_s, cache_s, pos_s)
+
+    record["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 2)
+
+    # --- analyses ---
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not support it
+        record["memory"] = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float)) and (
+                              k in ("flops", "bytes accessed", "optimal_seconds")
+                              or k.startswith("bytes accessed"))}
+    except Exception as e:
+        record["cost"] = {"error": str(e)}
+        cost = {}
+
+    hlo = compiled.as_text()
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(hlo)
+    mf = rl.model_flops(cfg, shape.kind, shape.batch, shape.seq)
+    try:
+        terms = rl.derive_terms(
+            hlo_text=hlo, n_chips=n_chips,
+            model_flops_total=mf, pod_axis=multi_pod,
+        )
+        record["roofline"] = terms.to_dict()
+    except Exception as e:
+        record["roofline"] = {"error": str(e)}
+    record["status"] = "ok"
+    act_sharding.set_mesh(None)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--dump-hlo", default=None, help="write compiled HLO text here")
+    ap.add_argument("--remat-policy", default="full", choices=["full", "dots", "none"])
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mesh in ("single", "multi"):
+                    cells.append((arch, shape, mesh))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.mesh))
+
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch, shape, mesh in cells:
+        try:
+            rec = lower_cell(
+                arch, shape, mesh == "multi",
+                fsdp=not args.no_fsdp, zero1=not args.no_zero1,
+                microbatches=args.microbatches,
+                compress_pod_grads=args.compress_pod_grads,
+                remat=not args.no_remat,
+                remat_policy=args.remat_policy,
+                dump_hlo=args.dump_hlo,
+            )
+        except Exception as e:
+            failures += 1
+            rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        line = json.dumps(rec)
+        print(line if rec["status"] != "ok" else
+              f"OK {arch} {shape} {mesh} lower={rec.get('lower_s')}s "
+              f"compile={rec.get('compile_s')}s "
+              f"bottleneck={rec.get('roofline', {}).get('bottleneck')}")
+        if rec["status"] == "ok":
+            mem = rec.get("memory", {})
+            if mem.get("peak_bytes"):
+                print(f"   memory: peak={mem['peak_bytes']/2**30:.2f} GiB/device "
+                      f"args={mem['argument_bytes']/2**30:.2f} GiB")
+            cost = rec.get("cost", {})
+            if "flops" in cost:
+                print(f"   cost: flops/dev={cost['flops']:.3e}")
+        if out_f:
+            out_f.write(line + "\n")
+            out_f.flush()
+    if out_f:
+        out_f.close()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction (TPU v5e pods; 256 chips/pod).
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state — required by the dry-run, which must
+set XLA_FLAGS before the first device query.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model: int = 1) -> Mesh:
+    """Whatever this host has (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return make_mesh((n // model, model), ("data", "model"))
+
+
+# v5e hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link
+ICI_LINKS = 4                 # 2D torus: 4 links/chip (v5e)
+DCI_BW = 25e9                 # B/s cross-pod (data-center interconnect), est.
+HBM_BYTES = 16 * 1024**3      # 16 GiB

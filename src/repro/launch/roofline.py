@@ -1,0 +1,142 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = Σ_op operand_bytes / effective link bw (ICI; pod axis → DCI)
+
+``cost_analysis`` runs on the SPMD-partitioned per-device module, so its
+flops/bytes are already per-chip. Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO text and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch import mesh as meshmod
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[128,4096]{1,0}'-style shape strings."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_of_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum *output* shape bytes of every collective op, by op kind.
+
+    HLO line form:  %name = bf16[...] all-gather(%operand), ...
+    Output bytes ≈ communicated payload for gather-like ops; for
+    all-reduce the payload is the (same-sized) operand. Lines inside
+    fusions/computation bodies are included (they appear once each).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[^=(]+?)\s*([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        out[op] += _shape_bytes(m.group(1))
+        counts[op] += 1
+    return {"bytes": out, "counts": counts}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, int]
+    model_flops: float
+    useful_ratio: float           # MODEL_FLOPS / (HLO_FLOPs × chips)
+    bottleneck: str
+    step_time_s: float            # max of the three terms
+    roofline_fraction: float      # dominant-term-bound "usefulness": model-flops time / step time
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def derive_terms(
+    *,
+    hlo_text: str,
+    n_chips: int,
+    model_flops_total: float,
+    pod_axis: bool = False,
+) -> RooflineTerms:
+    """Three-term roofline from the optimized per-device HLO, using the
+    loop-aware analyzer (XLA's cost_analysis counts scan bodies once)."""
+    from repro.launch import hlo_cost
+
+    c = hlo_cost.analyze(hlo_text, total_devices=n_chips)
+
+    ici_bw = meshmod.ICI_BW_PER_LINK * meshmod.ICI_LINKS
+    compute_s = c.flops / meshmod.PEAK_FLOPS_BF16
+    memory_s = c.bytes / meshmod.HBM_BW
+    collective_s = c.comm_bytes / ici_bw
+
+    ideal_s = model_flops_total / (n_chips * meshmod.PEAK_FLOPS_BF16)
+    step_s = max(compute_s, memory_s, collective_s)
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        flops_per_device=c.flops,
+        bytes_per_device=c.bytes,
+        collective_bytes=c.comm_bytes,
+        collective_breakdown={k: int(v) for k, v in c.comm_by_op.items()},
+        model_flops=model_flops_total,
+        useful_ratio=(model_flops_total / (c.flops * n_chips)) if c.flops else 0.0,
+        bottleneck=bottleneck,
+        step_time_s=step_s,
+        roofline_fraction=(ideal_s / step_s) if step_s else 0.0,
+    )
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (fwd)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * batch * seq
+    if kind == "prefill":
+        return 2.0 * n_active * batch * seq
+    return 2.0 * n_active * batch  # decode: one token per slot

@@ -1,0 +1,102 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch qwen3-4b --steps 100 \
+        --mesh-data 16 --mesh-model 16 [--multi-pod] [--smoke]
+
+On real TPU pods this is launched once per host (jax.distributed
+initializes from the TPU environment); on this CPU container use
+``--smoke`` (reduced config, local mesh) to run end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model_zoo import build_model
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine
+from repro.train import act_sharding, sharding as rules
+from repro.train.train_loop import Trainer, init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--mesh-data", type=int, default=0, help="0 = all local devices")
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e9:.2f}B "
+          f"(active {cfg.active_param_count()/1e9:.2f}B)")
+
+    n_dev = len(jax.devices())
+    data_deg = args.mesh_data or (n_dev // args.mesh_model)
+    mesh = jax.make_mesh(
+        (data_deg, args.mesh_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    mesh_shape = rules.mesh_shape_of(mesh)
+    act_sharding.set_mesh(mesh if n_dev > 1 else None)
+
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=warmup_cosine(args.lr, 20, args.steps))
+    state = init_state(params, opt)
+
+    p_pspecs = rules.param_pspecs(params, mesh_shape, fsdp=n_dev > 1)
+    state_sh = None
+    if n_dev > 1:
+        from repro.optim.adamw import AdamWState
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        o_pspecs = rules.opt_pspecs(params, p_pspecs, mesh_shape)
+        p_sh = rules.shardings_of(p_pspecs, mesh)
+        o_sh = rules.shardings_of(o_pspecs, mesh)
+        scalar = NamedSharding(mesh, P())
+        state_sh = type(state)(p_sh, AdamWState(o_sh, o_sh, scalar), scalar)
+        state = jax.device_put(state, state_sh)
+
+    data = SyntheticLMData(
+        cfg.vocab_size, args.seq, args.global_batch,
+        frontend=cfg.frontend, num_patches=cfg.num_patches,
+        encoder_seq=cfg.encoder_seq, d_model=cfg.d_model, dtype=cfg.dtype,
+    )
+    step_fn = make_train_step(
+        api.loss_fn, opt, microbatches=args.microbatches,
+        compress_pod_grads=args.compress_pod_grads,
+    )
+    jit_kwargs = {}
+    if state_sh is not None:
+        jit_kwargs = dict(in_shardings=(state_sh, None), out_shardings=(state_sh, None))
+    trainer = Trainer(
+        train_step=jax.jit(step_fn, donate_argnums=(0,), **jit_kwargs),
+        data=data,
+        checkpoint_manager=CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None,
+        checkpoint_every=args.ckpt_every,
+        step_deadline_s=600.0,
+        on_straggler=lambda s, dt: print(f"[watchdog] step {s}: {dt:.1f}s"),
+    )
+    state = trainer.restore_or_init(state)
+    with mesh:
+        state, hist = trainer.run(state, args.steps)
+    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

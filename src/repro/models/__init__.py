@@ -1,0 +1,1 @@
+"""Model substrate: attention, MoE, SSD, transformer assemblies."""

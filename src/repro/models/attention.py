@@ -1,0 +1,239 @@
+"""GQA attention: training (full or KV-blocked online-softmax), prefill
+and single-token decode against a static KV cache.
+
+The XLA paths here mirror the Pallas flash kernel exactly (same online
+softmax) so the kernel can be swapped in at DEVICE scope on TPU; the
+blocked path keeps peak memory O(S·chunk) for 32k+ sequences.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, rmsnorm, rope
+from repro.train.act_sharding import constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), d, dtype),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, cfg, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq_q", "heads", None)
+    k = constrain(k, "batch", "seq", "kv", None)
+    v = constrain(v, "batch", "seq", "kv", None)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def _gqa_full(q, k, v, cfg, *, causal: bool, window: Optional[int]):
+    """q [B,Sq,H,hd], k/v [B,Skv,KV,hd] -> [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = _mask(q_pos, k_pos, causal, window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _gqa_blocked(q, k, v, cfg, *, causal: bool, window: Optional[int], chunk: int = 1024):
+    """Online-softmax scan over KV chunks — O(Sq·chunk) live logits."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    n_chunks = skv // chunk
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd)
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = xs
+        # NOTE(perf §A-iter2, refuted): storing s/p in bf16 *increased*
+        # the estimator's memory term 7.9s -> 10.2s — the dtype converts
+        # materialize as separate HLO passes instead of fusing. Kept f32.
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kj.astype(jnp.float32)) * scale
+        k_pos = (j * chunk + jnp.arange(chunk))[None, :]
+        mask = _mask(q_pos, k_pos, causal, window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32))
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)),
+    )
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attn_apply(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    positions: Optional[jax.Array] = None,
+    blocked_threshold: int = 8192,
+) -> jax.Array:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if s > blocked_threshold:
+        out = _gqa_blocked(q, k, v, cfg, causal=causal, window=window)
+    else:
+        out = _gqa_full(q, k, v, cfg, causal=causal, window=window)
+    out = constrain(out, "batch", "seq_q", "heads", None)
+    return constrain(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), "batch", "seq_res", None)
+
+
+# ---------------------------------------------------------------------------
+# KV cache: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_init(cfg, batch: int, max_seq: int, dtype, *, window: Optional[int] = None) -> Params:
+    """Sliding-window layers get a ring buffer of size `window` (Gemma-3
+    local layers at 500k ctx: 1024-slot ring instead of a 500k cache)."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    size = min(window, max_seq) if window else max_seq
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+    }
+
+
+def _ring_store(cache_arr: jax.Array, new: jax.Array) -> jax.Array:
+    """Store a prompt's trailing keys into a ring buffer so that token
+    at absolute position p sits at slot p % W."""
+    w = cache_arr.shape[1]
+    s = new.shape[1]
+    if s < w:
+        return jax.lax.dynamic_update_slice_in_dim(cache_arr, new, 0, axis=1)
+    tail = new[:, s - w :]
+    return jnp.roll(tail, s % w, axis=1)
+
+
+def attn_prefill(p, x, cfg, cache, *, window=None, positions=None):
+    """Run causal attention over the prompt and fill the cache."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = (_gqa_blocked if s > 8192 else _gqa_full)(
+        q, k, v, cfg, causal=True, window=window
+    )
+    cache = {
+        "k": _ring_store(cache["k"], k),
+        "v": _ring_store(cache["v"], v),
+    }
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def attn_decode(
+    p: Params,
+    x: jax.Array,          # [B, 1, d]
+    cfg,
+    cache: Params,          # k/v [B, W, KV, hd]; W = max_seq or ring window
+    pos: jax.Array,         # [] current position (tokens so far)
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Params]:
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    s_max = cache["k"].shape[1]
+    is_ring = window is not None  # windowed layers always use ring caches
+    write = pos % s_max if is_ring else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, write, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, write, axis=1)
+
+    h, hd = cfg.num_heads, cfg.head_dim
+    kvh = cfg.num_kv_heads
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(s_max)[None, None, None, :]
+    if is_ring:
+        # ring holds exactly the last `s_max` positions; slots beyond the
+        # write head are only invalid before the first wrap.
+        valid = (k_pos <= pos) | (pos + 1 >= s_max)
+    else:
+        valid = k_pos <= pos
+        if window is not None:
+            valid = valid & (k_pos > pos - window)
+    logits = jnp.where(valid, logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": cache_k, "v": cache_v}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_init(key, cfg, dtype) -> Params:
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attn_apply(p: Params, x: jax.Array, enc: jax.Array, cfg) -> jax.Array:
+    """x [B,Sq,d] attends to encoder output enc [B,Se,d] (no mask/rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    out = _gqa_full(q, k, v, cfg, causal=False, window=None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

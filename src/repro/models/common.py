@@ -1,0 +1,96 @@
+"""Shared model building blocks (pure functional JAX; params are pytrees)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_dim: int, dtype) -> jax.Array:
+    scale = in_dim ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL, computed in f32. logits [..., V], labels [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)).astype(dtype)
+
+
+def stack_layer_params(init_one, key, n_layers: int):
+    """Init n_layers layer param trees stacked on a leading axis (for scan)."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def gelu_mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    from repro.train.act_sharding import constrain
+
+    h = jax.nn.gelu(x @ p["wi"])
+    h = constrain(h, "batch", "seq", "ff")
+    return constrain(h @ p["wo"], "batch", "seq_res", None)
+
+
+def swiglu_apply(p: Params, x: jax.Array) -> jax.Array:
+    from repro.train.act_sharding import constrain
+
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    h = constrain(h, "batch", "seq", "ff")
+    return constrain(h @ p["wo"], "batch", "seq_res", None)
+
+
+def mlp_init(key, cfg, dtype) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        kg, ku, ko = jax.random.split(key, 3)
+        return {
+            "wg": dense_init(kg, (d, ff), d, dtype),
+            "wu": dense_init(ku, (d, ff), d, dtype),
+            "wo": dense_init(ko, (ff, d), ff, dtype),
+        }
+    ki, ko = jax.random.split(key)
+    return {
+        "wi": dense_init(ki, (d, ff), d, dtype),
+        "wo": dense_init(ko, (ff, d), ff, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return swiglu_apply(p, x)
+    return gelu_mlp_apply(p, x)

@@ -1,0 +1,181 @@
+"""Encoder-decoder (Whisper-style) backbone. The conv audio frontend is
+a STUB per the assignment: ``input_specs`` supplies precomputed frame
+embeddings [B, S_enc, d]; everything downstream (encoder stack, decoder
+with cross-attention, serving caches) is real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.train.act_sharding import constrain
+from repro.models.common import (
+    Params,
+    cross_entropy_loss,
+    dense_init,
+    dtype_of,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+)
+
+
+def _enc_layer_init(key, cfg, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(k2, cfg, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": attn.attn_init(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": attn.cross_attn_init(k2, cfg, dtype),
+        "norm3": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(k3, cfg, dtype),
+    }
+
+
+def encdec_init(cfg, key) -> Params:
+    dtype = dtype_of(cfg)
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": embed_init(kt, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab_size), cfg.d_model, dtype),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg, *, remat: bool = True) -> jax.Array:
+    def body(p, x):
+        h = rmsnorm(x, p["norm1"])
+        x = x + attn.attn_apply(p["attn"], h, cfg, causal=False)
+        h = rmsnorm(x, p["norm2"])
+        return x + mlp_apply(p["mlp"], h, cfg)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, p):
+        return body(p, x), None
+
+    x, _ = jax.lax.scan(scan_fn, constrain(frames, "batch", "seq_res", None), params["enc_blocks"])
+    return rmsnorm(x, params["enc_norm"])
+
+
+def decode_train(params: Params, tokens: jax.Array, enc: jax.Array, cfg, *, remat: bool = True) -> jax.Array:
+    x = params["embed"][tokens]
+
+    def body(p, x):
+        h = rmsnorm(x, p["norm1"])
+        x = x + attn.attn_apply(p["self_attn"], h, cfg, causal=True)
+        h = rmsnorm(x, p["norm2"])
+        x = x + attn.cross_attn_apply(p["cross_attn"], h, enc, cfg)
+        h = rmsnorm(x, p["norm3"])
+        return x + mlp_apply(p["mlp"], h, cfg)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, p):
+        return body(p, x), None
+
+    x, _ = jax.lax.scan(scan_fn, constrain(x, "batch", "seq_res", None), params["dec_blocks"])
+    x = rmsnorm(x, params["final_norm"])
+    return constrain(x @ params["lm_head"], "batch", "seq", "vocab")
+
+
+def encdec_loss(params: Params, batch: Dict[str, jax.Array], cfg) -> jax.Array:
+    enc = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, batch["tokens"], enc, cfg)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def cache_init(cfg, batch: int, max_seq: int) -> Params:
+    dtype = dtype_of(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def one(_):
+        return {
+            "self": attn.cache_init(cfg, batch, max_seq, dtype),
+            "ck": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dtype),
+            "cv": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dtype),
+        }
+
+    return jax.vmap(one)(jnp.arange(cfg.num_layers))
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cache: Params, cfg):
+    """Encode frames, prime cross K/V + decoder self cache on the prompt."""
+    enc = encode(params, batch["frames"], cfg, remat=False)
+    x = params["embed"][batch["tokens"]]
+
+    def scan_fn(x, pc):
+        p, c = pc
+        h = rmsnorm(x, p["norm1"])
+        y, self_c = attn.attn_prefill(p["self_attn"], h, cfg, c["self"])
+        x = x + y
+        h = rmsnorm(x, p["norm2"])
+        ck = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wv"])
+        x = x + attn.cross_attn_apply(p["cross_attn"], h, enc, cfg)
+        h = rmsnorm(x, p["norm3"])
+        x = x + mlp_apply(p["mlp"], h, cfg)
+        return x, {"self": self_c, "ck": ck.astype(c["ck"].dtype), "cv": cv.astype(c["cv"].dtype)}
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["dec_blocks"], cache))
+    x = rmsnorm(x[:, -1:], params["final_norm"])
+    return x @ params["lm_head"], new_cache
+
+
+def _cross_decode(p: Params, x: jax.Array, ck: jax.Array, cv: jax.Array, cfg) -> jax.Array:
+    b = x.shape[0]
+    h, hd, kvh = cfg.num_heads, cfg.head_dim, cfg.num_kv_heads
+    g = h // kvh
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).reshape(b, kvh, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), ck.astype(jnp.float32)) * scale
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: Params, pos: jax.Array, cfg):
+    x = params["embed"][tokens]
+
+    def scan_fn(x, pc):
+        p, c = pc
+        h = rmsnorm(x, p["norm1"])
+        y, self_c = attn.attn_decode(p["self_attn"], h, cfg, c["self"], pos)
+        x = x + y
+        h = rmsnorm(x, p["norm2"])
+        x = x + _cross_decode(p["cross_attn"], h, c["ck"], c["cv"], cfg)
+        h = rmsnorm(x, p["norm3"])
+        x = x + mlp_apply(p["mlp"], h, cfg)
+        return x, {"self": self_c, "ck": c["ck"], "cv": c["cv"]}
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["dec_blocks"], cache))
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"], new_cache

@@ -1,0 +1,237 @@
+"""Mixture-of-Experts layer (paper §4.1 workload family).
+
+Sort-based capacity dispatch (megablocks/maxtext-style, TPU-friendly):
+top-k routing, argsort token→expert assignments, scatter into a dense
+[E, C, d] buffer (tokens over capacity are dropped), two grouped GEMMs
+(SwiGLU), gather + gate-weighted combine. The [E, C, d] buffer is what
+the Pallas ``moe_gemm`` kernel consumes; under SPMD the E dim is
+sharded over the ``model`` axis (expert parallelism), so the scatter
+lowers to an all-to-all — exactly the collective the Axe layout pair
+(tokens: batch-sharded → buffer: expert-sharded) infers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+from repro.train.act_sharding import constrain
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "wg": dense_init(ks[1], (e, d, ff), d, dtype),
+        "wu": dense_init(ks[2], (e, d, ff), d, dtype),
+        "wo": dense_init(ks[3], (e, ff, d), ff, dtype),
+    }
+
+
+def capacity(tokens: int, cfg) -> int:
+    """Per-expert capacity, rounded up to a VREG-sublane multiple."""
+    c = int(tokens * cfg.experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _local_dispatch(xf: jax.Array, router: jax.Array, cfg):
+    """Route + sort + scatter local tokens into a dense [E, C, d] buffer.
+
+    Returns (buf, combine_meta) where combine_meta carries what the
+    gather/combine needs. Pure local compute — no collectives.
+    """
+    t, d = xf.shape
+    k, e = cfg.experts_per_tok, cfg.num_experts
+    logits = xf.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    tk = t * k
+    flat_expert = expert_idx.reshape(tk)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(tk)
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    counts = jnp.bincount(sorted_expert, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(tk) - starts[sorted_expert]
+
+    c = capacity(t, cfg)
+    keep = pos_in_expert < c
+    dst = jnp.where(keep, sorted_expert * c + pos_in_expert, e * c)
+
+    buf = jnp.zeros((e * c + 1, d), xf.dtype)
+    buf = buf.at[dst].set(xf[sorted_token], mode="drop")
+    buf = buf[: e * c].reshape(e, c, d)
+    meta = dict(dst=dst, keep=keep, sorted_token=sorted_token,
+                sorted_gate=sorted_gate, probs=probs, expert_idx=expert_idx,
+                logits=logits, c=c)
+    return buf, meta
+
+
+def _local_combine(out: jax.Array, meta, t: int, d: int):
+    e = out.shape[0]
+    c = meta["c"]
+    out_flat = out.reshape(e * c, d)
+    gathered = jnp.where(
+        meta["keep"][:, None],
+        out_flat[jnp.clip(meta["dst"], 0, e * c - 1)],
+        0.0,
+    )
+    y = jnp.zeros((t, d), out_flat.dtype)
+    y = y.at[meta["sorted_token"]].add(
+        gathered * meta["sorted_gate"][:, None].astype(out_flat.dtype)
+    )
+    return y
+
+
+def _expert_ffn(buf: jax.Array, wg, wu, wo) -> jax.Array:
+    hg = jnp.einsum("ecd,edf->ecf", buf, wg)
+    hu = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(hg) * hu
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_apply_expert_parallel(p: Params, x: jax.Array, cfg, mesh) -> jax.Array:
+    """DEVICE-scope MoE (paper §4.1/§4.2 adaptation): the token dim is
+    sharded over (dp × model); each device routes and sorts its own
+    tokens locally (no global sort collectives), then exactly two
+    all_to_alls over `model` move capacity buffers to/from the expert
+    owners. Collective bytes per device ≈ 2 × |local capacity buffer| —
+    vs. the GSPMD-inferred global-sort dispatch this removed ~97% of the
+    collective traffic on qwen3-moe train_4k (see EXPERIMENTS §Perf)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train.sharding import dp_axes, mesh_shape_of
+
+    ms = mesh_shape_of(mesh)
+    dp = dp_axes(ms)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def body(xl, router, wg, wu, wo):
+        b_loc, s_loc, d = xl.shape
+        t = b_loc * s_loc
+        xf = xl.reshape(t, d)
+        buf, meta = _local_dispatch(xf, router, cfg)                 # [E, C_loc, d]
+        bufx = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1, tiled=True)
+        out = _expert_ffn(bufx, wg, wu, wo)                          # [E_loc, C_loc*ep, d]
+        back = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0, tiled=True)
+        y = _local_combine(back, meta, t, d)
+        return y.reshape(b_loc, s_loc, d).astype(xl.dtype)
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(dp_entry, "model", None),
+            P(None, None),
+            P("model", None, None),
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=P(dp_entry, "model", None),
+        check_vma=False,
+    )(x, p["router"], p["wg"], p["wu"], p["wo"])
+
+
+def _ep_eligible(x: jax.Array, cfg, mesh) -> bool:
+    if mesh is None:
+        return False
+    from repro.train.sharding import dp_axes, mesh_shape_of
+
+    ms = mesh_shape_of(mesh)
+    if "model" not in ms:
+        return False
+    ep = ms["model"]
+    dp = dp_axes(ms)
+    dp_total = 1
+    for a in dp:
+        dp_total *= ms[a]
+    b, s, _ = x.shape
+    return (
+        cfg.num_experts % ep == 0
+        and s % ep == 0
+        and (b % dp_total == 0 or dp_total == 1)
+    )
+
+
+def moe_apply(
+    p: Params, x: jax.Array, cfg, *, return_aux: bool = False
+):
+    """x: [B, S, d] -> [B, S, d] (+ optional aux losses)."""
+    if not return_aux:
+        from repro.train.act_sharding import current_mesh
+
+        mesh = current_mesh()
+        if _ep_eligible(x, cfg, mesh):
+            return moe_apply_expert_parallel(p, x, cfg, mesh)
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_tok
+    e = cfg.num_experts
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- flatten assignments and sort by expert ----
+    tk = t * k
+    flat_expert = expert_idx.reshape(tk)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(tk)
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position of each assignment within its expert segment
+    counts = jnp.bincount(sorted_expert, length=e)           # [E]
+    starts = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(tk) - starts[sorted_expert]
+
+    c = capacity(t, cfg)
+    keep = pos_in_expert < c
+    dst = jnp.where(keep, sorted_expert * c + pos_in_expert, e * c)  # drop bin
+
+    # ---- dispatch: scatter tokens to [E, C, d] ----
+    buf = jnp.zeros((e * c + 1, d), x.dtype)
+    buf = buf.at[dst].set(xf[sorted_token], mode="drop")
+    buf = constrain(buf[: e * c].reshape(e, c, d), "experts", None, None)
+
+    # ---- grouped expert FFN (SwiGLU) ----
+    hg = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    hu = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = constrain(jax.nn.silu(hg) * hu, "experts", None, None)
+    out = constrain(
+        jnp.einsum("ecf,efd->ecd", h, p["wo"]), "experts", None, None
+    )  # [E, C, d]
+
+    # ---- combine: gather back and weight by gates ----
+    out_flat = out.reshape(e * c, d)
+    gathered = jnp.where(
+        keep[:, None], out_flat[jnp.clip(dst, 0, e * c - 1)], 0.0
+    )
+    y = jnp.zeros((t, d), out_flat.dtype)
+    y = y.at[sorted_token].add(gathered * sorted_gate[:, None].astype(out_flat.dtype))
+    y = constrain(y.reshape(b, s, d).astype(x.dtype), "batch", "seq_res", None)
+
+    if return_aux:
+        # load-balance aux loss (Switch-style) + router z-loss
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(
+            jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0
+        )
+        aux = e * jnp.sum(me * ce)
+        zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        return y, {"aux_loss": aux, "z_loss": zloss, "dropped": jnp.mean(1.0 - keep)}
+    return y

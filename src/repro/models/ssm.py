@@ -1,0 +1,200 @@
+"""Mamba2 SSD (state-space duality) block — chunked matmul form for
+training/prefill (sub-quadratic, MXU-friendly) and O(1)-state decode.
+
+Recurrence per head h (state S ∈ R^{N×P}, N=d_state, P=headdim):
+    S_t = exp(dt_t A_h) S_{t-1} + dt_t B_t ⊗ x_t
+    y_t = C_t · S_t + D_h x_t
+
+The chunked algorithm scans over chunks of length L, computing the
+intra-chunk part as masked-decay attention (two GEMMs on the MXU) and
+carrying the inter-chunk state — the exact structure Mamba2 calls the
+state-space dual form. All state math in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, rmsnorm
+from repro.train.act_sharding import constrain
+
+CONV_K = 4  # depthwise causal conv width
+
+
+def ssd_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 8)
+    return {
+        "wx": dense_init(ks[0], (d, di), d, dtype),
+        "wz": dense_init(ks[1], (d, di), d, dtype),
+        "wB": dense_init(ks[2], (d, n), d, dtype),
+        "wC": dense_init(ks[3], (d, n), d, dtype),
+        "wdt": dense_init(ks[4], (d, h), d, dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32) - 4.0,  # softplus -> ~0.018
+        "A_log": jnp.log(
+            jax.random.uniform(ks[5], (h,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[6], (CONV_K, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "gate_norm": jnp.ones((di,), dtype),
+        "wo": dense_init(ks[7], (di, d), di, dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. u [B,S,C], w [K,C]."""
+    out = u * w[-1]
+    for i in range(1, CONV_K):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[CONV_K - 1 - i]
+    return out
+
+
+def _inputs(p: Params, xin: jax.Array, cfg):
+    """Project input to (x, z, B, C, dt) with conv + activations."""
+    b, s, _ = xin.shape
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    x = xin @ p["wx"]
+    z = xin @ p["wz"]
+    Bm = xin @ p["wB"]
+    Cm = xin @ p["wC"]
+    u = jnp.concatenate([x, Bm, Cm], axis=-1)
+    u = jax.nn.silu(_causal_conv(u, p["conv_w"]))
+    x, Bm, Cm = u[..., :di], u[..., di : di + n], u[..., di + n :]
+    dt = jax.nn.softplus(
+        (xin @ p["wdt"]).astype(jnp.float32) + p["dt_bias"]
+    )  # [B,S,H]
+    x = constrain(x.reshape(b, s, h, cfg.ssm_headdim), "batch", "seq", "ssm_heads", None)
+    z = constrain(z, "batch", "seq", "ff")
+    dt = constrain(dt, "batch", "seq", "ssm_heads")
+    return x, z, Bm, Cm, dt
+
+
+def ssd_scan(
+    x: jax.Array,    # [B, S, H, P]
+    dt: jax.Array,   # [B, S, H] (f32)
+    A: jax.Array,    # [H] (negative, f32)
+    Bm: jax.Array,   # [B, S, N]
+    Cm: jax.Array,   # [B, S, N]
+    *,
+    chunk: int = 128,
+    init_state: Optional[jax.Array] = None,  # [B, H, N, P]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y [B,S,H,P] f32, final_state)."""
+    b, s, h, pdim = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, pdim)
+    Bf = Bm.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, nc, chunk, n)
+    dtc = dt.reshape(b, nc, chunk, h)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, pdim), jnp.float32)
+
+    def body(state, inputs):
+        xc, bc, cc, dtk = inputs  # [B,L,H,P], [B,L,N], [B,L,N], [B,L,H]
+        a = dtk * A  # [B,L,H], negative
+        cum = jnp.cumsum(a, axis=1)           # inclusive
+        total = cum[:, -1]                    # [B,H]
+        # carry-state contribution: y_state[t] = exp(cum_t) C_t . S
+        cs = jnp.einsum("bln,bhnp->blhp", cc, state)
+        y_state = cs * jnp.exp(cum)[..., None]
+        # intra-chunk: W[t,s] = (C_t.B_s) exp(cum_t - cum_s) dt_s  (t >= s)
+        cb = jnp.einsum("bln,bmn->blm", cc, bc)            # [B,L,L]
+        gamma = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,L,L,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(
+            tri[None, :, :, None], cb[..., None] * gamma * dtk[:, None, :, :], 0.0
+        )  # [B,L,L,H]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w, xc)
+        # state update: S' = exp(total) S + sum_s exp(total - cum_s) dt_s B_s x_s
+        decay_s = jnp.exp(total[:, None, :] - cum) * dtk   # [B,L,H]
+        s_new = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bln,blhp,blh->bhnp", bc, xc, decay_s
+        )
+        return s_new, y_state + y_intra
+
+    final, yc = jax.lax.scan(
+        body,
+        init_state,
+        (xf.swapaxes(0, 1), Bf.swapaxes(0, 1), Cf.swapaxes(0, 1), dtc.swapaxes(0, 1)),
+    )
+    y = yc.swapaxes(0, 1).reshape(b, s, h, pdim)
+    return y, final
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Token-by-token recurrence oracle (tests)."""
+    b, s, h, pdim = x.shape
+    n = Bm.shape[-1]
+    state = jnp.zeros((b, h, n, pdim), jnp.float32)
+    ys = []
+    for t in range(s):
+        lam = jnp.exp(dt[:, t] * A)  # [B,H]
+        upd = jnp.einsum("bn,bhp,bh->bhnp", Bm[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32), dt[:, t])
+        state = state * lam[:, :, None, None] + upd
+        ys.append(jnp.einsum("bn,bhnp->bhp", Cm[:, t].astype(jnp.float32), state))
+    return jnp.stack(ys, axis=1), state
+
+
+def ssd_apply(
+    p: Params, xin: jax.Array, cfg, *, chunk: int = 128
+) -> jax.Array:
+    """Full SSD block: proj → conv → SSD scan → gated norm → out proj."""
+    x, z, Bm, Cm, dt = _inputs(p, xin, cfg)
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    b, s = xin.shape[:2]
+    y = y.reshape(b, s, cfg.ssm_d_inner).astype(xin.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) per token)
+# ---------------------------------------------------------------------------
+
+
+def ssd_state_init(cfg, batch: int, dtype) -> Params:
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, cfg.ssm_d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def ssd_decode(p: Params, xin: jax.Array, cfg, state: Params) -> Tuple[jax.Array, Params]:
+    """xin [B, 1, d]; returns (y [B, 1, d], new state)."""
+    b = xin.shape[0]
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    x = xin @ p["wx"]
+    z = xin @ p["wz"]
+    Bm = xin @ p["wB"]
+    Cm = xin @ p["wC"]
+    u = jnp.concatenate([x, Bm, Cm], axis=-1)[:, 0]           # [B, conv_dim]
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # [B, K, conv]
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    u_act = jax.nn.silu(conv_out)
+    xs, Bs, Cs = u_act[:, :di], u_act[:, di : di + n], u_act[:, di + n :]
+    dt = jax.nn.softplus((xin[:, 0] @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    lam = jnp.exp(dt * A)                                      # [B,H]
+    xh = xs.reshape(b, h, cfg.ssm_headdim)
+    s_new = state["ssm"] * lam[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", Bs, xh, dt
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cs, s_new) + xh * p["D"][:, None]
+    y = y.reshape(b, 1, di).astype(xin.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["wo"], {"ssm": s_new, "conv": hist[:, 1:].astype(state["conv"].dtype)}

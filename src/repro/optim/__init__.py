@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState, apply_updates, clip_by_global_norm, global_norm
+from repro.optim.schedule import warmup_cosine

@@ -1,0 +1,59 @@
+"""Gradient compression for cross-pod reduction.
+
+At 2+ pods the pod-axis all-reduce crosses DCI (slow links); int8
+compression with per-tensor scales cuts those bytes 4× (vs f32 master
+grads). Error feedback keeps the quantization bias from accumulating.
+
+Used by the train step when ``compress_pod_grads=True``: grads are
+reduced over (data) at full precision by the backward pass, then the
+pod-axis contribution is all-reduced in int8 inside shard_map.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda g: quantize_int8(g.astype(jnp.float32)), tree)
+
+
+def decompress_tree(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda qs: dequantize_int8(*qs),
+        tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def quantize_dequantize(x: jax.Array) -> jax.Array:
+    q, s = quantize_int8(x.astype(jnp.float32))
+    return dequantize_int8(q, s).astype(x.dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 ring all-reduce emulation inside shard_map: quantize, sum
+    int32, dequantize with the max scale (conservative)."""
+    q, s = quantize_int8(x.astype(jnp.float32))
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    smax = jax.lax.pmax(s, axis_name)
+    return total.astype(jnp.float32) * smax
+
+
+def error_feedback_update(grad: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Add residual, quantize, return (dequantized grad, new residual)."""
+    g = grad.astype(jnp.float32) + residual
+    gq = quantize_dequantize(g)
+    return gq, g - gq

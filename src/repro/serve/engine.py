@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill + decode with per-slot position
+tracking (continuous-batching-lite) and greedy/temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    api: Any                 # ModelAPI
+    batch_size: int
+    max_seq: int
+    temperature: float = 0.0
+    rng_seed: int = 0
+
+    def __post_init__(self):
+        self.params = None
+        self._decode = jax.jit(self.api.decode_step)
+        self._prefill = jax.jit(self.api.prefill)
+
+    def load(self, params) -> None:
+        self.params = params
+
+    def generate(
+        self,
+        prompts: jax.Array,       # [B, S_prompt] int32 (padded batch)
+        max_new_tokens: int,
+        *,
+        extra_inputs: Optional[Dict[str, jax.Array]] = None,
+    ) -> np.ndarray:
+        """Greedy / temperature sampling for a fixed batch."""
+        assert self.params is not None, "call load() first"
+        b, s_prompt = prompts.shape
+        assert b == self.batch_size
+        cache = self.api.cache_init(b, self.max_seq)
+        batch = {"tokens": prompts}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        key = jax.random.PRNGKey(self.rng_seed)
+        outs: List[jax.Array] = []
+        tok = self._sample(logits[:, -1], key)
+        outs.append(tok)
+        pos = s_prompt
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, tok[:, None], cache, jnp.int32(pos))
+            tok = self._sample(logits[:, -1], sub)
+            outs.append(tok)
+            pos += 1
+        return np.stack([np.asarray(t) for t in outs], axis=1)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.temperature).astype(jnp.int32)

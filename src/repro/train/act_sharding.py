@@ -1,0 +1,138 @@
+"""Activation sharding constraints via Axe logical-dim names.
+
+Model code annotates activations with *logical* dim names
+("batch", "seq", "heads", "kv", "ff", "vocab", "experts", ...); when a
+mesh context is active, each name resolves to a preference chain of mesh
+axes and the first Axe-admissible full spec wins (exact divisibility —
+same mechanism as the param rules). Without a context this is a no-op,
+so model code stays mesh-agnostic.
+
+This pins GSPMD's propagation: without these constraints the partitioner
+can follow a sharded weight dim into the attention math (observed:
+hd-sharded QK projections ⇒ full-batch logits + giant all-reduces).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.train.sharding import dp_axes, mesh_shape_of, pick_pspec
+
+_CTX: Dict[str, object] = {"mesh": None, "mesh_shape": None}
+
+# logical dim name -> ordered mesh-axis candidates (None = replicate)
+_LOGICAL: Dict[str, Tuple] = {
+    "batch": ("__dp__",),
+    "tokens": ("__dp__",),    # flattened batch*seq
+    "seq": (None,),
+    # attention query/output seq dim: replicate when heads shard; shard
+    # over `model` when head counts don't divide it (sequence parallelism
+    # — starcoder2's 36 heads, whisper's 20)
+    "seq_q": (None, "model"),
+    # residual-stream seq dim: shard over `model` (Megatron sequence
+    # parallelism — norms/residual/embedding traffic /16); decode (S=1)
+    # and non-dividing seqs fall back to replicated automatically.
+    "seq_res": ("model", None),
+    "seq_sharded": ("model", "data"),  # long-context sequence parallelism
+    "embed": (None,),
+    "heads": ("model",),
+    "kv": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    None: (None,),
+}
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _CTX["mesh"] = mesh
+    _CTX["mesh_shape"] = mesh_shape_of(mesh) if mesh is not None else None
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+_OVERRIDES: Dict[str, Tuple] = {}
+
+
+def set_logical_overrides(overrides: Optional[Dict[str, Tuple]]) -> None:
+    """Per-arch layout policy: override logical-dim candidate lists.
+
+    E.g. the VLM family disables the sequence-parallel residual stream
+    (the patch-concat makes SP a net loss: §Perf grid, llava −12%):
+    ``set_logical_overrides({"seq_res": (None,)})``.
+    """
+    _OVERRIDES.clear()
+    if overrides:
+        _OVERRIDES.update(overrides)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh) -> Iterator[None]:
+    prev = _CTX["mesh"]
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(prev)
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Annotate x with the first admissible sharding for its logical dims."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    mesh_shape = _CTX["mesh_shape"]
+    assert len(dims) == x.ndim, (dims, x.shape)
+    dp = dp_axes(mesh_shape)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    # build per-dim candidate lists
+    per_dim = []
+    for name in dims:
+        cands = _OVERRIDES.get(name) or _LOGICAL.get(name, (None,))
+        resolved = []
+        for c in cands:
+            resolved.append(dp_entry if c == "__dp__" else c)
+        resolved.append(None)
+        per_dim.append(resolved)
+
+    # Enumerate the Cartesian product of per-dim candidates; keep the
+    # admissible (Axe-checked) spec that uses the MOST device capacity,
+    # tie-broken by candidate preference rank. This finds e.g.
+    # sequence-parallel attention when heads don't divide `model`.
+    import itertools
+
+    def axes_used(spec) -> Tuple[int, int]:
+        used = set()
+        for e in spec:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                used.add(a)
+        cap = 1
+        for a in used:
+            cap *= mesh_shape.get(a, 1)
+        return cap
+
+    from repro.train.sharding import _admissible
+
+    best = None
+    best_key = None
+    for combo in itertools.product(*[list(enumerate(c)) for c in per_dim]):
+        ranks = sum(i for i, _ in combo)
+        spec = tuple(c for _, c in combo)
+        if not _admissible(x.shape, spec, mesh_shape):
+            continue
+        key = (-axes_used(spec), ranks)
+        if best_key is None or key < best_key:
+            best_key = key
+            best = spec
+    if best is None:
+        best = tuple(None for _ in per_dim)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*best)))

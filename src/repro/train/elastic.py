@@ -1,0 +1,84 @@
+"""Elastic scaling + failure handling.
+
+At 1000+-node scale the practical recipe is: detect failure → shrink or
+swap the data-parallel axis → restore the latest checkpoint resharded
+onto the new mesh → resume at the recorded step (the step-addressable
+data pipeline replays nothing). The `model` axis is kept fixed so param
+layouts stay valid; only DP-degree changes.
+
+This module implements the re-mesh math + resharded restore, and a
+simulated failure/restart test exercises it end-to-end (tests/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.train import sharding as shard_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(self.shape)
+
+
+def shrink_data_axis(spec: MeshSpec, lost_devices: int) -> MeshSpec:
+    """Largest valid mesh after losing nodes: keep `model` intact and
+    shrink the (pod×)data degree to the largest feasible size."""
+    axes = dict(zip(spec.axes, spec.shape))
+    model = axes.get("model", 1)
+    dp_total = spec.n_devices // model
+    remaining = spec.n_devices - lost_devices
+    new_dp = remaining // model
+    if new_dp < 1:
+        raise ValueError("not enough devices to keep the model axis intact")
+    # collapse pod axis into data when shrinking below pod granularity
+    if "pod" in axes and new_dp % axes["pod"] == 0:
+        new_shape = (axes["pod"], new_dp // axes["pod"], model)
+        return MeshSpec(new_shape, ("pod", "data", "model"))
+    return MeshSpec((new_dp, model), ("data", "model"))
+
+
+def make_mesh(spec: MeshSpec) -> Mesh:
+    return jax.make_mesh(spec.shape, spec.axes)
+
+
+def reshard_state(
+    state: Any,
+    params_template: Any,
+    new_mesh: Mesh,
+    *,
+    zero1: bool = True,
+) -> Any:
+    """Re-derive shardings (Axe rules) on the new mesh and device_put."""
+    mesh_shape = shard_rules.mesh_shape_of(new_mesh)
+    p_specs = shard_rules.param_pspecs(params_template, mesh_shape)
+    p_sh = shard_rules.shardings_of(p_specs, new_mesh)
+    o_specs = shard_rules.opt_pspecs(params_template, p_specs, mesh_shape, zero1=zero1)
+    o_sh = shard_rules.shardings_of(o_specs, new_mesh)
+
+    new_params = jax.device_put(state.params, p_sh)
+    new_mu = jax.device_put(state.opt_state.mu, o_sh)
+    new_nu = jax.device_put(state.opt_state.nu, o_sh)
+    opt = state.opt_state._replace(mu=new_mu, nu=new_nu)
+    return state._replace(params=new_params, opt_state=opt)
+
+
+def rebatch_for_mesh(global_batch: int, spec: MeshSpec) -> int:
+    """Per-replica batch after an elastic change (global batch kept by
+    increasing per-replica size or gradient-accumulation microbatches)."""
+    axes = dict(zip(spec.axes, spec.shape))
+    dp = axes.get("data", 1) * axes.get("pod", 1)
+    if global_batch % dp == 0:
+        return global_batch // dp
+    # round up: caller adds microbatches to keep the effective batch
+    return -(-global_batch // dp)

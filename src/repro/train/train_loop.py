@@ -1,0 +1,128 @@
+"""Training loop: jitted train step (grad accumulation, clipping, AdamW,
+optional quantized cross-pod gradient reduction), Trainer driver with
+checkpoint/restart + straggler watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW, AdamWState, apply_updates, clip_by_global_norm
+from repro.optim.grad_compress import quantize_dequantize
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: AdamWState
+    step: jax.Array
+
+
+def init_state(params, optimizer: AdamW) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Dict[str, jax.Array]], jax.Array],
+    optimizer: AdamW,
+    *,
+    microbatches: int = 1,
+    max_grad_norm: float = 1.0,
+    compress_pod_grads: bool = False,
+) -> Callable[[TrainState, Dict[str, jax.Array]], tuple]:
+    """Build the (un-jitted) train step; callers jit with shardings.
+
+    microbatches > 1: the global batch's leading dim is split and
+    gradients accumulated in f32 via lax.scan (memory ↓, same math).
+    compress_pod_grads: int8 quantize-dequantize of grads before the
+    optimizer — stands in for the cross-pod int8 all-reduce (on a real
+    multi-pod job the psum over 'pod' is performed on the quantized
+    values; XLA's AD already produced the intra-pod reduction).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32) / microbatches, g_acc, g
+                )
+                return (loss_acc + loss / microbatches, g_acc), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros((), jnp.float32), zero_g), mb)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        if compress_pod_grads:
+            grads = jax.tree.map(quantize_dequantize, grads)
+
+        grads, grad_norm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = optimizer.update(grads, state.opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": grad_norm}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Trainer: checkpointing + straggler watchdog + restart
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Host-side driver. Deterministic data (step-addressable) + atomic
+    checkpoints give exactly-once batch semantics across restarts."""
+
+    train_step: Callable
+    data: Any                      # SyntheticLMData-like (batch_at)
+    checkpoint_manager: Any = None  # CheckpointManager
+    checkpoint_every: int = 100
+    step_deadline_s: Optional[float] = None  # straggler watchdog
+    on_straggler: Optional[Callable[[int, float], None]] = None
+
+    slow_steps: int = 0
+
+    def restore_or_init(self, state: TrainState) -> TrainState:
+        if self.checkpoint_manager is None:
+            return state
+        restored = self.checkpoint_manager.restore_latest(state)
+        return restored if restored is not None else state
+
+    def run(self, state: TrainState, num_steps: int, *, batch_fn=None) -> tuple:
+        """Run up to num_steps from wherever `state.step` is."""
+        history = []
+        start_step = int(state.step)
+        for step in range(start_step, start_step + num_steps):
+            batch = batch_fn(step) if batch_fn else self.data.jax_batch_at(step)
+            t0 = time.monotonic()
+            state, metrics = self.train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            if self.step_deadline_s is not None and dt > self.step_deadline_s:
+                self.slow_steps += 1
+                if self.on_straggler is not None:
+                    self.on_straggler(step, dt)
+            history.append({k: float(v) for k, v in metrics.items()} | {"sec": dt})
+            if (
+                self.checkpoint_manager is not None
+                and (step + 1) % self.checkpoint_every == 0
+            ):
+                self.checkpoint_manager.save(state, step + 1)
+        return state, history

@@ -1,0 +1,74 @@
+"""Validate the loop-aware HLO cost analyzer against known-exact cases
+(XLA's own cost_analysis counts while bodies once — ours must not)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.launch import hlo_cost
+
+out = {}
+
+# 1. scan flops multiply by trip count
+def g(x, w):
+    def body(x, _):
+        return jnp.tanh(x @ w), None
+    y, _ = jax.lax.scan(body, x, None, length=10)
+    return y
+
+x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+txt = jax.jit(g).lower(x, w).compile().as_text()
+c = hlo_cost.analyze(txt)
+out["scan_flops"] = c.flops
+out["scan_expected"] = 10 * 2 * 256**3
+out["loops"] = c.loops
+
+# 2. SPMD matmul: per-device flops + all-reduce ring bytes
+mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+b = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+sh_a = NamedSharding(mesh, P(None, "model"))
+sh_b = NamedSharding(mesh, P("model", None))
+sh_o = NamedSharding(mesh, P(None, None))
+with mesh:
+    comp = jax.jit(lambda a, b: a @ b, in_shardings=(sh_a, sh_b),
+                   out_shardings=sh_o).lower(a, b).compile()
+c2 = hlo_cost.analyze(comp.as_text(), total_devices=8)
+out["spmd_flops"] = c2.flops
+out["spmd_expected"] = 2 * 512 * 512 * 64
+out["ar_bytes"] = c2.comm_by_op["all-reduce"]
+out["ar_expected"] = 2 * 512 * 512 * 4 * 7 / 8
+print(json.dumps(out))
+"""
+
+
+def test_hlo_cost_exact_cases():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    d = json.loads(r.stdout.strip().splitlines()[-1])
+    assert d["scan_flops"] == d["scan_expected"], d
+    assert d["loops"] == [["while.5", 10]] or d["loops"][0][1] == 10, d
+    assert d["spmd_flops"] == d["spmd_expected"], d
+    assert d["ar_bytes"] == d["ar_expected"], d
+
+
+def test_shape_parsing():
+    from repro.launch.hlo_cost import _shape_elems_bytes
+
+    assert _shape_elems_bytes("f32[256,256]{1,0}") == (65536, 262144)
+    assert _shape_elems_bytes("bf16[2,4]") == (8, 16)
+    e, b = _shape_elems_bytes("(s32[], f32[8,8]{1,0})")
+    assert e == 65 and b == 260
+    assert _shape_elems_bytes("pred[]") == (1, 1)

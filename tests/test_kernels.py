@@ -1,0 +1,164 @@
+"""Per-kernel correctness sweeps: Pallas (interpret mode) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    # f32 tolerance admits K-split accumulation-order differences
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (256, 512, 256, 128, 128, 256),
+        (128, 128, 128, 128, 128, 128),
+        (512, 256, 384, 256, 128, 128),
+        (256, 1024, 128, 128, 128, 512),
+    ],
+)
+def test_matmul_matches_ref(dtype, m, k, n, bm, bn, bk):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a, b = _rand(k1, (m, k), dtype), _rand(k2, (k, n), dtype)
+    got = ops.matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize(
+    "b,h,sq,skv,d",
+    [(1, 2, 256, 256, 64), (2, 1, 128, 384, 128)],
+)
+def test_flash_attention_matches_ref(dtype, causal, b, h, sq, skv, d):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (b, h, sq, d), dtype)
+    k = _rand(ks[1], (b, h, skv, d), dtype)
+    v = _rand(ks[2], (b, h, skv, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=128, block_kv=128)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 256, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=64)
+    want = ref.attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_alignment():
+    # queries right-aligned: 128 new tokens against a 384-token KV cache
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (1, 1, 128, 64), jnp.float32)
+    k = _rand(ks[1], (1, 1, 384, 64), jnp.float32)
+    v = _rand(ks[2], (1, 1, 384, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# moe grouped gemm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "e,c,d,f",
+    [(4, 128, 256, 512), (8, 256, 512, 256), (2, 128, 1024, 128)],
+)
+def test_moe_gemm_matches_ref(dtype, e, c, d, f):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    x = _rand(k1, (e, c, d), dtype)
+    w = _rand(k2, (e, d, f), dtype)
+    got = ops.moe_gemm(x, w)
+    want = ref.moe_gemm_ref(x, w)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 96, 512), (1000, 256), (3, 128)])
+def test_rmsnorm_matches_ref(dtype, shape):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    x = _rand(k1, shape, dtype)
+    w = _rand(k2, shape[-1:], dtype)
+    got = ops.rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# scope-dispatched matmul (core.ops)
+# ---------------------------------------------------------------------------
+
+def test_ops_matmul_dispatch():
+    from repro.core import ops as cops
+    from repro.core.scopes import Scope, scope
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(6))
+    a, b = _rand(k1, (256, 256), jnp.float32), _rand(k2, (256, 256), jnp.float32)
+    want = ref.matmul_ref(a, b)
+    with scope(Scope.DEVICE):
+        got = cops.matmul(a, b, block_m=128, block_n=128, block_k=128)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    got_mesh = cops.matmul(a, b)  # MESH scope -> XLA dot
+    np.testing.assert_allclose(got_mesh, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# trainable flash attention (custom_vjp)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_attention_trainable_grads(causal):
+    from repro.kernels.flash_attention import flash_attention_trainable
+
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(ks[0], (1, 2, 128, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 128, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 128, 64), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention_trainable(q, k, v, causal) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=causal) ** 2)
+
+    gq, gk, gv = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    rq, rk, rv = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in ((gq, rq), (gk, rk), (gv, rv)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)

@@ -1,0 +1,355 @@
+"""Property + example tests for the Axe layout algebra (paper §2, App. A–F).
+
+Every operator is validated against brute-force enumeration of the
+induced set-valued map f_L on small random layouts (hypothesis), plus
+the concrete worked examples from the paper text.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (
+    GroupingError,
+    It,
+    Iter,
+    Layout,
+    SliceError,
+    canonicalize,
+    direct_sum,
+    from_shape,
+    group,
+    layouts_equal,
+    slice_layout,
+    strided,
+    tile,
+    tile_of,
+)
+from repro.core.za import ZA, za
+
+AXES = ["m", "x", "y"]
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+def iters(min_extent=1, max_extent=4, strides=st.integers(-8, 8).filter(lambda s: s != 0)):
+    return st.builds(
+        It,
+        st.integers(min_extent, max_extent),
+        strides,
+        st.sampled_from(AXES),
+    )
+
+
+def layouts(max_d=4, max_r=2, max_size=64):
+    def build(d, r, o_axis, o_val):
+        L = Layout(tuple(d), tuple(r), ZA.single(o_axis, o_val))
+        return L
+
+    return st.builds(
+        build,
+        st.lists(iters(), min_size=1, max_size=max_d),
+        st.lists(iters(strides=st.integers(1, 8)), min_size=0, max_size=max_r),
+        st.sampled_from(AXES),
+        st.integers(-4, 4),
+    ).filter(lambda L: L.size <= max_size and L.replication_degree <= 8)
+
+
+def factorizations(n: int):
+    """All ordered factorizations of n into 1..3 factors (small n)."""
+    out = [(n,)]
+    for a in range(2, n + 1):
+        if n % a == 0:
+            b = n // a
+            out.append((a, b))
+            for c in range(2, b + 1):
+                if b % c == 0:
+                    out.append((a, c, b // c))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# induced map basics + paper §2.2 examples
+# ---------------------------------------------------------------------------
+
+def test_tensor_core_example():
+    # 8x16 tile over 2 warps' lanes/regs, replicated twice with warp offset 5.
+    L = Layout(
+        D=(It(8, 4, "lane"), It(2, 1, "warp"), It(4, 1, "lane"), It(2, 1, "reg")),
+        R=(It(2, 4, "warp"),),
+        O=za(warp=5),
+    )
+    assert L.admits((8, 16))
+    # logical (0, 0): lane 0, warp in {5, 9}, reg 0
+    coords = L.call_shaped((0, 0), (8, 16))
+    assert coords == frozenset({za(warp=5), za(warp=9)})
+    # logical (1, 5): col 5 -> digits (0, 2, 1) over (2,4,2): warp 0, lane 4+2, reg 1
+    coords = L.call_shaped((1, 5), (8, 16))
+    assert coords == frozenset(
+        {za(lane=6, warp=5, reg=1), za(lane=6, warp=9, reg=1)}
+    )
+    assert L.span_axis("warp") == 1 + 1 * 1 + 4 * 1  # 1 + (2-1)*1 + (2-1)*4
+
+
+def test_mesh_sharding_examples():
+    # fully sharded 64x128 on 2x2 mesh (S0 S1 in Alpa notation)
+    L = Layout(
+        D=(It(2, 1, "gpuid"), It(32, 128, "m"), It(2, 2, "gpuid"), It(64, 1, "m"))
+    )
+    assert L.admits((64, 128))
+    # element (33, 70): row half 1, local row 1; col half 1, local col 6
+    (c,) = L.call_shaped((33, 70), (64, 128))
+    assert c == za(gpuid=1 + 2, m=128 + 6)
+
+    # shard rows + replicate over mesh columns (S0 R)
+    L2 = Layout(
+        D=(It(2, 1, "gpuid"), It(32, 128, "m"), It(128, 1, "m")),
+        R=(It(2, 2, "gpuid"),),
+    )
+    coords = L2.call_shaped((33, 70), (64, 128))
+    assert coords == frozenset({za(gpuid=1, m=128 + 70), za(gpuid=3, m=128 + 70)})
+
+
+def test_row_major_from_shape():
+    L = from_shape((3, 5))
+    for i in range(3):
+        for j in range(5):
+            (c,) = L.call_shaped((i, j), (3, 5))
+            assert c == za(m=i * 5 + j)
+
+
+# ---------------------------------------------------------------------------
+# canonicalization
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(layouts())
+def test_canonicalize_preserves_map(L):
+    C = canonicalize(L)
+    assert C.size == L.size
+    assert C.enumerate_map() == L.enumerate_map()
+
+
+@settings(max_examples=200, deadline=None)
+@given(layouts(max_d=3), st.data())
+def test_canonical_equality_of_transformed(L, data):
+    """Apply semantics-preserving rewrites; canonical forms must agree."""
+    D = list(L.D)
+    # split a random splittable iter
+    idx = data.draw(st.integers(0, len(D) - 1))
+    it = D[idx]
+    for f in (2, 3):
+        if it.extent % f == 0 and it.extent > f:
+            D[idx : idx + 1] = [
+                Iter(f, it.stride * (it.extent // f)),
+                Iter(it.extent // f, it.stride),
+            ]
+            break
+    # insert a unit iter
+    pos = data.draw(st.integers(0, len(D)))
+    D.insert(pos, It(1, data.draw(st.integers(1, 5)), data.draw(st.sampled_from(AXES))))
+    L2 = Layout(tuple(D), L.R, L.O)
+    assert L2.enumerate_map() == L.enumerate_map()
+    assert layouts_equal(L, L2)
+
+
+def test_canonicalize_r_absorb_and_sign():
+    # R = [(2, stride 4), (2, stride 8)] on one axis: 8 = 2*4, q=2 <= e=2
+    L = Layout((It(2, 1, "m"),), (It(2, 4, "x"), It(2, 8, "x")))
+    C = canonicalize(L)
+    assert C.R == (It(4, 4, "x"),)
+    assert C.enumerate_map() == L.enumerate_map()
+    # negative replication stride folds into the offset
+    L2 = Layout((It(2, 1, "m"),), (It(3, -2, "x"),))
+    C2 = canonicalize(L2)
+    assert C2.enumerate_map() == L2.enumerate_map()
+    assert all(s > 0 for it in C2.R for _, s in it.stride.items())
+
+
+# ---------------------------------------------------------------------------
+# grouping
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(layouts(max_r=0), st.data())
+def test_group_preserves_map(L, data):
+    shape = data.draw(st.sampled_from(factorizations(L.size)))
+    try:
+        g = group(L, shape)
+    except GroupingError:
+        return
+    assert g.layout.enumerate_map() == L.enumerate_map()
+    for blk, s in zip(g.blocks, shape):
+        assert math.prod(i.extent for i in blk) == s
+
+
+def test_group_paper_example():
+    L = strided((2, 8, 3, 8), (192, 8, 64, 1))
+    g = group(L, (16, 24))
+    assert [tuple(i.extent for i in b) for b in g.blocks] == [(2, 8), (3, 8)]
+
+
+# ---------------------------------------------------------------------------
+# span
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(layouts())
+def test_span_matches_bruteforce(L):
+    spans = L.span()
+    coords = L.all_coords()
+    for a in L.axes():
+        vals = [c[a] for c in coords]
+        assert spans.get(a, 1) == max(vals) - min(vals) + 1
+
+
+# ---------------------------------------------------------------------------
+# tile
+# ---------------------------------------------------------------------------
+
+def test_tile_paper_example():
+    A = strided((2, 3), (3, 1))
+    B = strided((8, 8), (8, 1))
+    T, S_T = tile(A, (2, 3), B, (8, 8))
+    assert S_T == (2, 8, 3, 8)
+    assert tuple((i.extent, i.stride["m"]) for i in T.D) == (
+        (2, 192), (8, 8), (3, 64), (8, 1),
+    )
+
+
+@settings(max_examples=150, deadline=None)
+@given(layouts(max_d=2, max_r=1, max_size=12), layouts(max_d=2, max_r=1, max_size=12))
+def test_tile_semantics(A, B):
+    S_A, S_B = (A.size,), (B.size,)
+    T, S_T = tile(A, S_A, B, S_B)
+    spans = B.span()
+    for x in range(A.size):
+        for y in range(B.size):
+            got = T.call_shaped((x, y), S_T)
+            fa = {c.scale_by(spans) for c in A(x)}
+            fb = B(y)
+            want = frozenset(ca + cb for ca in fa for cb in fb)
+            assert got == want, (x, y, got, want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(layouts(max_d=2, max_r=0, max_size=12), layouts(max_d=2, max_r=0, max_size=12))
+def test_tile_injective_when_parts_injective(A, B):
+    """Tiles must not overlap: if f_A and f_B are injective, so is f_T."""
+    if len(set(A.enumerate_map())) < A.size or len(set(B.enumerate_map())) < B.size:
+        return
+    T, S_T = tile(A, (A.size,), B, (B.size,))
+    assert len(set(T.enumerate_map())) == T.size
+
+
+# ---------------------------------------------------------------------------
+# tile_of (A = C ⊗ B, recover C)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=150, deadline=None)
+@given(layouts(max_d=2, max_r=0, max_size=8), layouts(max_d=2, max_r=0, max_size=8))
+def test_tile_of_roundtrip(C, B):
+    T, S_T = tile(C, (C.size,), B, (B.size,))
+    res = tile_of(T, (T.size,), B, (B.size,))
+    assert res is not None, (C, B, T)
+    C2, S_C = res
+    assert S_C == (C.size,)
+    T2, _ = tile(C2, S_C, B, (B.size,))
+    assert T2.enumerate_map() == T.enumerate_map()
+
+
+def test_tile_of_rejects_non_tile():
+    # (16):(1) is NOT a tile of B=(2,2):(4,1)  (App. F.4)
+    B = strided((2, 2), (4, 1))
+    L = from_shape((16,))
+    assert tile_of(L, (16,), B, (4,)) is None
+
+
+# ---------------------------------------------------------------------------
+# direct sum
+# ---------------------------------------------------------------------------
+
+def test_direct_sum_paper_example():
+    A = strided((2, 2), (8, 2))
+    B = strided((2, 2), (4, 1))
+    T, S_T = direct_sum(A, (2, 2), B, (2, 2))
+    C = canonicalize(T)
+    assert C.D == (It(16, 1, "m"),)
+
+
+@settings(max_examples=150, deadline=None)
+@given(layouts(max_d=2, max_r=1, max_size=12), layouts(max_d=2, max_r=1, max_size=12))
+def test_direct_sum_semantics(A, B):
+    T, S_T = direct_sum(A, (A.size,), B, (B.size,))
+    for x in range(A.size):
+        for y in range(B.size):
+            got = T.call_shaped((x, y), S_T)
+            want = frozenset(ca + cb for ca in A(x) for cb in B(y))
+            assert got == want
+
+
+# ---------------------------------------------------------------------------
+# slice
+# ---------------------------------------------------------------------------
+
+def test_slice_paper_example():
+    L = strided((2, 8, 3, 8), (192, 8, 64, 1))
+    S = (16, 24)
+    out = slice_layout(L, (0, 8), (8, 16), S)
+    C = canonicalize(out)
+    assert C.O == za(m=64)
+    assert tuple((i.extent, i.stride["m"]) for i in C.D) == ((8, 8), (2, 64), (8, 1))
+    # semantics
+    for i in range(8):
+        for j in range(16):
+            assert out.call_shaped((i, j), (8, 16)) == L.call_shaped((i, j + 8), S)
+
+
+@settings(max_examples=200, deadline=None)
+@given(layouts(max_d=3, max_r=1, max_size=48), st.data())
+def test_slice_semantics(L, data):
+    shape = data.draw(st.sampled_from(factorizations(L.size)))
+    try:
+        group(L, shape)
+    except GroupingError:
+        return
+    starts, sizes = [], []
+    for s in shape:
+        b = data.draw(st.integers(0, s - 1))
+        t = data.draw(st.integers(1, s - b))
+        starts.append(b)
+        sizes.append(t)
+    try:
+        out = slice_layout(L, starts, sizes, shape)
+    except (SliceError, GroupingError):
+        return
+    assert out.admits(sizes)
+    for u_flat in range(math.prod(sizes)):
+        u, rem = [], u_flat
+        for t in reversed(sizes):
+            u.append(rem % t)
+            rem //= t
+        u = list(reversed(u))
+        shifted = [a + b for a, b in zip(u, starts)]
+        assert out.call_shaped(u, sizes) == L.call_shaped(shifted, shape), (
+            L, shape, starts, sizes, u,
+        )
+
+
+def test_slice_full_region_is_identity():
+    L = strided((4, 6), (6, 1))
+    out = slice_layout(L, (0, 0), (4, 6), (4, 6))
+    assert layouts_equal(out, L)
+
+
+def test_slice_one_wrap():
+    # region straddling exactly one boundary symmetrically
+    L = from_shape((4, 4))
+    # rows 1..2 of dim0? one-wrap applies on regions like [2,6) of a
+    # grouped (4,4) flattened dim — use 1-D view:
+    L1 = from_shape((16,))
+    out = slice_layout(L1, (6,), (4,), (16,))
+    for u in range(4):
+        assert out.call_shaped((u,), (4,)) == L1.call_shaped((u + 6,), (16,))

@@ -1,0 +1,147 @@
+"""Deeper algebraic laws of the Axe operators (beyond the paper's
+worked examples): tile associativity, span multiplicativity, slice
+composition, group/ungroup identity, canonical-form uniqueness under
+the gap condition."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (
+    GroupingError,
+    It,
+    Layout,
+    SliceError,
+    canonicalize,
+    from_shape,
+    group,
+    layouts_equal,
+    satisfies_gap_condition,
+    slice_layout,
+    strided,
+    tile,
+    tile_of,
+)
+from repro.core.za import ZA
+
+AXES = ["m", "x"]
+
+
+def small_layouts(max_size=8):
+    return st.builds(
+        lambda d: Layout(tuple(d)),
+        st.lists(
+            st.builds(It, st.integers(1, 4), st.integers(1, 6), st.sampled_from(AXES)),
+            min_size=1, max_size=2,
+        ),
+    ).filter(lambda L: L.size <= max_size)
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_layouts(4), small_layouts(4), small_layouts(4))
+def test_tile_associativity(A, B, C):
+    """(A ⊗ B) ⊗ C == A ⊗ (B ⊗ C) as induced maps."""
+    sa, sb, sc = (A.size,), (B.size,), (C.size,)
+    AB, s_ab = tile(A, sa, B, sb)
+    left, _ = tile(AB, (A.size * B.size,), C, sc)
+    BC, s_bc = tile(B, sb, C, sc)
+    right, _ = tile(A, sa, BC, (B.size * C.size,))
+    assert left.enumerate_map() == right.enumerate_map()
+
+
+@settings(max_examples=80, deadline=None)
+@given(small_layouts(6), small_layouts(6))
+def test_span_multiplicative_under_tile(A, B):
+    """span_a(A ⊗ B) == span over the scaled union — for injective-ish
+    layouts the tiled span per axis equals span_a(A)·span_b-interval."""
+    T, _ = tile(A, (A.size,), B, (B.size,))
+    spans_b = B.span()
+    for ax in T.axes():
+        sa = A.span().get(ax, 1)
+        sb = spans_b.get(ax, 1)
+        # tiled span = (sa-1)*sb + sb = sa*sb when strides align (Lemma C.1
+        # contributions add): verify against brute force instead of formula
+        coords = [c[ax] for c in T.all_coords()]
+        assert T.span().get(ax, 1) == max(coords) - min(coords) + 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 4), st.data())
+def test_slice_composition(r0, r1, data):
+    """slice(slice(L, a), b) == slice(L, a+b)."""
+    shape = (r0 * 2, r1 * 2)
+    L = from_shape(shape)
+    a = (data.draw(st.integers(0, r0)), data.draw(st.integers(0, r1)))
+    size1 = (shape[0] - a[0], shape[1] - a[1])
+    try:
+        inner = slice_layout(L, a, size1, shape)
+    except SliceError:
+        return
+    b = (data.draw(st.integers(0, size1[0] - 1)), data.draw(st.integers(0, size1[1] - 1)))
+    size2 = (size1[0] - b[0], size1[1] - b[1])
+    try:
+        twice = slice_layout(inner, b, size2, size1)
+        once = slice_layout(L, (a[0] + b[0], a[1] + b[1]), size2, shape)
+    except SliceError:
+        return
+    assert twice.enumerate_map() == once.enumerate_map()
+
+
+@settings(max_examples=100, deadline=None)
+@given(small_layouts(16), st.data())
+def test_group_is_identity_on_map(L, data):
+    facs = [(L.size,)]
+    for a in range(2, L.size + 1):
+        if L.size % a == 0:
+            facs.append((a, L.size // a))
+    shape = data.draw(st.sampled_from(facs))
+    try:
+        g = group(L, shape)
+    except GroupingError:
+        return
+    assert layouts_equal(g.layout, L)
+
+
+def test_canonical_uniqueness_under_gc():
+    """Two structurally different (D,R,O) with the same induced map must
+    canonicalize identically when R satisfies saturation+GC (Thm A.14)."""
+    # same map, different factorings + split replication
+    L1 = Layout((It(4, 2, "m"),), (It(2, 16, "x"),), ZA.single("x", 1))
+    L2 = Layout(
+        (It(2, 4, "m"), It(2, 2, "m")),
+        (It(2, 16, "x"),),
+        ZA.single("x", 1),
+    )
+    assert satisfies_gap_condition(L1)
+    assert L1.enumerate_map() == L2.enumerate_map()
+    assert layouts_equal(L1, L2)
+    c1, c2 = canonicalize(L1), canonicalize(L2)
+    assert c1.D == c2.D and c1.R == c2.R and c1.O == c2.O
+
+
+def test_tile_of_with_replication():
+    """A = C ⊗ B where C carries replication — recovery keeps R."""
+    C = Layout((It(2, 1, "m"),), (It(2, 4, "x"),))
+    B = strided((4,), (1,))
+    T, _ = tile(C, (2,), B, (4,))
+    rec = tile_of(T, (8,), B, (4,))
+    assert rec is not None
+    C2, _ = rec
+    T2, _ = tile(C2, (2,), B, (4,))
+    assert T2.enumerate_map() == T.enumerate_map()
+
+
+def test_offsets_propagate_through_tile():
+    A = Layout((It(2, 1, "m"),), (), ZA.single("m", 3))
+    B = Layout((It(4, 1, "m"),), (), ZA.single("m", 1))
+    T, S_T = tile(A, (2,), B, (4,))
+    # O_T = O_A * span(B) + O_B = 3*4 + 1 = 13
+    assert T.O == ZA.single("m", 13)
+    # semantic check via brute force
+    spans = B.span()
+    for x in range(2):
+        for y in range(4):
+            fa = {c.scale_by(spans) for c in A(x)}
+            fb = B(y)
+            want = frozenset(ca + cb for ca in fa for cb in fb)
+            assert T.call_shaped((x, y), S_T) == want
