@@ -6,8 +6,21 @@ schedule) in interpret mode; the derived column reports achieved
 GFLOP/s and the Axe-verified MXU tiling the kernel would use on TPU.
 Weight shapes follow the paper's eval set (Qwen3 / LLaMA-3.1 / Gemma-2),
 scaled 1/4 in each dim to keep CPU wall-time sane.
+
+Modes (``python benchmarks/bench_gemm.py [--default | --tuned]``):
+
+  --default  time the fixed default dispatch only
+  --tuned    additionally run the autotuner per shape (populating the
+             on-disk schedule cache at ``repro.tune.default_cache_path()``
+             or ``$REPRO_TUNE_CACHE``) and report tuned vs default µs
 """
 from __future__ import annotations
+
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # script mode: make `benchmarks.*` importable
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +41,10 @@ SHAPES = [
 ]
 
 
-def run() -> list:
+def run(mode: str = "default") -> list:
+    from repro import tune
+
+    tuned = mode == "tuned"
     rows = []
     key = jax.random.PRNGKey(0)
     for name, m, k, n in SHAPES:
@@ -42,10 +58,50 @@ def run() -> list:
         d = derive_tiling((m, n), tile, jnp.bfloat16)
         rows.append(row(f"gemm.{name}", us,
                         f"{gflops:.1f}GFLOP/s xla; tpu_tile={tile} mxu={d.mxu_aligned}"))
+        if tuned:
+            rep = tune.autotune_matmul(a, b)
+            # delta against the default (XLA) candidate measured in the
+            # same autotune loop — back-to-back, so not timing noise
+            meas = dict(rep.measurements)
+            base = meas.get("xla")
+            if rep.cached or base is None:
+                derived = f"sched={rep.schedule.describe()} cached={rep.cached}"
+            else:
+                delta = (base - rep.us) / base * 100.0
+                derived = (f"sched={rep.schedule.describe()} "
+                           f"default={base:.1f}us delta={delta:+.1f}%")
+            rows.append(row(f"gemm.{name}.tuned", rep.us, derived))
     # kernel-vs-oracle validation at one shape (interpret mode)
     a = jax.random.normal(key, (256, 512), jnp.float32)
     b = jax.random.normal(key, (512, 256), jnp.float32)
     got = kops.matmul(a, b, block_m=128, block_n=128, block_k=256)
     err = float(jnp.max(jnp.abs(got - kref.matmul_ref(a, b))))
     rows.append(row("gemm.pallas_check", 0.0, f"max_err={err:.2e}"))
+    if tuned:
+        from repro.tune import cache as tcache
+
+        c = tune.default_cache()
+        path = c.path if c.path is not None else tcache.default_cache_path()
+        rows.append(row("gemm.schedule_cache", 0.0, f"entries={len(c)} path={path}"))
     return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--tuned", action="store_true",
+                   help="autotune each shape and report tuned vs default")
+    g.add_argument("--default", dest="default_", action="store_true",
+                   help="fixed default schedules only (the default)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    for line in run("tuned" if args.tuned else "default"):
+        print(line)
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

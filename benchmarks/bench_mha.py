@@ -2,10 +2,21 @@
 Trainium workload, adapted): full-materialization attention vs the
 blocked online-softmax schedule (identical math to the Pallas kernel),
 plus a kernel-vs-oracle check in interpret mode.
+
+Modes (``python benchmarks/bench_mha.py [--default | --tuned]``):
+
+  --default  fixed chunk=256 blocked schedule
+  --tuned    autotune the blocked schedule's chunk size per length
+             (persisted in the schedule cache) and report the delta
 """
 from __future__ import annotations
 
 import functools
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # script mode: make `benchmarks.*` importable
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +28,10 @@ from repro.models import attention as attn_mod
 LENS = [512, 1024, 2048]
 
 
-def run() -> list:
+def run(mode: str = "default") -> list:
+    from repro import tune
+
+    tuned = mode == "tuned"
     rows = []
     cfgish = type("C", (), {"num_heads": 8, "num_kv_heads": 8, "head_dim": 64})()
     b, h, hd = 1, 8, 64
@@ -34,6 +48,17 @@ def run() -> list:
         flops = 4 * b * h * s * s * hd
         rows.append(row(f"mha.full.s{s}", us_full, f"{flops/(us_full*1e-6)/1e9:.1f}GFLOP/s"))
         rows.append(row(f"mha.blocked.s{s}", us_blk, f"{flops/(us_blk*1e-6)/1e9:.1f}GFLOP/s"))
+        if tuned:
+            rep = tune.autotune_mha_blocked(q, k, v)
+            meas = dict(rep.measurements)
+            base = meas.get("xla:chunk=256")  # the --default chunk
+            if rep.cached or base is None:
+                derived = f"sched={rep.schedule.describe()} cached={rep.cached}"
+            else:
+                delta = (base - rep.us) / base * 100.0
+                derived = (f"sched={rep.schedule.describe()} "
+                           f"default={base:.1f}us delta={delta:+.1f}%")
+            rows.append(row(f"mha.blocked.s{s}.tuned", rep.us, derived))
     # Pallas kernel check (interpret) on one shape
     q = jax.random.normal(jax.random.PRNGKey(7), (1, 2, 256, 64), jnp.float32)
     kk = jax.random.normal(jax.random.PRNGKey(8), (1, 2, 256, 64), jnp.float32)
@@ -42,3 +67,24 @@ def run() -> list:
     err = float(jnp.max(jnp.abs(got - kref.attention_ref(q, kk, vv, causal=True))))
     rows.append(row("mha.pallas_check", 0.0, f"max_err={err:.2e}"))
     return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--tuned", action="store_true",
+                   help="autotune the blocked chunk size per length")
+    g.add_argument("--default", dest="default_", action="store_true",
+                   help="fixed default schedules only (the default)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    for line in run("tuned" if args.tuned else "default"):
+        print(line)
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,64 @@ def derive_blockspec(
     return d.grid, pl.BlockSpec(d.tile, index_map)
 
 
+def candidate_blocks(
+    dim: int,
+    *,
+    minimum: int,
+    prefer: Sequence[int] = (512, 256, 128),
+) -> Tuple[int, ...]:
+    """All block sizes from ``prefer`` that divide ``dim`` and respect
+    the alignment ``minimum`` — the planner's per-dimension candidate
+    set. Falls back to the largest aligned divisor (or ``dim`` itself
+    for small problems) so the set is never empty when a valid tiling
+    exists at all."""
+    dim = int(dim)
+    out = [c for c in prefer if c <= dim and dim % c == 0 and c % minimum == 0]
+    if not out:
+        if dim < minimum:
+            out.append(dim)  # whole (sub-atom) dim: one grid cell
+        else:
+            best = max(
+                (d for d in range(minimum, dim + 1, minimum) if dim % d == 0),
+                default=0,
+            )
+            if best:
+                out.append(best)
+    return tuple(sorted(set(out), reverse=True))
+
+
+def candidate_tilings(
+    shape: Sequence[int],
+    dtype=jnp.float32,
+    *,
+    mxu: bool = True,
+    prefer: Sequence[int] = (512, 256, 128),
+    vmem_budget_bytes: int = 8 * 1024 * 1024,
+) -> Tuple[TileDerivation, ...]:
+    """Axe-validated 2-D tilings of ``shape[-2:]`` the planner may rank.
+
+    Every returned derivation passed ``derive_tiling`` (the App. F
+    direct-sum check) and fits the VMEM budget; invalid combinations are
+    silently dropped, so an empty result means "no Pallas schedule
+    exists for this shape" and the planner must fall back to XLA."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) < 2:
+        return ()
+    itemsize = jnp.dtype(dtype).itemsize
+    sub, lane = vreg_atom(dtype)
+    min_r, min_c = (MXU_TILE if mxu else (sub, lane))
+    out = []
+    for r in candidate_blocks(shape[-2], minimum=min_r, prefer=prefer):
+        for c in candidate_blocks(shape[-1], minimum=min_c, prefer=prefer):
+            if r * c * itemsize > vmem_budget_bytes:
+                continue
+            try:
+                out.append(derive_tiling(shape[-2:], (r, c), dtype))
+            except TilingError:
+                continue
+    return tuple(out)
+
+
 def pick_tile(
     shape: Sequence[int],
     dtype=jnp.float32,

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import collective as coll
 from repro.core.blockspec import TilingError, derive_tiling
 from repro.core.dtensor import DTensorSpec
@@ -46,23 +47,53 @@ def matmul(
     *,
     prefer_kernel: bool = True,
     out_dtype=None,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    schedule=None,
 ) -> jax.Array:
-    """Dispatch a 2-D matmul to the best schedule for the current scope."""
+    """Dispatch a 2-D matmul to the best schedule for the current scope.
+
+    At DEVICE/GRID scope the schedule comes from, in priority order:
+    an explicit ``schedule`` object, explicit ``block_*`` sizes (forces
+    the Pallas kernel with those tiles), or the planner/autotuner
+    (``repro.tune.get_schedule`` — forced-env > cached-measurement >
+    roofline-ranked plan). An infeasible kernel schedule (TilingError)
+    falls back to the XLA dot rather than failing the trace.
+    """
     scope = current_scope()
     out_dtype = out_dtype or a.dtype
     if scope == Scope.BLOCK:
         return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
     if scope in (Scope.DEVICE, Scope.GRID) and prefer_kernel and a.ndim == b.ndim == 2:
-        try:
-            derive_tiling((a.shape[0], b.shape[1]), (min(block_m, a.shape[0]), min(block_n, b.shape[1])), a.dtype)
-            from repro.kernels import ops as kops
+        from repro import tune
 
-            return kops.matmul(a, b, block_m=block_m, block_n=block_n, block_k=block_k).astype(out_dtype)
-        except (TilingError, ImportError):
-            pass
+        if schedule is None:
+            if block_m is not None or block_n is not None or block_k is not None:
+                schedule = tune.Schedule(
+                    "matmul", "kernel",
+                    (("bm", block_m or 256), ("bn", block_n or 256), ("bk", block_k or 512)),
+                )
+            else:
+                schedule = tune.get_schedule(
+                    "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
+                )
+        if schedule.impl == "kernel":
+            bm = schedule.block("bm", 256)
+            bn = schedule.block("bn", 256)
+            bk = schedule.block("bk", 512)
+            try:
+                derive_tiling(
+                    (a.shape[0], b.shape[1]),
+                    (min(bm, a.shape[0]), min(bn, b.shape[1])), a.dtype,
+                )
+                from repro.kernels import ops as kops
+
+                return kops.matmul(
+                    a, b, block_m=bm, block_n=bn, block_k=bk
+                ).astype(out_dtype)
+            except (TilingError, ImportError):
+                pass
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
 
@@ -71,8 +102,7 @@ def collective_matmul(
     b: jax.Array,
     *,
     axis_name: str,
-    mode: str = "psum_scatter",
-    overlap: bool = True,
+    overlap: Optional[bool] = None,
 ) -> jax.Array:
     """K-sharded GEMM + reduce-scatter inside shard_map (paper §4.2).
 
@@ -86,8 +116,19 @@ def collective_matmul(
     computes one chunk's partial GEMM and accumulates into a rotating
     buffer (ppermute), so ICI transfer of chunk t overlaps the MXU work
     of chunk t+1 — the paper's fused GEMM+RS kernel, on ICI.
+    overlap=None  — the planner ranks the two schedules with the
+    roofline collective model and picks (``repro.tune``).
     """
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
+    if overlap is None:
+        from repro import tune
+
+        sched = tune.get_schedule(
+            "collective_matmul",
+            shapes=(a.shape, b.shape, (p,)),
+            dtypes=(a.dtype, b.dtype),
+        )
+        overlap = sched.impl == "ring"
     if not overlap or p == 1:
         partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
         return jax.lax.psum_scatter(

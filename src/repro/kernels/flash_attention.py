@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -82,13 +84,25 @@ def flash_attention_pallas(
     causal: bool = False,
     window: int | None = None,
     scale: float | None = None,
-    block_q: int = 128,
-    block_kv: int = 128,
+    block_q: int | None = None,
+    block_kv: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     b, h, sq, d = q.shape
     _, _, skv, _ = k.shape
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    if block_q is None or block_kv is None:
+        # planner-chosen default blocks (kernel-only plan; cached
+        # measurements from the autotuner win over the roofline rank)
+        from repro import tune
+
+        sched = tune.get_schedule(
+            "flash_attention", shapes=(q.shape, k.shape), dtypes=(q.dtype, k.dtype),
+            layout_sig="causal" if causal else "dense",  # matches the autotuner's key
+            impl="kernel",
+        )
+        block_q = block_q or sched.block("bq", 128)
+        block_kv = block_kv or sched.block("bkv", 128)
     block_q = min(block_q, sq)
     block_kv = min(block_kv, skv)
     assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
@@ -125,7 +139,7 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro import compat
 from repro.core.blockspec import derive_tiling
 
 
@@ -42,16 +43,30 @@ def matmul_pallas(
     a: jax.Array,
     b: jax.Array,
     *,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """C[M, N] = A[M, K] @ B[K, N] with f32 VMEM accumulation."""
+    """C[M, N] = A[M, K] @ B[K, N] with f32 VMEM accumulation.
+
+    Unset block sizes are resolved by the schedule planner
+    (``repro.tune``, kernel-only plan: cached measurement if one
+    exists, else the roofline-ranked Axe-valid tiling)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
+    if block_m is None or block_n is None or block_k is None:
+        from repro import tune
+
+        sched = tune.get_schedule(
+            "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
+            impl="kernel",
+        )
+        block_m = block_m or sched.block("bm", 256)
+        block_n = block_n or sched.block("bn", 256)
+        block_k = block_k or sched.block("bk", 512)
     block_m = min(block_m, m)
     block_n = min(block_n, n)
     block_k = min(block_k, k)
@@ -74,7 +89,7 @@ def matmul_pallas(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro import compat
 from repro.core.blockspec import derive_tiling
 
 
@@ -40,15 +41,26 @@ def moe_gemm_pallas(
     x: jax.Array,  # [E, C, d]
     w: jax.Array,  # [E, d, f]
     *,
-    block_c: int = 128,
-    block_f: int = 256,
-    block_d: int = 512,
+    block_c: int | None = None,
+    block_f: int | None = None,
+    block_d: int | None = None,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
     e, c, d = x.shape
     e2, d2, f = w.shape
     assert e == e2 and d == d2, (x.shape, w.shape)
+    if block_c is None or block_f is None or block_d is None:
+        # planner-chosen default blocks (kernel-only plan)
+        from repro import tune
+
+        sched = tune.get_schedule(
+            "moe_gemm", shapes=(x.shape, w.shape), dtypes=(x.dtype, w.dtype),
+            impl="kernel",
+        )
+        block_c = block_c or sched.block("bc", 128)
+        block_f = block_f or sched.block("bf", 256)
+        block_d = block_d or sched.block("bd", 512)
     block_c = min(block_c, c)
     block_f = min(block_f, f)
     block_d = min(block_d, d)
@@ -68,7 +80,7 @@ def moe_gemm_pallas(
         out_specs=pl.BlockSpec((1, block_c, block_f), lambda ei, ci, fi, ki: (ei, ci, fi)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -3,6 +3,16 @@
 On CPU (this container) kernels execute in interpret mode — the kernel
 body runs in Python per grid step, validating the exact TPU program. On
 a TPU backend the same calls compile to Mosaic.
+
+Block sizes default to None, which defers to the schedule planner
+(``repro.tune``): a cached autotuner measurement if one exists for the
+(op, shapes, dtypes, backend) key, else the roofline-ranked Axe-valid
+tiling. Pass explicit sizes to pin a schedule by hand.
+
+Resolution happens *before* the jitted inner call, so the schedule is
+part of the static argument key: when an in-process autotune run (or
+``tune.use_cache`` / the env knobs) changes the answer, the next call
+traces with the new blocks instead of replaying a stale cached trace.
 """
 from __future__ import annotations
 
@@ -21,30 +31,77 @@ def _interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def matmul(a, b, *, block_m: int = 256, block_n: int = 256, block_k: int = 512):
+def _matmul_jit(a, b, *, block_m: int, block_n: int, block_k: int):
     return _mm.matmul_pallas(
         a, b, block_m=block_m, block_n=block_n, block_k=block_k, interpret=_interpret()
     )
 
 
+def matmul(a, b, *, block_m: int | None = None, block_n: int | None = None,
+           block_k: int | None = None):
+    if block_m is None or block_n is None or block_k is None:
+        from repro import tune
+
+        sched = tune.get_schedule(
+            "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
+            impl="kernel",
+        )
+        block_m = block_m or sched.block("bm", 256)
+        block_n = block_n or sched.block("bn", 256)
+        block_k = block_k or sched.block("bk", 512)
+    return _matmul_jit(a, b, block_m=block_m, block_n=block_n, block_k=block_k)
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "scale", "block_q", "block_kv")
 )
-def flash_attention(
-    q, k, v, *, causal: bool = False, window=None, scale=None,
-    block_q: int = 128, block_kv: int = 128,
-):
+def _flash_attention_jit(q, k, v, *, causal, window, scale, block_q: int, block_kv: int):
     return _fa.flash_attention_pallas(
         q, k, v, causal=causal, window=window, scale=scale,
         block_q=block_q, block_kv=block_kv, interpret=_interpret(),
     )
 
 
+def flash_attention(
+    q, k, v, *, causal: bool = False, window=None, scale=None,
+    block_q: int | None = None, block_kv: int | None = None,
+):
+    if block_q is None or block_kv is None:
+        from repro import tune
+
+        sched = tune.get_schedule(
+            "flash_attention", shapes=(q.shape, k.shape), dtypes=(q.dtype, k.dtype),
+            layout_sig="causal" if causal else "dense",
+            impl="kernel",
+        )
+        block_q = block_q or sched.block("bq", 128)
+        block_kv = block_kv or sched.block("bkv", 128)
+    return _flash_attention_jit(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
-def moe_gemm(x, w, *, block_c: int = 128, block_f: int = 256, block_d: int = 512):
+def _moe_gemm_jit(x, w, *, block_c: int, block_f: int, block_d: int):
     return _mg.moe_gemm_pallas(
         x, w, block_c=block_c, block_f=block_f, block_d=block_d, interpret=_interpret()
     )
+
+
+def moe_gemm(x, w, *, block_c: int | None = None, block_f: int | None = None,
+             block_d: int | None = None):
+    if block_c is None or block_f is None or block_d is None:
+        from repro import tune
+
+        sched = tune.get_schedule(
+            "moe_gemm", shapes=(x.shape, w.shape), dtypes=(x.dtype, w.dtype),
+            impl="kernel",
+        )
+        block_c = block_c or sched.block("bc", 128)
+        block_f = block_f or sched.block("bf", 256)
+        block_d = block_d or sched.block("bd", 512)
+    return _moe_gemm_jit(x, w, block_c=block_c, block_f=block_f, block_d=block_d)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows"))

@@ -298,6 +298,17 @@ def analyze(text: str, *, total_devices: int = 1) -> HloCost:
     )
 
 
+def analyze_jit(fn, *args, total_devices: int = 1) -> HloCost:
+    """Lower + compile ``fn`` for ``args`` (arrays or ShapeDtypeStructs)
+    on the current backend and analyze the optimized HLO. Used by the
+    schedule planner to refine the XLA-candidate cost with the real
+    post-fusion program instead of the analytic traffic model."""
+    import jax
+
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze(text, total_devices=total_devices)
+
+
 def top_instructions(text: str, n: int = 20):
     """(bytes, op, name, shape, mult) rows, largest first — profiling aid."""
     comps = parse_hlo(text)

@@ -73,6 +73,47 @@ def collective_bytes_of_hlo(hlo_text: str) -> Dict[str, int]:
     return {"bytes": out, "counts": counts}
 
 
+# Per-backend (peak FLOP/s, memory bandwidth B/s) for the schedule
+# planner's analytic ranking. TPU numbers are the v5e chip constants;
+# cpu/gpu are deliberately rough — the planner only needs relative
+# ordering of candidate schedules, and the autotuner's measurements
+# override the model wherever it matters.
+BACKEND_PEAKS = {
+    "tpu": (meshmod.PEAK_FLOPS_BF16, meshmod.HBM_BW),
+    "gpu": (100e12, 1000e9),
+    "cpu": (200e9, 50e9),
+}
+
+# Pallas kernels execute in interpret mode (Python per grid step) off
+# TPU; the planner multiplies their compute term by this so an
+# interpreted kernel never out-ranks a compiled XLA schedule.
+INTERPRET_PENALTY = 1e4
+
+
+def schedule_time(
+    *,
+    flops: float,
+    mem_bytes: float,
+    comm_bytes: float = 0.0,
+    backend: str = "tpu",
+    compute_penalty: float = 1.0,
+) -> Tuple[float, Dict[str, float]]:
+    """Three-term roofline estimate for one candidate schedule.
+
+    Returns ``(seconds, terms)`` where seconds is the max of the terms —
+    the same model ``derive_terms`` applies to whole compiled programs,
+    reduced to a single operator so the planner can rank candidates.
+    """
+    peak_flops, mem_bw = BACKEND_PEAKS.get(backend, BACKEND_PEAKS["cpu"])
+    ici_bw = meshmod.ICI_BW_PER_LINK * meshmod.ICI_LINKS
+    terms = {
+        "compute": compute_penalty * flops / peak_flops,
+        "memory": mem_bytes / mem_bw,
+        "collective": comm_bytes / ici_bw,
+    }
+    return max(terms.values()), terms
+
+
 @dataclasses.dataclass
 class RooflineTerms:
     compute_s: float

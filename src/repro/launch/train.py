@@ -47,10 +47,9 @@ def main():
 
     n_dev = len(jax.devices())
     data_deg = args.mesh_data or (n_dev // args.mesh_model)
-    mesh = jax.make_mesh(
-        (data_deg, args.mesh_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro import compat
+
+    mesh = compat.make_mesh((data_deg, args.mesh_model), ("data", "model"))
     mesh_shape = rules.mesh_shape_of(mesh)
     act_sharding.set_mesh(mesh if n_dev > 1 else None)
 

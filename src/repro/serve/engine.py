@@ -13,16 +13,43 @@ import numpy as np
 
 @dataclasses.dataclass
 class ServeEngine:
+    """``schedule_cache`` pins the process-wide schedule cache
+    (``repro.tune``) to a server-local file, so operator dispatches
+    traced inside prefill/decode reuse schedules a prior autotune run
+    measured for this model's shapes instead of re-planning per
+    process. ``force_schedule`` is the serve-time escape hatch — a
+    ``Schedule.parse`` spec (e.g. ``"xla"``) applied to every dispatch
+    while this engine's jitted functions trace."""
+
     api: Any                 # ModelAPI
     batch_size: int
     max_seq: int
     temperature: float = 0.0
     rng_seed: int = 0
+    schedule_cache: Optional[str] = None
+    force_schedule: Optional[str] = None
 
     def __post_init__(self):
+        from repro import tune
+
+        if self.schedule_cache is not None:
+            tune.use_cache(self.schedule_cache)
         self.params = None
-        self._decode = jax.jit(self.api.decode_step)
-        self._prefill = jax.jit(self.api.prefill)
+        self._decode = self._scheduled(jax.jit(self.api.decode_step))
+        self._prefill = self._scheduled(jax.jit(self.api.prefill))
+
+    def _scheduled(self, fn):
+        """Hold the forced-schedule context across calls so jit tracing
+        (which happens lazily, on first call) sees it."""
+        if self.force_schedule is None:
+            return fn
+        from repro import tune
+
+        def wrapped(*args, **kwargs):
+            with tune.force_schedule(self.force_schedule):
+                return fn(*args, **kwargs)
+
+        return wrapped
 
     def load(self, params) -> None:
         self.params = params

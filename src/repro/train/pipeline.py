@@ -85,7 +85,9 @@ def pipeline_apply(
         return outputs
 
     spec_params = jax.tree.map(lambda _: P(axis_name), stage_params)
-    return jax.shard_map(
+    from repro import compat
+
+    return compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(spec_params, P()),

@@ -88,7 +88,13 @@ def make_train_step(
 @dataclasses.dataclass
 class Trainer:
     """Host-side driver. Deterministic data (step-addressable) + atomic
-    checkpoints give exactly-once batch semantics across restarts."""
+    checkpoints give exactly-once batch semantics across restarts.
+
+    ``tune_cache_path`` pins the process-wide schedule cache
+    (``repro.tune``) to a job-local file: dispatches traced inside the
+    train step reuse previously measured schedules, and the cache file
+    is flushed alongside every checkpoint so restarts keep the tuning.
+    """
 
     train_step: Callable
     data: Any                      # SyntheticLMData-like (batch_at)
@@ -96,8 +102,15 @@ class Trainer:
     checkpoint_every: int = 100
     step_deadline_s: Optional[float] = None  # straggler watchdog
     on_straggler: Optional[Callable[[int, float], None]] = None
+    tune_cache_path: Optional[str] = None
 
     slow_steps: int = 0
+
+    def __post_init__(self):
+        if self.tune_cache_path is not None:
+            from repro import tune
+
+            tune.use_cache(self.tune_cache_path)
 
     def restore_or_init(self, state: TrainState) -> TrainState:
         if self.checkpoint_manager is None:
@@ -125,4 +138,8 @@ class Trainer:
                 and (step + 1) % self.checkpoint_every == 0
             ):
                 self.checkpoint_manager.save(state, step + 1)
+                if self.tune_cache_path is not None:
+                    from repro import tune
+
+                    tune.default_cache().save()
         return state, history

@@ -1,0 +1,161 @@
+"""Schedule planner + autotuner (docs/schedules.md).
+
+The dispatch layer (``core.ops``, ``kernels.ops``) asks this package
+one question — ``get_schedule(op, shapes=..., dtypes=...)`` — and gets
+back a concrete :class:`~repro.tune.schedule.Schedule`. Resolution
+order:
+
+1. **Forced** — the ``force_schedule(...)`` context manager, or the
+   ``REPRO_FORCE_SCHEDULE`` env var (e.g. ``"xla"`` or
+   ``"kernel:bm=128,bn=128,bk=256"``). The escape hatch.
+2. **Disabled** — ``REPRO_TUNE_DISABLE=1`` returns the pre-planner
+   hardcoded defaults (``DEFAULT_SCHEDULES``) unconditionally.
+3. **Cached** — an on-disk hit (measured by a previous autotune run)
+   keyed by (op, shapes, dtypes, layout signature, backend).
+4. **Planned** — ``planner.plan`` enumerates Axe-validated candidates
+   and ranks them with the roofline model; the winner is memoized in
+   the in-memory cache (source "planned", never written to disk —
+   only measurements earn persistence).
+
+``get_schedule`` is pure Python and deterministic, so it is safe to
+call at jax trace time.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Iterator, Optional, Sequence, Union
+
+import jax
+
+from repro.tune import planner
+from repro.tune.autotuner import (
+    TuneReport,
+    autotune_flash_attention,
+    autotune_matmul,
+    autotune_mha_blocked,
+    autotune_moe_gemm,
+    measure,
+)
+from repro.tune.cache import ScheduleCache, default_cache, default_cache_path, use_cache
+from repro.tune.schedule import (
+    InvalidImplError,
+    Schedule,
+    layout_signature,
+    schedule_key,
+)
+
+FORCE_ENV = "REPRO_FORCE_SCHEDULE"
+DISABLE_ENV = "REPRO_TUNE_DISABLE"
+
+#: the pre-planner hardcoded dispatch parameters, kept as the
+#: ``REPRO_TUNE_DISABLE=1`` behavior and the last-resort fallback
+DEFAULT_SCHEDULES = {
+    "matmul": Schedule("matmul", "kernel", (("bm", 256), ("bn", 256), ("bk", 512))),
+    "flash_attention": Schedule("flash_attention", "kernel", (("bq", 128), ("bkv", 128))),
+    "moe_gemm": Schedule("moe_gemm", "kernel", (("bc", 128), ("bf", 256), ("bd", 512))),
+    "mha_blocked": Schedule("mha_blocked", "xla", (("chunk", 256),)),
+    "collective_matmul": Schedule("collective_matmul", "ring"),
+}
+
+_force = threading.local()
+
+
+@contextlib.contextmanager
+def force_schedule(spec: Union[str, Schedule, None]) -> Iterator[None]:
+    """Pin every ``get_schedule`` call in this thread to ``spec``
+    (string form per ``Schedule.parse``). ``None`` re-enables planning
+    inside an outer forced region."""
+    prev = getattr(_force, "spec", None)
+    _force.spec = spec
+    try:
+        yield
+    finally:
+        _force.spec = prev
+
+
+def _forced_spec() -> Union[str, Schedule, None]:
+    ctx = getattr(_force, "spec", None)
+    if ctx is not None:
+        return ctx
+    return os.environ.get(FORCE_ENV) or None
+
+
+def get_schedule(
+    op: str,
+    *,
+    shapes: Sequence[Sequence[int]],
+    dtypes: Sequence,
+    layout_sig: str = "dense",
+    backend: Optional[str] = None,
+    impl: Optional[str] = None,
+    cache: Optional[ScheduleCache] = None,
+) -> Schedule:
+    """Resolve the schedule for one operator dispatch (see module doc
+    for the forced → disabled → cached → planned resolution order).
+
+    A forced spec whose impl is not valid for this op (e.g.
+    ``REPRO_FORCE_SCHEDULE=xla`` reaching a flash_attention dispatch)
+    simply does not apply: resolution falls through to the normal
+    path rather than crashing the trace. A *malformed* spec still
+    raises."""
+    forced = _forced_spec()
+    if forced is not None:
+        if isinstance(forced, Schedule):
+            if forced.op == op:
+                return forced
+        else:
+            try:
+                return Schedule.parse(forced, op=op)
+            except InvalidImplError:
+                pass  # spec targets a different op: resolve normally
+    if os.environ.get(DISABLE_ENV, "") not in ("", "0"):
+        return DEFAULT_SCHEDULES[op]
+
+    backend = backend or jax.default_backend()
+    cache = cache if cache is not None else default_cache()
+    if impl is not None:
+        # an unrestricted entry (where the autotuner persists winners)
+        # satisfies an impl-restricted query when the impls agree —
+        # this is how measured kernel blocks reach the kernel defaults
+        hit = cache.get(schedule_key(op, shapes, dtypes, layout_sig, backend))
+        if hit is not None and hit.schedule.impl == impl:
+            return hit.schedule
+    # impl-restricted answers key separately so a kernel-only pick
+    # never shadows (or gets shadowed by) the unrestricted dispatch
+    key = schedule_key(op if impl is None else f"{op}#{impl}",
+                       shapes, dtypes, layout_sig, backend)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit.schedule
+
+    sched = planner.best_schedule(op, shapes=shapes, dtypes=dtypes, backend=backend, impl=impl)
+    if sched is None:
+        sched = DEFAULT_SCHEDULES[op]
+    cache.put(key, sched, source="planned", persist=False)
+    return sched
+
+
+__all__ = [
+    "DEFAULT_SCHEDULES",
+    "DISABLE_ENV",
+    "FORCE_ENV",
+    "InvalidImplError",
+    "Schedule",
+    "ScheduleCache",
+    "TuneReport",
+    "autotune_flash_attention",
+    "autotune_matmul",
+    "autotune_mha_blocked",
+    "autotune_moe_gemm",
+    "default_cache",
+    "default_cache_path",
+    "force_schedule",
+    "get_schedule",
+    "layout_signature",
+    "measure",
+    "planner",
+    "schedule_key",
+    "use_cache",
+]

@@ -1,0 +1,225 @@
+"""Empirical autotuner: measure the planner's top-K candidates and
+persist the winner in the schedule cache.
+
+The planner's analytic ranking is a model; the autotuner is ground
+truth. ``autotune_*`` helpers build a jitted callable per candidate,
+time it (median of a few iterations after warmup), store the fastest
+in the on-disk cache keyed by (op, shapes, dtypes, layout signature,
+backend), and return it. Subsequent ``tune.get_schedule`` calls — from
+``core.ops``, the kernels, serving, training — hit the cache and skip
+both planning and measurement.
+
+Off-TPU, Pallas candidates run in interpret mode; those are only
+measured below ``planner.INTERPRET_MEASURE_FLOPS`` so tuning a
+2048-wide GEMM on a CPU host does not take minutes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.tune import planner
+from repro.tune.cache import ScheduleCache, default_cache
+from repro.tune.schedule import Schedule, schedule_key
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneReport:
+    """Autotune outcome. Iterates as ``(schedule, us)`` for the common
+    unpacking; ``measurements`` holds every candidate timed in the same
+    loop (describe-string → µs), empty on a cache hit."""
+
+    schedule: Schedule
+    us: float
+    measurements: Tuple[Tuple[str, float], ...] = ()
+    cached: bool = False
+
+    def __iter__(self):
+        return iter((self.schedule, self.us))
+
+
+def measure(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (µs) of a callable on this host."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _measurable(cand: planner.Candidate, flops: float, backend: str) -> bool:
+    if cand.schedule.impl != "kernel" or backend == "tpu":
+        return True
+    return flops <= planner.INTERPRET_MEASURE_FLOPS
+
+
+def _tune(
+    op: str,
+    shapes: Sequence[Sequence[int]],
+    dtypes: Sequence,
+    make_callable: Callable[[Schedule], Callable],
+    args: Tuple,
+    *,
+    flops: float,
+    layout_sig: str = "dense",
+    backend: Optional[str] = None,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 4,
+    warmup: int = 1,
+    iters: int = 3,
+) -> TuneReport:
+    backend = backend or jax.default_backend()
+    cache = cache if cache is not None else default_cache()
+    key = schedule_key(op, shapes, dtypes, layout_sig, backend)
+
+    hit = cache.get(key)
+    if hit is not None and hit.source == "measured" and hit.us is not None:
+        return TuneReport(hit.schedule, hit.us, cached=True)
+
+    all_cands = planner.plan(op, shapes=shapes, dtypes=dtypes, backend=backend)
+    cands = [c for c in all_cands if _measurable(c, flops, backend)][:top_k]
+    if not cands:
+        if not all_cands:
+            raise ValueError(f"no candidates for {key}")
+        # nothing measurable (e.g. kernel-only op, off-TPU, too big for
+        # interpret mode): return the planner's pick, unmeasured and
+        # unpersisted, instead of failing the caller
+        return TuneReport(all_cands[0].schedule, float("nan"))
+
+    measurements: List[Tuple[str, float]] = []
+    best: Optional[Tuple[Schedule, float]] = None
+    for cand in cands:
+        try:
+            fn = make_callable(cand.schedule)
+            us = measure(fn, *args, warmup=warmup, iters=iters)
+        except Exception:
+            continue  # candidate failed to compile/run: drop it
+        measurements.append((cand.schedule.describe(), us))
+        if best is None or us < best[1]:
+            best = (cand.schedule, us)
+    if best is None:
+        raise RuntimeError(f"all {len(cands)} candidates failed for {key}")
+
+    cache.put(key, best[0], us=best[1], source="measured")
+    return TuneReport(best[0], best[1], tuple(measurements))
+
+
+# ---------------------------------------------------------------------------
+# op-specific front ends
+# ---------------------------------------------------------------------------
+
+
+def autotune_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 4,
+    iters: int = 3,
+) -> TuneReport:
+    """Tune the 2-D matmul dispatch for these concrete operands."""
+
+    def make(s: Schedule) -> Callable:
+        if s.impl == "xla":
+            return jax.jit(lambda a, b: jnp.dot(a, b, preferred_element_type=jnp.float32)
+                           .astype(a.dtype))
+        from repro.kernels import ops as kops
+
+        bm, bn, bk = s.block("bm"), s.block("bn"), s.block("bk")
+        return lambda a, b: kops.matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
+
+    return _tune(
+        "matmul", (a.shape, b.shape), (a.dtype, b.dtype), make, (a, b),
+        flops=2.0 * a.shape[0] * a.shape[1] * b.shape[1],
+        cache=cache, top_k=top_k, iters=iters,
+    )
+
+
+def autotune_flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = False,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 3,
+    iters: int = 2,
+) -> TuneReport:
+    """Tune the flash-attention kernel's (block_q, block_kv)."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+
+    def make(s: Schedule) -> Callable:
+        from repro.kernels import ops as kops
+
+        bq, bkv = s.block("bq"), s.block("bkv")
+        return lambda q, k, v: kops.flash_attention(
+            q, k, v, causal=causal, block_q=bq, block_kv=bkv)
+
+    return _tune(
+        "flash_attention", (q.shape, k.shape), (q.dtype, k.dtype), make, (q, k, v),
+        flops=4.0 * b * h * sq * skv * d,
+        layout_sig="dense" if not causal else "causal",
+        cache=cache, top_k=top_k, iters=iters,
+    )
+
+
+def autotune_mha_blocked(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = False,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 4,
+    iters: int = 3,
+) -> TuneReport:
+    """Tune the chunk size of the blocked-softmax attention (MESH-scope
+    XLA schedule, [B, S, H, D] operands)."""
+    import functools
+
+    b, s, h, d = q.shape
+
+    def make(sched: Schedule) -> Callable:
+        from repro.models import attention as attn_mod
+
+        chunk = sched.block("chunk", 256)
+        return jax.jit(functools.partial(
+            attn_mod._gqa_blocked, cfg=None, causal=causal, window=None, chunk=chunk))
+
+    return _tune(
+        "mha_blocked", (q.shape, k.shape), (q.dtype, k.dtype), make, (q, k, v),
+        flops=4.0 * b * h * s * s * d,
+        layout_sig="causal" if causal else "dense",
+        cache=cache, top_k=top_k, iters=iters,
+    )
+
+
+def autotune_moe_gemm(
+    x: jax.Array, w: jax.Array,
+    *,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 3,
+    iters: int = 2,
+) -> TuneReport:
+    """Tune the grouped expert GEMM's (block_c, block_f, block_d)."""
+    e, c, d = x.shape
+    f = w.shape[2]
+
+    def make(s: Schedule) -> Callable:
+        if s.impl == "xla":
+            return jax.jit(lambda x, w: jnp.einsum("ecd,edf->ecf", x, w))
+        from repro.kernels import ops as kops
+
+        bc, bf, bd = s.block("bc"), s.block("bf"), s.block("bd")
+        return lambda x, w: kops.moe_gemm(x, w, block_c=bc, block_f=bf, block_d=bd)
+
+    return _tune(
+        "moe_gemm", (x.shape, w.shape), (x.dtype, w.dtype), make, (x, w),
+        flops=2.0 * e * c * d * f,
+        cache=cache, top_k=top_k, iters=iters,
+    )

@@ -1,0 +1,171 @@
+"""On-disk schedule cache.
+
+Winners found by the autotuner (and, optionally, planner picks) are
+persisted as JSON keyed by ``schedule_key(op, shapes, dtypes,
+layout_sig, backend)`` so later processes — trainers, servers,
+benchmarks — skip both planning and re-measurement.
+
+File format (version 1)::
+
+    {
+      "version": 1,
+      "entries": {
+        "matmul|2048x1024;1024x1536|float32,float32|dense|cpu": {
+          "schedule": {"op": "matmul", "impl": "xla", "blocks": []},
+          "us": 1234.5,
+          "source": "measured"
+        }
+      }
+    }
+
+Default location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro_axe/schedules.json``. Writes are atomic
+(tempfile + rename); a corrupt or missing file reads as empty.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import tempfile
+import threading
+from typing import Dict, Optional
+
+from repro.tune.schedule import Schedule
+
+CACHE_VERSION = 1
+CACHE_ENV = "REPRO_TUNE_CACHE"
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    schedule: Schedule
+    us: Optional[float] = None          # measured wall-time, if any
+    source: str = "measured"            # "measured" | "planned" | "forced"
+
+    def to_dict(self) -> Dict:
+        return {"schedule": self.schedule.to_dict(), "us": self.us, "source": self.source}
+
+    @staticmethod
+    def from_dict(d) -> "CacheEntry":
+        return CacheEntry(
+            Schedule.from_dict(d["schedule"]),
+            d.get("us"),
+            str(d.get("source", "measured")),
+        )
+
+
+def default_cache_path() -> pathlib.Path:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return pathlib.Path(env).expanduser()
+    return pathlib.Path.home() / ".cache" / "repro_axe" / "schedules.json"
+
+
+class ScheduleCache:
+    """Thread-safe in-memory map with optional JSON persistence.
+
+    ``path=None`` keeps the cache purely in memory (used for planner
+    memoization and in tests that must not touch the filesystem).
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = pathlib.Path(path) if path is not None else None
+        self._lock = threading.Lock()
+        self._entries: Dict[str, CacheEntry] = {}
+        if self.path is not None:
+            self.load()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: str) -> Optional[CacheEntry]:
+        with self._lock:
+            return self._entries.get(key)
+
+    def put(
+        self,
+        key: str,
+        schedule: Schedule,
+        *,
+        us: Optional[float] = None,
+        source: str = "measured",
+        persist: bool = True,
+    ) -> CacheEntry:
+        entry = CacheEntry(schedule, us, source)
+        with self._lock:
+            self._entries[key] = entry
+        if persist and self.path is not None:
+            self.save()
+        return entry
+
+    def keys(self):
+        with self._lock:
+            return sorted(self._entries)
+
+    # -- persistence ----------------------------------------------------
+    def load(self) -> int:
+        """Merge entries from disk (disk wins); returns entry count."""
+        if self.path is None or not self.path.exists():
+            return 0
+        try:
+            raw = json.loads(self.path.read_text())
+            if raw.get("version") != CACHE_VERSION:
+                return 0
+            loaded = {k: CacheEntry.from_dict(v) for k, v in raw.get("entries", {}).items()}
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError, OSError):
+            return 0
+        with self._lock:
+            self._entries.update(loaded)
+            return len(self._entries)
+
+    def save(self) -> None:
+        """Write the cache file. Only ``source == "measured"`` entries
+        are persisted — planner memoization stays in memory so analytic
+        guesses never masquerade as durable tuning results."""
+        if self.path is None:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self._lock:
+            payload = {
+                "version": CACHE_VERSION,
+                "entries": {
+                    k: e.to_dict()
+                    for k, e in sorted(self._entries.items())
+                    if e.source == "measured"
+                },
+            }
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+_default: Optional[ScheduleCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> ScheduleCache:
+    """Process-wide cache singleton at ``default_cache_path()``."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = ScheduleCache(default_cache_path())
+        return _default
+
+
+def use_cache(path: Optional[os.PathLike]) -> ScheduleCache:
+    """Repoint the process-wide cache (serve/train jobs pin their own
+    cache file alongside checkpoints). Pass None for memory-only."""
+    global _default
+    with _default_lock:
+        _default = ScheduleCache(path)
+        return _default

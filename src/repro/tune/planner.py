@@ -1,0 +1,370 @@
+"""Schedule planner: enumerate candidate schedules for an operator
+dispatch and rank them with the roofline cost model.
+
+This is the §3.2 compiler step made explicit: given operand shapes,
+dtypes, the (canonicalized) Axe layout signature, and a backend, produce
+the ordered list of schedules the dispatch *could* run, each one
+Axe-validated (``core.blockspec.derive_tiling`` — candidates whose grid
+cells are not strided HBM boxes never appear). Ranking is analytic
+(``launch.roofline.schedule_time``); the autotuner refines the top of
+the list empirically.
+
+Enumeration is deterministic: same inputs → same candidate list in the
+same order (ties broken by the schedule's string form).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockspec import MXU_TILE, candidate_tilings, derive_tiling, vreg_atom
+from repro.launch import roofline
+from repro.tune.schedule import Schedule
+
+#: interpreted Pallas kernels are only worth *measuring* off-TPU below
+#: this op size (the autotuner would otherwise spend minutes per shape)
+INTERPRET_MEASURE_FLOPS = 2 * 256**3 * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """A ranked schedule: analytic cost + its roofline terms."""
+
+    schedule: Schedule
+    cost_s: float
+    terms: Tuple[Tuple[str, float], ...]
+
+    @property
+    def terms_dict(self) -> Dict[str, float]:
+        return dict(self.terms)
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _mk(schedule: Schedule, flops: float, mem_bytes: float, *,
+        backend: str, comm_bytes: float = 0.0, compute_penalty: float = 1.0) -> Candidate:
+    cost, terms = roofline.schedule_time(
+        flops=flops, mem_bytes=mem_bytes, comm_bytes=comm_bytes,
+        backend=backend, compute_penalty=compute_penalty,
+    )
+    return Candidate(schedule, cost, tuple(sorted(terms.items())))
+
+
+def _kernel_penalty(backend: str) -> float:
+    return 1.0 if backend == "tpu" else roofline.INTERPRET_PENALTY
+
+
+# ---------------------------------------------------------------------------
+# matmul: Pallas tiled kernel candidates vs the XLA dot
+# ---------------------------------------------------------------------------
+
+
+def plan_matmul(
+    m: int, k: int, n: int,
+    dtype=jnp.float32,
+    *,
+    backend: Optional[str] = None,
+    use_hlo: bool = False,
+) -> List[Candidate]:
+    """Candidates for ``C[M,N] = A[M,K] @ B[K,N]``.
+
+    Kernel traffic model (per §3.4 tiling): each (i, j) output tile
+    re-reads a row-panel of A per N-block and a column-panel of B per
+    M-block, so HBM bytes fall as the tiles grow — exactly what the
+    autotuner observes on TPU. The XLA dot is modeled at its default
+    128³ tiling. Off-TPU, kernels carry the interpret-mode penalty so
+    the compiled XLA schedule always ranks first.
+    """
+    backend = backend or _backend()
+    item = _itemsize(dtype)
+    flops = 2.0 * m * k * n
+
+    def gemm_bytes(bm: int, bn: int, bk: int) -> float:
+        a_reads = m * k * max(1, n // bn)
+        b_reads = k * n * max(1, m // bm)
+        return float((a_reads + b_reads + m * n) * item)
+
+    out: List[Candidate] = []
+
+    # XLA dot candidate (always valid — no divisibility constraints)
+    xla_bytes = gemm_bytes(min(128, m), min(128, n), min(128, k))
+    if use_hlo:
+        try:
+            from repro.launch import hlo_cost
+
+            a = jax.ShapeDtypeStruct((m, k), dtype)
+            b = jax.ShapeDtypeStruct((k, n), dtype)
+            c = hlo_cost.analyze_jit(lambda a, b: a @ b, a, b)
+            xla_bytes = c.bytes or xla_bytes
+        except Exception:
+            pass
+    out.append(_mk(Schedule("matmul", "xla"), flops, xla_bytes, backend=backend))
+
+    # Pallas kernel candidates: Axe-validated (M,N) tilings × K blocks
+    penalty = _kernel_penalty(backend)
+    for d in candidate_tilings((m, n), dtype, mxu=True):
+        bm, bn = d.tile
+        for bk in (512, 256, 128):
+            if bk > k or k % bk:
+                continue
+            # VMEM residency: A tile + B tile + f32 accumulator
+            if (bm * bk + bk * bn) * item + bm * bn * 4 > 12 * 1024 * 1024:
+                continue
+            try:
+                derive_tiling((m, k), (bm, bk), dtype)
+                derive_tiling((k, n), (bk, bn), dtype)
+            except Exception:
+                continue
+            sched = Schedule("matmul", "kernel",
+                             (("bm", bm), ("bn", bn), ("bk", bk)))
+            cp = penalty if d.mxu_aligned else penalty * 4.0
+            out.append(_mk(sched, flops, gemm_bytes(bm, bn, bk),
+                           backend=backend, compute_penalty=cp))
+
+    out.sort(key=lambda c: (c.cost_s, c.schedule.describe()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# flash attention: (block_q, block_kv) for the online-softmax kernel
+# ---------------------------------------------------------------------------
+
+
+def plan_flash_attention(
+    b: int, h: int, sq: int, skv: int, d: int,
+    dtype=jnp.float32,
+    *,
+    backend: Optional[str] = None,
+) -> List[Candidate]:
+    """Candidates for the Pallas flash-attention kernel (§4.3 workload).
+
+    K/V panels are re-read once per q block, so bytes fall with
+    ``block_q``; VMEM must hold the q tile, both kv tiles, the f32
+    accumulator, and the [block_q, block_kv] logits tile.
+    """
+    backend = backend or _backend()
+    item = _itemsize(dtype)
+    flops = 4.0 * b * h * sq * skv * d
+    penalty = _kernel_penalty(backend)
+    sub, _lane = vreg_atom(dtype)
+
+    out: List[Candidate] = []
+    seen = set()
+    for bq in (512, 256, 128, 64):
+        bq = min(bq, sq)
+        if sq % bq or bq % sub:
+            continue
+        for bkv in (512, 256, 128, 64):
+            bkv = min(bkv, skv)
+            if skv % bkv or bkv % sub or (bq, bkv) in seen:
+                continue
+            seen.add((bq, bkv))
+            vmem = (bq * d + 2 * bkv * d) * item + (bq * d + bq * bkv) * 4
+            if vmem > 12 * 1024 * 1024:
+                continue
+            kv_rereads = max(1, sq // bq)
+            mem = float(b * h * (2 * sq * d + 2 * skv * d * kv_rereads) * item)
+            sched = Schedule("flash_attention", "kernel",
+                             (("bq", bq), ("bkv", bkv)))
+            out.append(_mk(sched, flops, mem, backend=backend, compute_penalty=penalty))
+
+    out.sort(key=lambda c: (c.cost_s, c.schedule.describe()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# blocked-softmax attention at MESH scope: the XLA chunk size
+# ---------------------------------------------------------------------------
+
+#: per-chunk-step dispatch overhead (s) — XLA launch + mask/softmax
+#: epilogue per block; makes small chunks rank worse, as measured
+MHA_CHUNK_OVERHEAD_S = 5e-6
+
+
+def plan_mha_blocked(
+    b: int, s: int, h: int, d: int,
+    dtype=jnp.float32,
+    *,
+    backend: Optional[str] = None,
+) -> List[Candidate]:
+    """Chunk-size candidates for the blocked online-softmax attention
+    (``models.attention._gqa_blocked`` — same math as the Pallas kernel,
+    expressed in XLA). Total logit traffic is chunk-independent; the
+    cost difference is per-chunk dispatch overhead, so bigger chunks
+    rank first until the autotuner's measurements say otherwise."""
+    backend = backend or _backend()
+    item = _itemsize(dtype)
+    flops = 4.0 * b * h * s * s * d
+    mem = float(b * h * (4 * s * d + 2 * s * s) * item)
+
+    out: List[Candidate] = []
+    seen = set()
+    # s itself (one chunk) is always a valid schedule, so the plan is
+    # never empty even when no preferred size divides s
+    for chunk in (512, 256, 128, 64, s):
+        chunk = min(chunk, s)
+        if s % chunk or chunk in seen:
+            continue
+        seen.add(chunk)
+        base, terms = roofline.schedule_time(flops=flops, mem_bytes=mem, backend=backend)
+        cost = base + (s // chunk) * MHA_CHUNK_OVERHEAD_S
+        out.append(Candidate(
+            Schedule("mha_blocked", "xla", (("chunk", chunk),)),
+            cost, tuple(sorted(terms.items())),
+        ))
+    out.sort(key=lambda c: (c.cost_s, c.schedule.describe()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# grouped MoE GEMM: (block_c, block_f, block_d) per expert
+# ---------------------------------------------------------------------------
+
+
+def plan_moe_gemm(
+    e: int, c: int, d: int, f: int,
+    dtype=jnp.float32,
+    *,
+    backend: Optional[str] = None,
+) -> List[Candidate]:
+    """Candidates for the per-expert batched GEMM [E,C,d]·[E,d,f]."""
+    backend = backend or _backend()
+    item = _itemsize(dtype)
+    flops = 2.0 * e * c * d * f
+    penalty = _kernel_penalty(backend)
+
+    out: List[Candidate] = [
+        _mk(Schedule("moe_gemm", "xla"),
+            flops, float(e * (c * d + d * f + c * f) * item), backend=backend)
+    ]
+    for td in candidate_tilings((c, f), dtype, mxu=True):
+        bc, bf = td.tile
+        for bd in (512, 256, 128):
+            if bd > d or d % bd:
+                continue
+            if (bc * bd + bd * bf) * item + bc * bf * 4 > 12 * 1024 * 1024:
+                continue
+            try:
+                derive_tiling((c, d), (bc, bd), dtype)
+                derive_tiling((d, f), (bd, bf), dtype)
+            except Exception:
+                continue
+            x_reads = c * d * max(1, f // bf)
+            w_reads = d * f * max(1, c // bc)
+            mem = float(e * (x_reads + w_reads + c * f) * item)
+            cp = penalty if td.mxu_aligned else penalty * 4.0
+            sched = Schedule("moe_gemm", "kernel",
+                             (("bc", bc), ("bf", bf), ("bd", bd)))
+            out.append(_mk(sched, flops, mem, backend=backend, compute_penalty=cp))
+
+    out.sort(key=lambda c_: (c_.cost_s, c_.schedule.describe()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mesh-scope collective matmul: overlapped ring vs GEMM + psum_scatter
+# ---------------------------------------------------------------------------
+
+
+def plan_collective_matmul(
+    m: int, k_local: int, n: int, p: int,
+    dtype=jnp.float32,
+    *,
+    backend: Optional[str] = None,
+) -> List[Candidate]:
+    """Rank the two §4.2 schedules for the K-sharded GEMM over ``p``
+    devices: the baseline (full local GEMM, then reduce-scatter) pays
+    compute *then* collective; the ring overlaps them, so its cost is
+    the max of the two terms plus one un-overlappable chunk step."""
+    backend = backend or _backend()
+    item = _itemsize(dtype)
+    flops = 2.0 * m * k_local * n
+    mem = float((m * k_local + k_local * n + (m // max(p, 1)) * n) * item)
+    comm = float(m * n * 4 * (p - 1) / max(p, 1))  # f32 partials on the wire
+
+    base_cost, base_terms = roofline.schedule_time(
+        flops=flops, mem_bytes=mem, backend=backend)
+    _, comm_terms = roofline.schedule_time(
+        flops=0.0, mem_bytes=0.0, comm_bytes=comm, backend=backend)
+
+    out: List[Candidate] = []
+    # unfused: compute + communicate, serialized
+    seq = base_terms["compute"] + base_terms["memory"] + comm_terms["collective"]
+    out.append(Candidate(
+        Schedule("collective_matmul", "psum_scatter"), seq,
+        tuple(sorted({**base_terms, "collective": comm_terms["collective"]}.items())),
+    ))
+    if p > 1 and m % p == 0:
+        # ring: per-chunk GEMM overlaps the permute of the previous chunk
+        chunk_compute = (base_terms["compute"] + base_terms["memory"]) / p
+        ring = max(base_terms["compute"] + base_terms["memory"],
+                   comm_terms["collective"]) + chunk_compute
+        out.append(Candidate(
+            Schedule("collective_matmul", "ring"), ring,
+            tuple(sorted({**base_terms, "collective": comm_terms["collective"]}.items())),
+        ))
+    out.sort(key=lambda c: (c.cost_s, c.schedule.describe()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# uniform entry point
+# ---------------------------------------------------------------------------
+
+
+def plan(
+    op: str,
+    *,
+    shapes: Sequence[Sequence[int]],
+    dtypes: Sequence,
+    backend: Optional[str] = None,
+    use_hlo: bool = False,
+    impl: Optional[str] = None,
+    top_k: Optional[int] = None,
+) -> List[Candidate]:
+    """Enumerate + rank schedules for ``op`` on operands of ``shapes``.
+
+    ``impl`` filters the candidate list (e.g. ``"kernel"`` when the
+    caller has already committed to a Pallas launch and only needs block
+    sizes). Raises ValueError for unknown ops.
+    """
+    dtype = jnp.dtype(dtypes[0]) if dtypes else jnp.float32
+    if op == "matmul":
+        (m, k), (_k2, n) = shapes[0], shapes[1]
+        cands = plan_matmul(m, k, n, dtype, backend=backend, use_hlo=use_hlo)
+    elif op == "flash_attention":
+        b, h, sq, d = shapes[0]
+        skv = shapes[1][2]
+        cands = plan_flash_attention(b, h, sq, skv, d, dtype, backend=backend)
+    elif op == "mha_blocked":
+        b, s, h, d_ = shapes[0]
+        cands = plan_mha_blocked(b, s, h, d_, dtype, backend=backend)
+    elif op == "moe_gemm":
+        (e, c, d_), (_e2, _d2, f) = shapes[0], shapes[1]
+        cands = plan_moe_gemm(e, c, d_, f, dtype, backend=backend)
+    elif op == "collective_matmul":
+        (m, k_local), (_kl, n) = shapes[0], shapes[1]
+        p = shapes[2][0] if len(shapes) > 2 else 1
+        cands = plan_collective_matmul(m, k_local, n, p, dtype, backend=backend)
+    else:
+        raise ValueError(f"planner does not know op {op!r}")
+    if impl is not None:
+        cands = [c for c in cands if c.schedule.impl == impl]
+    return cands[:top_k] if top_k else cands
+
+
+def best_schedule(op: str, **kwargs) -> Optional[Schedule]:
+    """Top-ranked schedule, or None when nothing is admissible (e.g.
+    kernel-only request on an un-tileable shape)."""
+    cands = plan(op, **kwargs)
+    return cands[0].schedule if cands else None

@@ -1,0 +1,132 @@
+"""Schedule objects: the unit of choice the planner/autotuner works in.
+
+A *schedule* names one concrete way to execute an operator dispatch
+(paper §3.2): which implementation to use (Pallas kernel vs XLA dot vs a
+collective strategy) and the block sizes that parameterize it. Schedules
+are immutable, hashable, JSON-serializable, and have a compact string
+form used by the ``REPRO_FORCE_SCHEDULE`` escape hatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+#: implementations a schedule may name, per op
+IMPLS = {
+    "matmul": ("kernel", "xla"),
+    "flash_attention": ("kernel",),
+    "moe_gemm": ("kernel", "xla"),
+    "mha_blocked": ("xla",),
+    "collective_matmul": ("ring", "psum_scatter"),
+}
+
+
+class InvalidImplError(ValueError):
+    """The named impl exists but is not valid for this op — e.g. a
+    forced ``"xla"`` spec reaching a flash_attention dispatch. Distinct
+    from a malformed spec so ``get_schedule`` can treat a forced spec
+    as "does not apply to this op" instead of crashing the trace."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One executable schedule for an operator.
+
+    ``blocks`` is a sorted tuple of (name, size) pairs — e.g.
+    (("bk", 512), ("bm", 256), ("bn", 256)) for a tiled GEMM.
+    """
+
+    op: str
+    impl: str
+    blocks: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "blocks", tuple(sorted(self.blocks)))
+        allowed = IMPLS.get(self.op)
+        if allowed is not None and self.impl not in allowed:
+            raise InvalidImplError(
+                f"impl {self.impl!r} invalid for op {self.op!r} (allowed {allowed})")
+
+    @property
+    def blocks_dict(self) -> Dict[str, int]:
+        return dict(self.blocks)
+
+    def block(self, name: str, default: Optional[int] = None) -> Optional[int]:
+        return self.blocks_dict.get(name, default)
+
+    # -- string form: "kernel:bm=256,bn=256,bk=512" / "xla" -------------
+    def describe(self) -> str:
+        if not self.blocks:
+            return self.impl
+        kv = ",".join(f"{k}={v}" for k, v in self.blocks)
+        return f"{self.impl}:{kv}"
+
+    @staticmethod
+    def parse(spec: str, *, op: str) -> "Schedule":
+        """Inverse of ``describe`` (the force-schedule syntax)."""
+        try:
+            spec = spec.strip()
+            if ":" not in spec:
+                return Schedule(op, spec)
+            impl, _, kv = spec.partition(":")
+            blocks = []
+            for part in kv.split(","):
+                if not part:
+                    continue
+                name, _, val = part.partition("=")
+                blocks.append((name.strip(), int(val)))
+            return Schedule(op, impl.strip(), tuple(blocks))
+        except InvalidImplError:
+            raise
+        except ValueError as e:
+            raise ValueError(
+                f"bad schedule spec {spec!r} for op {op!r} "
+                f"(expected 'impl' or 'impl:name=int,...', e.g. "
+                f"'kernel:bm=128,bn=128,bk=256'): {e}"
+            ) from e
+
+    # -- JSON -----------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {"op": self.op, "impl": self.impl, "blocks": [list(b) for b in self.blocks]}
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "Schedule":
+        return Schedule(
+            str(d["op"]), str(d["impl"]),
+            tuple((str(k), int(v)) for k, v in d.get("blocks", [])),
+        )
+
+
+def schedule_key(
+    op: str,
+    shapes: Sequence[Sequence[int]],
+    dtypes: Sequence,
+    layout_sig: str = "dense",
+    backend: str = "cpu",
+) -> str:
+    """The cache key: (op, operand shapes, dtypes, layout signature,
+    backend). Stable across processes; human-greppable in the JSON file."""
+    shp = ";".join("x".join(str(int(d)) for d in s) for s in shapes)
+    dts = ",".join(str(getattr(d, "name", d)) for d in dtypes)
+    return f"{op}|{shp}|{dts}|{layout_sig}|{backend}"
+
+
+def layout_signature(*layouts) -> str:
+    """Canonical signature of operand Axe layouts for keying schedules.
+
+    Accepts ``Layout`` objects, ``DTensorSpec`` objects, or None (dense).
+    Layouts that canonicalize equal produce identical signatures.
+    """
+    from repro.core.layout import Layout, canonicalize
+
+    parts = []
+    for l in layouts:
+        if l is None:
+            parts.append("dense")
+            continue
+        layout = getattr(l, "layout", l)
+        if isinstance(layout, Layout):
+            parts.append(repr(canonicalize(layout)))
+        else:
+            parts.append(str(layout))
+    return "dense" if all(p == "dense" for p in parts) else "&".join(parts)

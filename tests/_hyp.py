@@ -1,0 +1,56 @@
+"""Optional-hypothesis shim for the layout property tests.
+
+``hypothesis`` is a dev extra (``pip install -e .[dev]``), not a hard
+requirement — the container this repo is verified in does not ship it.
+Importing through this module instead of ``hypothesis`` directly gives:
+
+* with hypothesis installed — the real ``given`` / ``settings`` / ``st``,
+  unchanged property testing;
+* without it — stand-ins that let the test module import (strategy
+  expressions at module scope evaluate to inert placeholders) and mark
+  every ``@given`` test as skipped, while the deterministic example
+  tests in the same files still run (see the ``FIXED_*`` case sets in
+  ``test_layout.py`` / ``test_layout_laws.py`` for the fallback law
+  coverage).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAS_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert placeholder supporting the chaining the strategy
+        expressions use at module import time."""
+
+        def filter(self, *a, **k):
+            return self
+
+        def map(self, *a, **k):
+            return self
+
+        def __call__(self, *a, **k):
+            return self
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: _Strategy()
+
+    st = _St()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed (pip install .[dev])")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+
+__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st"]

@@ -14,10 +14,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import ops as cops
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("model",))
 M, K, N = 256, 512, 128
 a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
 b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
@@ -27,7 +28,7 @@ def run(overlap):
     def body(a, b):
         return cops.collective_matmul(a, b, axis_name="model", overlap=overlap)
     # output rows are scattered over the axis -> concatenate on dim 0
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
+    f = jax.jit(compat.shard_map(body, mesh=mesh,
                 in_specs=(P(None, "model"), P("model", None)),
                 out_specs=P("model", None), check_vma=False))
     return f(a, b)

@@ -13,14 +13,14 @@ import json
 import dataclasses
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro import compat
 
 from repro.configs import get_config, smoke_variant
 from repro.models import moe as moe_mod
 from repro.models.model_zoo import ShapeSpec, build_model
 from repro.train import act_sharding
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 
 # --- 1. expert-parallel MoE vs local path -------------------------------
 cfg = dataclasses.replace(

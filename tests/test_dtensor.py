@@ -147,7 +147,9 @@ def test_apply_plan_single_device_mesh():
     def body(x):
         return coll.apply_plan(x, [coll.AllGather("model", 0)])
 
-    y = jax.shard_map(
+    from repro import compat
+
+    y = compat.shard_map(
         body, mesh=mesh, in_specs=P("model", None), out_specs=P(None, None),
         check_vma=False,
     )(x)

@@ -12,7 +12,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.launch import hlo_cost
 
 out = {}
@@ -33,7 +34,7 @@ out["scan_expected"] = 10 * 2 * 256**3
 out["loops"] = c.loops
 
 # 2. SPMD matmul: per-device flops + all-reduce ring bytes
-mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("model",))
 a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
 b = jax.ShapeDtypeStruct((512, 512), jnp.float32)
 sh_a = NamedSharding(mesh, P(None, "model"))

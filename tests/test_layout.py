@@ -3,11 +3,15 @@
 Every operator is validated against brute-force enumeration of the
 induced set-valued map f_L on small random layouts (hypothesis), plus
 the concrete worked examples from the paper text.
+
+hypothesis is optional (the ``dev`` extra): without it the property
+tests skip and the deterministic ``FIXED_LAYOUTS`` sweep below keeps
+the operator laws covered.
 """
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import HAS_HYPOTHESIS, given, settings, st
 
 from repro.core.layout import (
     GroupingError,
@@ -353,3 +357,110 @@ def test_slice_one_wrap():
     out = slice_layout(L1, (6,), (4,), (16,))
     for u in range(4):
         assert out.call_shaped((u,), (4,)) == L1.call_shaped((u + 6,), (16,))
+
+
+# ---------------------------------------------------------------------------
+# deterministic fallback sweep (always runs; the only law coverage when
+# hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+FIXED_LAYOUTS = [
+    Layout((It(4, 1, "m"),)),
+    Layout((It(2, 8, "m"), It(4, 1, "m"))),
+    Layout((It(3, 2, "x"), It(2, 9, "m"))),
+    Layout((It(2, -3, "m"), It(3, 1, "x"))),
+    Layout((It(2, 4, "m"), It(2, 1, "x")), (It(2, 16, "y"),)),
+    Layout((It(4, 2, "m"),), (It(2, 16, "x"),), za(x=1)),
+    Layout((It(2, 3, "m"), It(2, 1, "m")), (It(3, 4, "x"),), za(m=2)),
+]
+
+FIXED_PAIRS = [
+    (Layout((It(2, 1, "m"),)), Layout((It(4, 1, "m"),))),
+    (Layout((It(2, 3, "m"),)), Layout((It(3, 1, "m"),))),
+    (Layout((It(2, 2, "x"), It(2, 1, "m"))), Layout((It(3, 1, "m"),))),
+    (Layout((It(2, 1, "m"),), (It(2, 4, "x"),)), Layout((It(2, 2, "m"), It(2, 1, "x")))),
+]
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_LAYOUTS)))
+def test_fixed_canonicalize_preserves_map(idx):
+    L = FIXED_LAYOUTS[idx]
+    C = canonicalize(L)
+    assert C.size == L.size
+    assert C.enumerate_map() == L.enumerate_map()
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_LAYOUTS)))
+def test_fixed_span_matches_bruteforce(idx):
+    L = FIXED_LAYOUTS[idx]
+    spans = L.span()
+    coords = L.all_coords()
+    for a in L.axes():
+        vals = [c[a] for c in coords]
+        assert spans.get(a, 1) == max(vals) - min(vals) + 1
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_LAYOUTS)))
+def test_fixed_group_preserves_map(idx):
+    L = FIXED_LAYOUTS[idx]
+    for shape in factorizations(L.size):
+        try:
+            g = group(L, shape)
+        except GroupingError:
+            continue
+        assert g.layout.enumerate_map() == L.enumerate_map()
+        for blk, s in zip(g.blocks, shape):
+            assert math.prod(i.extent for i in blk) == s
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_PAIRS)))
+def test_fixed_tile_semantics(idx):
+    A, B = FIXED_PAIRS[idx]
+    T, S_T = tile(A, (A.size,), B, (B.size,))
+    spans = B.span()
+    for x in range(A.size):
+        for y in range(B.size):
+            got = T.call_shaped((x, y), S_T)
+            fa = {c.scale_by(spans) for c in A(x)}
+            fb = B(y)
+            want = frozenset(ca + cb for ca in fa for cb in fb)
+            assert got == want, (x, y, got, want)
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_PAIRS)))
+def test_fixed_direct_sum_semantics(idx):
+    A, B = FIXED_PAIRS[idx]
+    T, S_T = direct_sum(A, (A.size,), B, (B.size,))
+    for x in range(A.size):
+        for y in range(B.size):
+            got = T.call_shaped((x, y), S_T)
+            want = frozenset(ca + cb for ca in A(x) for cb in B(y))
+            assert got == want
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_PAIRS)))
+def test_fixed_tile_of_roundtrip(idx):
+    C, B = FIXED_PAIRS[idx]
+    if C.R or B.R:
+        pytest.skip("replication pair covered by property test")
+    T, S_T = tile(C, (C.size,), B, (B.size,))
+    res = tile_of(T, (T.size,), B, (B.size,))
+    assert res is not None, (C, B, T)
+    C2, S_C = res
+    assert S_C == (C.size,)
+    T2, _ = tile(C2, S_C, B, (B.size,))
+    assert T2.enumerate_map() == T.enumerate_map()
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_LAYOUTS)))
+def test_fixed_slice_semantics(idx):
+    L = FIXED_LAYOUTS[idx]
+    shape = (L.size,)
+    for start in range(L.size):
+        for size in range(1, L.size - start + 1):
+            try:
+                out = slice_layout(L, (start,), (size,), shape)
+            except (SliceError, GroupingError):
+                continue
+            for u in range(size):
+                assert out.call_shaped((u,), (size,)) == L.call_shaped((u + start,), shape)

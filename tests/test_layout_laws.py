@@ -1,11 +1,15 @@
 """Deeper algebraic laws of the Axe operators (beyond the paper's
 worked examples): tile associativity, span multiplicativity, slice
 composition, group/ungroup identity, canonical-form uniqueness under
-the gap condition."""
+the gap condition.
+
+hypothesis is optional (the ``dev`` extra): without it the property
+tests skip and the deterministic ``FIXED_TRIPLES`` sweep below keeps
+the laws covered."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import HAS_HYPOTHESIS, given, settings, st
 
 from repro.core.layout import (
     GroupingError,
@@ -129,6 +133,67 @@ def test_tile_of_with_replication():
     C2, _ = rec
     T2, _ = tile(C2, (2,), B, (4,))
     assert T2.enumerate_map() == T.enumerate_map()
+
+
+# ---------------------------------------------------------------------------
+# deterministic fallback sweep (always runs; the only law coverage when
+# hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+FIXED_TRIPLES = [
+    (Layout((It(2, 1, "m"),)), Layout((It(2, 3, "m"),)), Layout((It(3, 1, "m"),))),
+    (Layout((It(2, 2, "x"),)), Layout((It(2, 1, "m"),)), Layout((It(2, 5, "x"),))),
+    (Layout((It(3, 1, "m"),)), Layout((It(2, 2, "x"), It(2, 1, "m"))), Layout((It(2, 1, "x"),))),
+]
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_TRIPLES)))
+def test_fixed_tile_associativity(idx):
+    A, B, C = FIXED_TRIPLES[idx]
+    sa, sb, sc = (A.size,), (B.size,), (C.size,)
+    AB, _ = tile(A, sa, B, sb)
+    left, _ = tile(AB, (A.size * B.size,), C, sc)
+    BC, _ = tile(B, sb, C, sc)
+    right, _ = tile(A, sa, BC, (B.size * C.size,))
+    assert left.enumerate_map() == right.enumerate_map()
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_TRIPLES)))
+def test_fixed_span_bruteforce_under_tile(idx):
+    A, B, _ = FIXED_TRIPLES[idx]
+    T, _ = tile(A, (A.size,), B, (B.size,))
+    for ax in T.axes():
+        coords = [c[ax] for c in T.all_coords()]
+        assert T.span().get(ax, 1) == max(coords) - min(coords) + 1
+
+
+@pytest.mark.parametrize("idx", range(len(FIXED_TRIPLES)))
+def test_fixed_group_is_identity_on_map(idx):
+    for L in FIXED_TRIPLES[idx]:
+        for a in range(1, L.size + 1):
+            if L.size % a:
+                continue
+            try:
+                g = group(L, (a, L.size // a) if a > 1 else (L.size,))
+            except GroupingError:
+                continue
+            assert layouts_equal(g.layout, L)
+
+
+def test_fixed_slice_composition():
+    shape = (6, 8)
+    L = from_shape(shape)
+    for a in [(0, 0), (2, 4), (3, 0)]:
+        size1 = (shape[0] - a[0], shape[1] - a[1])
+        inner = slice_layout(L, a, size1, shape)
+        for b in [(0, 0), (1, 2)]:
+            size2 = (size1[0] - b[0], size1[1] - b[1])
+            try:
+                twice = slice_layout(inner, b, size2, size1)
+                once = slice_layout(L, (a[0] + b[0], a[1] + b[1]), size2, shape)
+            except SliceError:
+                continue
+            assert twice.enumerate_map() == once.enumerate_map()
 
 
 def test_offsets_propagate_through_tile():

@@ -11,11 +11,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro import compat
 
 from repro.train.pipeline import bubble_fraction, pipeline_apply, split_layers_into_stages
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("pipe",))
 
 L, D, MB, NM = 8, 16, 4, 6   # 8 layers over 4 stages; 6 microbatches of 4
 key = jax.random.PRNGKey(0)
