@@ -24,7 +24,6 @@ if __package__ in (None, ""):  # script mode: make `benchmarks.*` importable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_jitted
 from repro.core import ops as cops

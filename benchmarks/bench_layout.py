@@ -7,7 +7,7 @@ import time
 
 from benchmarks.common import row
 from repro.core import (
-    canonicalize, direct_sum, from_shape, group, slice_layout, strided, tile, tile_of,
+    canonicalize, direct_sum, group, slice_layout, strided, tile, tile_of,
 )
 
 

@@ -15,15 +15,16 @@ if os.environ.get("XLA_FLAGS", "") == "":
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import DTensorSpec, collective as coll, ops as cops
 from repro.train import act_sharding
-from repro.train.sharding import batch_pspecs, mesh_shape_of, param_pspecs
+from repro.train.sharding import mesh_shape_of, param_pspecs
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     ms = mesh_shape_of(mesh)
     print("mesh:", ms)
 
@@ -48,7 +49,7 @@ def main():
     def body(a, b):
         return cops.collective_matmul(a, b, axis_name="model", overlap=True)
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, "model"), P("model", None)),
         out_specs=P("model", None), check_vma=False,

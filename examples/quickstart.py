@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    DTensorSpec, It, Layout, canonicalize, from_shape, group, layouts_equal,
+    DTensorSpec, It, Layout, canonicalize,
     slice_layout, strided, tile, tile_of, za,
 )
 from repro.core.blockspec import derive_tiling

@@ -8,7 +8,6 @@ Quick CPU demo:
     PYTHONPATH=src python examples/train_lm.py --preset 25m --steps 30
 """
 import argparse
-import dataclasses
 
 import jax
 

@@ -1,0 +1,57 @@
+"""AxeSpec end-to-end: one layout spec from the device mesh to the
+Pallas block (docs/axespec.md).
+
+* ``repro.axe.spec``      — :class:`AxeSpec` + :class:`PhysicalSpace`
+* ``repro.axe.lower``     — the two lowering adapters
+  (AxeSpec → NamedSharding, AxeSpec → Pallas grid + BlockSpec)
+* ``repro.axe.propagate`` — layout propagation over op graphs
+* ``repro.axe.rules``     — the sharding rule engine (params / batches /
+  caches), formerly the PartitionSpec tables in ``train.sharding``
+"""
+from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
+from repro.axe.lower import (
+    BlockLowering,
+    block_lowering,
+    from_pspec,
+    from_sharding,
+    layout_of_pspec,
+    pspec_of_layout,
+    spec_of_block,
+    to_blockspec,
+    to_named_sharding,
+    to_pspec,
+)
+from repro.axe.propagate import (
+    LayoutPlan,
+    OpNode,
+    PlanEntry,
+    PropagationError,
+    Redistribution,
+    propagate,
+    propagate_matmul,
+    redistribute,
+)
+
+__all__ = [
+    "AxeSpec",
+    "BlockLowering",
+    "LayoutPlan",
+    "OpNode",
+    "PhysicalSpace",
+    "PlanEntry",
+    "PropagationError",
+    "Redistribution",
+    "SpecError",
+    "block_lowering",
+    "from_pspec",
+    "from_sharding",
+    "layout_of_pspec",
+    "propagate",
+    "propagate_matmul",
+    "pspec_of_layout",
+    "redistribute",
+    "spec_of_block",
+    "to_blockspec",
+    "to_named_sharding",
+    "to_pspec",
+]

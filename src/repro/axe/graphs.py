@@ -1,0 +1,115 @@
+"""Representative op graphs for layout propagation.
+
+``decoder_layer_graph`` builds the op graph of one decoder layer for a
+model-zoo config — norm → QKV projection → attention → output
+projection (+ residual) → norm → FFN (dense) or MoE dispatch + expert
+GEMMs — seeded with the AxeSpec placements the rule engine
+(``repro.axe.rules``) would choose. Propagating it
+(``repro.axe.propagate.propagate``) yields the per-op redistribution
+plan and communication bytes that ``launch.dryrun --layout-plan``
+reports without touching any device.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from repro.axe import rules
+from repro.axe.propagate import OpNode
+from repro.axe.spec import AxeSpec, PhysicalSpace
+
+
+def decoder_layer_graph(
+    cfg,
+    batch: int,
+    seq: int,
+    space: PhysicalSpace,
+    dtype: str = "bfloat16",
+) -> Tuple[List[OpNode], Dict[str, AxeSpec]]:
+    """One decoder layer as (nodes, input specs) for ``propagate``.
+
+    Activations are rank-2 [tokens, d] (tokens = batch·seq); q/k/v are
+    rank-4 [B, H, S, hd]. Placements are preference lists resolved by
+    the same Axe-admissibility rule as params/batches, so non-dividing
+    head counts (starcoder2, whisper) degrade exactly like the real
+    sharding rules do.
+    """
+    mesh_shape = space.mesh_shape
+    dp_entry = rules._dp_entry(space)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    t = batch * seq
+
+    def pick(shape, prefs):
+        return rules.pick_spec(shape, prefs, space, dtype)
+
+    def reshape_seed(name, src: AxeSpec, shape, placement):
+        """Seed a spec across a reshape boundary (propagation models ops,
+        not reshapes): carry the named dims' placements over from the
+        propagated ``src`` spec, dropping any the new dim extents no
+        longer admit."""
+        pl = {}
+        for i, axes in placement.items():
+            ext = math.prod(mesh_shape.get(a, 1) for a in axes)
+            if axes and shape[i] % ext == 0:
+                pl[i] = axes
+        # a reshape is value-preserving: pending partial sums carry over
+        env[name] = AxeSpec.sharded(shape, space, pl, src.dtype, partial=src.partial)
+
+    env: Dict[str, AxeSpec] = {}
+    env["x"] = pick((t, d), [(dp_entry, None), (None, None)])
+    env["wqkv"] = pick((d, (h + 2 * kv) * hd), [(None, "model"), (None, None)])
+    env["wo"] = pick((h * hd, d), [("model", None), (None, None)])
+
+    # Propagate the projection stage, then seed the rank-4 q/k/v views
+    # from its *propagated* output placement (the [T, D'] -> [B, H, S,
+    # hd] reshape keeps the token axes on B and the projection axes on
+    # H, when the new extents admit them — GQA kv heads may not).
+    from repro.axe.propagate import propagate as _propagate
+
+    stage1 = [
+        OpNode("norm_in", "norm", ("x",), "x_n"),
+        OpNode("qkv_proj", "matmul", ("x_n", "wqkv"), "qkv"),
+    ]
+    qkv = _propagate(stage1, env).env["qkv"]
+    p_qkv = qkv.placement()
+    reshape_seed("q", qkv, (batch, h, seq, hd), {0: p_qkv[0], 1: p_qkv[1]})
+    reshape_seed("k", qkv, (batch, kv, seq, hd), {0: p_qkv[0], 1: p_qkv[1]})
+    env["v"] = env["k"]
+
+    stage2 = [OpNode("attention", "attention", ("q", "k", "v"), "attn_out")]
+    attn_out = _propagate(stage2, env).env["attn_out"]
+    p_attn = attn_out.placement()
+    # [B, H, S, hd] -> [T, H*hd]: tokens keep B's axes, the flattened
+    # feature dim keeps the head axes (when H*hd still admits them)
+    reshape_seed("attn_flat", attn_out, (t, h * hd),
+                 {0: p_attn[0], 1: p_attn[1]})
+
+    nodes: List[OpNode] = stage1 + stage2 + [
+        OpNode("wo_proj", "matmul", ("attn_flat", "wo"), "attn_o"),
+        OpNode("attn_residual", "elementwise", ("attn_o", "x"), "x1"),
+        OpNode("norm_ffn", "norm", ("x1",), "x2"),
+    ]
+
+    if cfg.is_moe:
+        e = cfg.num_experts
+        f_e = cfg.moe_d_ff
+        cap = max(1, math.ceil(t * cfg.experts_per_tok * cfg.capacity_factor / e))
+        env["moe_wi"] = pick((e, d, f_e),
+                             [("model", None, None), (None, None, "model"), (None, None, None)])
+        env["moe_wo"] = pick((e, f_e, d),
+                             [("model", None, None), (None, "model", None), (None, None, None)])
+        nodes += [
+            OpNode("moe_dispatch", "moe_dispatch", ("x2",), "xe",
+                   attrs=(("experts", e), ("capacity", cap))),
+            OpNode("moe_ffn_in", "matmul", ("xe", "moe_wi"), "he"),
+            OpNode("moe_ffn_out", "matmul", ("he", "moe_wo"), "oe"),
+        ]
+    elif cfg.d_ff:
+        env["wi"] = pick((d, cfg.d_ff), [(None, "model"), (None, None)])
+        env["wo2"] = pick((cfg.d_ff, d), [("model", None), (None, None)])
+        nodes += [
+            OpNode("ffn_in", "matmul", ("x2", "wi"), "ffn_h"),
+            OpNode("ffn_out", "matmul", ("ffn_h", "wo2"), "ffn_o"),
+            OpNode("ffn_residual", "elementwise", ("ffn_o", "x1"), "x_out"),
+        ]
+    return nodes, env

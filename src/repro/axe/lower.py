@@ -1,0 +1,254 @@
+"""The two AxeSpec lowering adapters (paper §3.2/§3.4).
+
+An :class:`~repro.axe.spec.AxeSpec` is the single source of truth for
+where a tensor lives; backends never receive hand-written placement:
+
+* **inter-device** — ``to_pspec`` / ``to_named_sharding``: the GSPMD
+  adapter. Subsumes ``core.dtensor.pspec_of_layout`` (which is now a
+  thin shim over this module); rejects layouts outside the
+  GSPMD-expressible subset, which is a feature — Axe can state layouts
+  (strided device placement, per-dim offsets) GSPMD cannot.
+* **on-device** — ``to_blockspec`` / ``block_lowering``: the Pallas
+  adapter. Subsumes ``core.blockspec.derive_blockspec``: validates the
+  tile against the *local* (per-device) shape with the App. F
+  direct-sum check and returns the grid + ``pl.BlockSpec``. All kernel
+  call sites go through this one error path, so an infeasible tile
+  raises a single actionable :class:`~repro.core.blockspec.TilingError`
+  instead of a backend-dependent Pallas failure.
+
+``from_pspec`` / ``from_sharding`` / ``spec_of_block`` invert the
+adapters, which the round-trip tests exercise on the config zoo shapes.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+from repro.core.axes import MEM_AXIS, is_mesh_axis
+from repro.core.blockspec import TileDerivation, check_tiling, pick_tile
+from repro.core.layout import Layout, group, strided
+from repro.axe.spec import AxeSpec, PhysicalSpace
+
+PSpecEntry = Union[None, str, Tuple[str, ...]]
+
+
+def _entry_axes(entry: PSpecEntry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+# ---------------------------------------------------------------------------
+# inter-device: AxeSpec -> PartitionSpec / NamedSharding (and back)
+# ---------------------------------------------------------------------------
+
+
+def layout_of_pspec(
+    shape: Sequence[int],
+    pspec: Sequence[PSpecEntry],
+    mesh_shape: Mapping[str, int],
+) -> Layout:
+    """Axe layout of a tensor sharded per ``pspec`` on ``mesh_shape``.
+
+    Per dim i with mesh axes (a, b, ...): D gets iters
+    ``(size_a, 1@a), (size_b, 1@b), ..., (local_i, stride@m)`` — the
+    paper's "fully sharded" 2×2-mesh example generalized. Mesh axes
+    unused by any dim land in R (replication). The construction itself
+    is ``AxeSpec.sharded`` (one algorithm, here only re-expressed over
+    PartitionSpec entries); ``SpecError`` is a ``ValueError``."""
+    shape = tuple(int(s) for s in shape)
+    entries = tuple(pspec) + (None,) * (len(shape) - len(pspec))
+    space = PhysicalSpace.from_mesh_shape(mesh_shape)
+    placement = {
+        i: _entry_axes(e) for i, e in enumerate(entries) if _entry_axes(e)
+    }
+    return AxeSpec.sharded(shape, space, placement).layout
+
+
+def pspec_of_layout(
+    layout: Layout,
+    shape: Sequence[int],
+    mesh_shape: Mapping[str, int],
+):
+    """Invert ``layout_of_pspec``; raises when the layout is outside the
+    GSPMD-expressible subset (strided device placement, offsets, ...)."""
+    from jax.sharding import PartitionSpec as P
+
+    shape = tuple(int(s) for s in shape)
+    if not layout.O.is_zero:
+        raise ValueError("GSPMD cannot express per-tensor offsets (O != 0)")
+    g = group(layout, shape)
+
+    entries: list = []
+    used: list = []
+    for blk, s in zip(g.blocks, shape):
+        dim_axes: list = []
+        mem_done = False
+        for it in blk:
+            ax = it.axis
+            if ax is None:
+                raise ValueError(f"multi-axis iter {it} not expressible in PartitionSpec")
+            if is_mesh_axis(ax):
+                if mem_done:
+                    raise ValueError("mesh iter inside local-memory digits (interleaved shard)")
+                if it.stride[ax] != 1 or it.extent != mesh_shape.get(ax):
+                    raise ValueError(f"mesh axis {ax} not fully, unit-strided sharded: {it}")
+                dim_axes.append(ax)
+                used.append(ax)
+            elif ax == MEM_AXIS:
+                mem_done = True
+            else:
+                raise ValueError(f"axis {ax} is not a mesh or linear-memory axis")
+        entries.append(tuple(dim_axes) if len(dim_axes) > 1 else (dim_axes[0] if dim_axes else None))
+
+    # replicated axes must appear in R with full extent (or be size-1)
+    r_axes: dict = {}
+    for it in layout.R:
+        ax = it.axis
+        if ax is None or not is_mesh_axis(ax):
+            raise ValueError(f"replication iter {it} is not a mesh axis")
+        r_axes[ax] = r_axes.get(ax, 1) * it.extent
+    for a, size in mesh_shape.items():
+        if a in used or size == 1:
+            continue
+        if r_axes.get(a, 1) != size:
+            raise ValueError(f"mesh axis {a} neither sharded nor fully replicated")
+    return P(*entries)
+
+
+def to_pspec(spec: AxeSpec):
+    """AxeSpec → ``PartitionSpec`` (the inter-device lowering)."""
+    return pspec_of_layout(spec.layout, spec.shape, spec.space.mesh_shape)
+
+
+def to_named_sharding(spec: AxeSpec, mesh):
+    """AxeSpec → ``NamedSharding`` on a concrete jax mesh."""
+    from jax.sharding import NamedSharding
+
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if mesh_shape != spec.space.mesh_shape:
+        raise ValueError(
+            f"mesh {mesh_shape} does not match spec space {spec.space.mesh_shape}"
+        )
+    return NamedSharding(mesh, to_pspec(spec))
+
+
+def from_pspec(
+    shape: Sequence[int],
+    pspec: Sequence[PSpecEntry],
+    space: PhysicalSpace,
+    dtype: str = "float32",
+) -> AxeSpec:
+    """PartitionSpec → AxeSpec (inverse of ``to_pspec``)."""
+    return AxeSpec(
+        tuple(int(s) for s in shape),
+        layout_of_pspec(shape, pspec, space.mesh_shape),
+        space,
+        dtype,
+    )
+
+
+def from_sharding(shape: Sequence[int], sharding, dtype: str = "float32") -> AxeSpec:
+    """NamedSharding → AxeSpec (inverse of ``to_named_sharding``)."""
+    mesh = sharding.mesh
+    space = PhysicalSpace(tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    return from_pspec(shape, tuple(sharding.spec), space, dtype)
+
+
+# ---------------------------------------------------------------------------
+# on-device: AxeSpec -> Pallas grid + BlockSpec (and back)
+# ---------------------------------------------------------------------------
+
+
+class BlockLowering:
+    """The result of lowering one operand to a Pallas block program:
+    the grid, the per-step tile, and the Axe derivation that proved the
+    tile valid (each grid cell a strided HBM box, App. F)."""
+
+    def __init__(self, derivation: TileDerivation, index_map, local_shape, dtype):
+        self.derivation = derivation
+        self.grid = derivation.grid
+        self.tile = derivation.tile
+        self.index_map = index_map
+        self.local_shape = tuple(local_shape)
+        self.dtype = dtype
+
+    @property
+    def spec(self):
+        """The ``pl.BlockSpec`` (deferred pallas import)."""
+        from jax.experimental import pallas as pl
+
+        return pl.BlockSpec(self.tile, self.index_map)
+
+    def box_layout(self) -> Layout:
+        """The strided-HBM-box layout of one grid cell."""
+        return strided(self.tile, self.derivation.hbm_box_strides)
+
+    def grid_layout(self) -> Layout:
+        """The layout enumerating grid-cell origins."""
+        strides = tuple(
+            t * st for t, st in zip(self.tile, self.derivation.hbm_box_strides)
+        )
+        return strided(self.grid, strides)
+
+    def reassemble(self) -> Layout:
+        """Grid ⊕ Box — must equal the dense local layout (round-trip)."""
+        from repro.core.layout import direct_sum
+
+        T, _ = direct_sum(self.grid_layout(), self.grid, self.box_layout(), self.tile)
+        return T
+
+
+def block_lowering(
+    target: Union[AxeSpec, Sequence[int]],
+    tile: Optional[Sequence[int]] = None,
+    dtype=None,
+    *,
+    index_map=None,
+    op: str = "pallas",
+    require_vreg: bool = False,
+) -> BlockLowering:
+    """Lower one operand of a Pallas kernel to (grid, BlockSpec).
+
+    ``target`` is an AxeSpec (the tile applies to its *local*, per-device
+    shape — the mesh iters were consumed by the inter-device lowering) or
+    a bare local shape. Validation is the single ``check_tiling`` error
+    path: an infeasible tile raises ``TilingError`` naming the op, the
+    shape, the tile, and the nearest valid tile."""
+    if isinstance(target, AxeSpec):
+        local = target.local_shape()
+        dtype = dtype if dtype is not None else target.dtype
+    else:
+        local = tuple(int(s) for s in target)
+        if dtype is None:
+            dtype = "float32"
+    if tile is None:
+        tile = pick_tile(local, dtype)
+    d = check_tiling(local, tile, dtype, op=op, require_vreg=require_vreg)
+    if index_map is None:
+        rank = len(d.grid)
+        index_map = lambda *ids: ids[:rank]
+    return BlockLowering(d, index_map, local, dtype)
+
+
+def to_blockspec(
+    target: Union[AxeSpec, Sequence[int]],
+    tile: Optional[Sequence[int]] = None,
+    dtype=None,
+    *,
+    index_map=None,
+    op: str = "pallas",
+    require_vreg: bool = False,
+):
+    """AxeSpec (or local shape) → ``(grid, pl.BlockSpec)``."""
+    bl = block_lowering(
+        target, tile, dtype, index_map=index_map, op=op, require_vreg=require_vreg
+    )
+    return bl.grid, bl.spec
+
+
+def spec_of_block(lowering: BlockLowering, space: PhysicalSpace) -> AxeSpec:
+    """BlockLowering → AxeSpec of the reassembled local tensor (the
+    on-device inverse: Grid ⊕ Box recomposed into one memory layout)."""
+    return AxeSpec(lowering.local_shape, lowering.reassemble(), space, str(lowering.dtype))

@@ -1,0 +1,372 @@
+"""Layout propagation over op graphs (paper §3.2: layout-driven
+dispatch; §2.2: one algebra from mesh to block).
+
+Given input :class:`~repro.axe.spec.AxeSpec`s for a small op graph
+(matmul, attention, MoE dispatch, norm, elementwise), infer each op's
+output spec and the redistributions its inputs require, expressed as
+``core.collective`` plan steps. The result is a :class:`LayoutPlan` —
+the single propagated layout plan that ``launch.dryrun`` reports, the
+tune planner keys schedules on, and the entry points consume.
+
+Rules are deliberately local (one op at a time, inputs already
+specced): the pass walks the graph in topological (list) order, aligns
+operand placements with ``collective.infer_redistribution``, resolves
+pending partial sums, and records per-step communication bytes via
+``collective.plan_comm_bytes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
+
+_DTYPE_SIZE = {
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+    "float64": 8, "int64": 8,
+}
+
+
+def _itemsize(dtype: str) -> int:
+    return _DTYPE_SIZE.get(str(dtype), 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpNode:
+    """One node of the layout graph: ``out = kind(*inputs)``."""
+
+    name: str
+    kind: str                     # matmul | attention | moe_dispatch | norm | elementwise
+    inputs: Tuple[str, ...]
+    out: str
+    attrs: Tuple[Tuple[str, object], ...] = ()
+
+    def attr(self, key: str, default=None):
+        return dict(self.attrs).get(key, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class Redistribution:
+    """A planned layout change of one operand: the collective steps that
+    convert ``src`` into ``dst``, with their ring-algorithm byte cost."""
+
+    operand: str
+    src: AxeSpec
+    dst: AxeSpec
+    steps: Tuple[object, ...]
+    comm_bytes: int
+
+    def describe(self) -> str:
+        steps = ", ".join(type(s).__name__ + repr(dataclasses.astuple(s)) for s in self.steps)
+        return f"{self.operand}: [{steps}] ({self.comm_bytes} B/device)"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    op: OpNode
+    out_spec: AxeSpec
+    redistributions: Tuple[Redistribution, ...]
+
+    @property
+    def comm_bytes(self) -> int:
+        return sum(r.comm_bytes for r in self.redistributions)
+
+    def to_dict(self) -> Dict:
+        return {
+            "op": self.op.name,
+            "kind": self.op.kind,
+            "out": self.op.out,
+            "out_spec": self.out_spec.signature(),
+            "steps": [
+                {
+                    "operand": r.operand,
+                    "collectives": [type(s).__name__ for s in r.steps],
+                    "comm_bytes": r.comm_bytes,
+                }
+                for r in self.redistributions
+                if r.steps
+            ],
+            "comm_bytes": self.comm_bytes,
+        }
+
+
+@dataclasses.dataclass
+class LayoutPlan:
+    """The propagated layout plan for one op graph."""
+
+    space: PhysicalSpace
+    entries: List[PlanEntry]
+    env: Dict[str, AxeSpec]
+
+    @property
+    def total_comm_bytes(self) -> int:
+        return sum(e.comm_bytes for e in self.entries)
+
+    def spec(self, name: str) -> AxeSpec:
+        return self.env[name]
+
+    def signature(self) -> str:
+        """Canonical plan identity: the ordered per-op output specs."""
+        return ";".join(f"{e.op.name}->{e.out_spec.signature()}" for e in self.entries)
+
+    def to_dict(self) -> Dict:
+        return {
+            "space": self.space.signature(),
+            "total_comm_bytes": self.total_comm_bytes,
+            "entries": [e.to_dict() for e in self.entries],
+        }
+
+    def describe(self) -> str:
+        lines = [f"layout plan over {self.space.signature()} "
+                 f"({self.total_comm_bytes} comm B/device):"]
+        for e in self.entries:
+            lines.append(f"  {e.op.name} [{e.op.kind}] -> {e.out_spec!r}")
+            for r in e.redistributions:
+                if r.steps:
+                    lines.append(f"    redistribute {r.describe()}")
+        return "\n".join(lines)
+
+
+class PropagationError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# redistribution helper
+# ---------------------------------------------------------------------------
+
+
+def redistribute(src: AxeSpec, dst: AxeSpec, operand: str = "x") -> Redistribution:
+    """Plan the collectives converting ``src`` into ``dst`` (including
+    resolution of ``src.partial`` axes), with per-device byte cost."""
+    from repro.core import collective as coll
+
+    mesh_shape = src.space.mesh_shape
+    steps = coll.infer_redistribution(
+        src.to_dtensor(), dst.to_dtensor(), mesh_shape, partial_axes=src.partial
+    )
+    bytes_ = coll.plan_comm_bytes(steps, src.to_dtensor(), mesh_shape, _itemsize(src.dtype))
+    return Redistribution(operand, src, dst, tuple(steps), bytes_)
+
+
+def _filter_axes(axes: Sequence[str], taken: set) -> Tuple[str, ...]:
+    return tuple(a for a in axes if a not in taken)
+
+
+# ---------------------------------------------------------------------------
+# per-op rules
+# ---------------------------------------------------------------------------
+
+
+def rule_matmul(node: OpNode, a: AxeSpec, b: AxeSpec):
+    """C[..., M, N] = A[..., M, K] @ B[..., K, N] (B rank 2, or batched
+    with leading dims aligned to A's — the grouped MoE GEMM).
+
+    K placements must agree (that is what makes the local dots partial
+    sums rather than garbage): B is redistributed to match A's K axes.
+    The output keeps A's batch/M placement and B's N placement (minus
+    conflicts); K-sharding axes surface as ``partial`` on the output —
+    the §3.2/Fig. 8 story where the pending reduction is part of the
+    layout signature, resolved by the *next* op's redistribution."""
+    if a.shape[-1] != b.shape[-2]:
+        raise PropagationError(f"{node.name}: contraction mismatch {a.shape} @ {b.shape}")
+    pa, pb = a.placement(), b.placement()
+    k_axes = pa[-1]
+    lead = len(b.shape) - 2          # batched leading dims, aligned to a's
+    # axes N may not shard over: A's batch/M axes, the contraction axes,
+    # and any axis already holding A's pending partial sums — N-sharding
+    # a partial axis would make the same axis select shards AND carry
+    # partials of them, an inconsistent spec.
+    taken = {ax for e in pa[:-1] for ax in e} | set(k_axes) | set(a.partial)
+    n_axes = _filter_axes(pb[-1], taken)
+
+    want_pl = {i: pa[i] for i in range(lead) if pa[i]}
+    if k_axes:
+        want_pl[len(b.shape) - 2] = k_axes
+    if n_axes:
+        want_pl[len(b.shape) - 1] = n_axes
+    want_b = b.with_placement(want_pl)
+    redists = []
+    if not b.equivalent(want_b):
+        redists.append(redistribute(b, want_b, node.inputs[1]))
+
+    out_shape = a.shape[:-1] + (b.shape[-1],)
+    placement = {i: e for i, e in enumerate(pa[:-1]) if e}
+    if n_axes:
+        placement[len(out_shape) - 1] = n_axes
+    out = AxeSpec.sharded(
+        out_shape, a.space, placement, a.dtype,
+        partial=tuple(sorted(set(a.partial) | set(k_axes))),
+    )
+    return out, tuple(redists)
+
+
+def rule_attention(node: OpNode, q: AxeSpec, k: AxeSpec, v: AxeSpec):
+    """Softmax(Q Kᵀ) V on [..., H, S, D] operands: batch/head placements
+    must agree across q/k/v (k and v are redistributed to q's), the
+    sequence and head_dim contractions stay local, and the output takes
+    q's spec — the flash-attention kernel's contract."""
+    pq = q.placement()
+    mesh_shape = q.space.mesh_shape
+    redists = []
+    if q.partial:
+        # softmax is nonlinear: pending partial sums on q must be
+        # reduced BEFORE attention, not deferred past it
+        resolved_q = q.with_placement({i: e for i, e in enumerate(pq) if e})
+        redists.append(redistribute(q, resolved_q, node.inputs[0]))
+        q = resolved_q
+    for name, op in ((node.inputs[1], k), (node.inputs[2], v)):
+        # align every non-sequence dim to q's placement; kv sequence dim
+        # (rank-2) must be unsharded for the on-device kernel. GQA: a kv
+        # head count the axis does not divide stays replicated (the
+        # kernel broadcasts heads locally).
+        want_pl = {}
+        for i, e in enumerate(pq[:-2]):
+            ext = math.prod(mesh_shape[a] for a in e)
+            if e and op.shape[i] % ext == 0:
+                want_pl[i] = e
+        want = op.with_placement(want_pl)
+        if not op.equivalent(want):
+            redists.append(redistribute(op, want, name))
+    out = AxeSpec.sharded(
+        q.shape, q.space, {i: e for i, e in enumerate(pq) if e}, q.dtype
+    )
+    return out, tuple(redists)
+
+
+def rule_moe_dispatch(node: OpNode, x: AxeSpec):
+    """Capacity routing [T, d] → [E, C, d] with expert parallelism: the
+    expert dim shards over the axes named by ``attrs['expert_axes']``
+    (default: the 'model' axis when it divides E). Tokens cross devices,
+    so the plan records an AllToAll over each expert axis."""
+    from repro.core.collective import AllToAll, plan_comm_bytes
+
+    e = int(node.attr("experts"))
+    c = int(node.attr("capacity"))
+    expert_axes = tuple(node.attr("expert_axes") or ())
+    mesh_shape = x.space.mesh_shape
+    pre = ()
+    if x.partial:
+        # routing decisions need the true values: resolve pending
+        # partial sums before dispatching tokens
+        resolved = x.with_placement(
+            {i: p for i, p in enumerate(x.placement()) if p}
+        )
+        pre = (redistribute(x, resolved, node.inputs[0]),)
+        x = resolved
+    if not expert_axes and "model" in mesh_shape and e % mesh_shape["model"] == 0:
+        expert_axes = ("model",)
+    expert_axes = tuple(
+        a for a in expert_axes if a in mesh_shape and e % mesh_shape[a] == 0
+    )
+
+    px = x.placement()
+    taken = set(expert_axes)
+    d_axes = _filter_axes(px[-1], taken)
+    out = AxeSpec.sharded(
+        (e, c, x.shape[-1]), x.space,
+        {0: expert_axes, 2: d_axes}, x.dtype,
+    )
+    steps = tuple(AllToAll(a, 0, 0) for a in expert_axes)
+    bytes_ = plan_comm_bytes(steps, out.to_dtensor(), mesh_shape, _itemsize(x.dtype))
+    redists = pre + (
+        (Redistribution(node.inputs[0], x, out, steps, bytes_),) if steps else ()
+    )
+    return out, redists
+
+
+def rule_norm(node: OpNode, x: AxeSpec):
+    """Row normalization (rmsnorm/layernorm): reduces over the last dim,
+    so the last dim must be locally complete — a last-dim shard is
+    gathered — and pending partial sums must be resolved first."""
+    px = x.placement()
+    want_pl = {i: e for i, e in enumerate(px[:-1]) if e}
+    want = x.with_placement(want_pl)
+    redists = []
+    if x.partial or not x.equivalent(want):
+        redists.append(redistribute(x, want, node.inputs[0]))
+    return want, tuple(redists)
+
+
+def rule_elementwise(node: OpNode, *xs: AxeSpec):
+    """Pointwise ops: everything aligns to the first operand; partials
+    are resolved (an add of two partial operands would double-count)."""
+    x0 = xs[0]
+    p0 = {i: e for i, e in enumerate(x0.placement()) if e}
+    out = x0.with_placement(p0)
+    redists = []
+    if x0.partial:
+        redists.append(redistribute(x0, out, node.inputs[0]))
+    for name, op in zip(node.inputs[1:], xs[1:]):
+        if op.shape != x0.shape:
+            # broadcast operand: placement alignment is local, but a
+            # pending partial sum must still be reduced before use
+            if op.partial:
+                resolved = op.with_placement(
+                    {i: e for i, e in enumerate(op.placement()) if e}
+                )
+                redists.append(redistribute(op, resolved, name))
+            continue
+        want = op.with_placement(p0)
+        if op.partial or not op.equivalent(want):
+            redists.append(redistribute(op, want, name))
+    return out, tuple(redists)
+
+
+_RULES = {
+    "matmul": rule_matmul,
+    "attention": rule_attention,
+    "moe_dispatch": rule_moe_dispatch,
+    "norm": rule_norm,
+    "elementwise": rule_elementwise,
+}
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+
+def propagate(
+    nodes: Sequence[OpNode],
+    inputs: Mapping[str, AxeSpec],
+    *,
+    space: Optional[PhysicalSpace] = None,
+) -> LayoutPlan:
+    """Walk ``nodes`` in order, inferring each output AxeSpec and the
+    required redistributions. ``inputs`` seeds the environment; node
+    outputs become available to later nodes by name."""
+    env: Dict[str, AxeSpec] = dict(inputs)
+    if space is None:
+        if not env:
+            raise PropagationError("no inputs and no space given")
+        space = next(iter(env.values())).space
+    for s in env.values():
+        if s.space != space:
+            raise PropagationError(f"mixed physical spaces: {s.space} vs {space}")
+
+    entries: List[PlanEntry] = []
+    for node in nodes:
+        rule = _RULES.get(node.kind)
+        if rule is None:
+            raise PropagationError(f"no propagation rule for op kind {node.kind!r}")
+        try:
+            operands = [env[i] for i in node.inputs]
+        except KeyError as e:
+            raise PropagationError(f"{node.name}: unknown input {e}") from e
+        try:
+            out_spec, redists = rule(node, *operands)
+        except SpecError as e:
+            raise PropagationError(f"{node.name}: {e}") from e
+        env[node.out] = out_spec
+        entries.append(PlanEntry(node, out_spec, tuple(redists)))
+    return LayoutPlan(space, entries, env)
+
+
+def propagate_matmul(a: AxeSpec, b: AxeSpec) -> Tuple[AxeSpec, Tuple[Redistribution, ...]]:
+    """Single-op convenience: the propagated output spec of ``a @ b``."""
+    node = OpNode("matmul", "matmul", ("a", "b"), "c")
+    return rule_matmul(node, a, b)

@@ -1,0 +1,340 @@
+"""AxeSpec sharding rules for params / optimizer states / batches /
+serving caches — the single replacement for the three parallel
+PartitionSpec rule tables that used to live in ``train.sharding``.
+
+Every rule is a *preference list of placements*; the first one the Axe
+algebra admits (exact divisibility — no silent GSPMD padding) wins, and
+the result is an :class:`~repro.axe.spec.AxeSpec`, not a PartitionSpec:
+the layout is the source of truth, and ``repro.axe.lower.to_pspec`` /
+``to_named_sharding`` derive whatever GSPMD needs. The old
+``train.sharding`` entry points remain as thin deprecated shims over
+this module.
+
+E.g. attention projections prefer head-sharding (column parallel) and
+fall back to d_model-sharding (row parallel, partial-sum outputs) when
+the head count does not divide the ``model`` axis (starcoder2: 36
+heads, whisper: 20 heads).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
+
+PSpecEntry = Union[None, str, Tuple[str, ...]]
+
+
+def _entry_axes(entry: PSpecEntry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def placement_of_entries(entries: Sequence[PSpecEntry]) -> Tuple[Tuple[str, ...], ...]:
+    return tuple(_entry_axes(e) for e in entries)
+
+
+def dp_axes(space: PhysicalSpace) -> Tuple[str, ...]:
+    """The data-parallel mesh axes present in this space."""
+    mesh_shape = space.mesh_shape
+    return tuple(a for a in ("pod", "data") if a in mesh_shape)
+
+
+def _dtype_str(leaf) -> str:
+    return str(getattr(getattr(leaf, "dtype", None), "name", getattr(leaf, "dtype", "float32")))
+
+
+def spec_of_entries(
+    shape: Sequence[int],
+    entries: Sequence[PSpecEntry],
+    space: PhysicalSpace,
+    dtype: str = "float32",
+) -> Optional[AxeSpec]:
+    """Build the AxeSpec for one placement preference; None when the
+    algebra rejects it (non-divisible dim, unknown axis, reuse)."""
+    entries = tuple(entries) + (None,) * (len(tuple(shape)) - len(tuple(entries)))
+    try:
+        return AxeSpec.sharded(
+            shape, space,
+            {i: _entry_axes(e) for i, e in enumerate(entries) if _entry_axes(e)},
+            dtype,
+        )
+    except SpecError:
+        return None
+
+
+def pick_spec(
+    shape: Sequence[int],
+    preferences: Sequence[Sequence[PSpecEntry]],
+    space: PhysicalSpace,
+    dtype: str = "float32",
+) -> AxeSpec:
+    """First Axe-admissible preference; final fallback is replication."""
+    for pref in preferences:
+        spec = spec_of_entries(shape, pref, space, dtype)
+        if spec is not None:
+            return spec
+    return AxeSpec.replicated(shape, space, dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# name -> list of preferred (suffix) placements applied to the *trailing*
+# dims (stacked scan/vmap leading dims are padded automatically).
+PARAM_RULES: Dict[str, Tuple[Tuple, ...]] = {
+    # embeddings
+    "embed": ((("model", None)), (None, "model")),
+    "lm_head": ((None, "model"), ("model", None)),
+    "mm_proj": ((None, "model"),),
+    # attention  (wq/wk/wv: [d, H, hd]; wo: [H, hd, d]).
+    # NOTE(perf §C-iter2, refuted): replacing the row-parallel fallback
+    # with replicated projections did NOT remove the big all-reduces
+    # (those are the DP gradient reduction) and raised memory 18.5→21.7s.
+    "wq": ((None, "model", None), ("model", None, None)),
+    "wk": ((None, "model", None), ("model", None, None)),
+    "wv": ((None, "model", None), ("model", None, None)),
+    "attn.wo": (("model", None, None), (None, None, "model")),
+    # dense mlp
+    "wg": ((None, "model"),),
+    "wu": ((None, "model"),),
+    "wi": ((None, "model"),),
+    "mlp.wo": (("model", None),),
+    # moe (router replicated; experts over model = expert parallelism)
+    "router": ((None, None),),
+    "moe.wg": (("model", None, None), (None, None, "model")),
+    "moe.wu": (("model", None, None), (None, None, "model")),
+    "moe.wo": (("model", None, None), (None, "model", None)),
+    # ssm
+    "wx": ((None, "model"),),
+    "wz": ((None, "model"),),
+    "wdt": ((None, "model"),),
+    "wB": ((None, None),),
+    "wC": ((None, None),),
+    "ssm.wo": (("model", None),),
+}
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return ".".join(parts)
+
+
+_CTX_ALIASES = {
+    "attn": "attn", "self_attn": "attn", "cross_attn": "attn",
+    "mlp": "mlp", "moe": "moe", "ssm": "ssm",
+}
+
+
+def rule_for(path_string: str) -> Optional[Tuple[Tuple, ...]]:
+    segs = path_string.split(".")
+    name = segs[-1]
+    ctx = None
+    for s in segs[:-1]:
+        if s in _CTX_ALIASES:
+            ctx = _CTX_ALIASES[s]
+    if ctx and f"{ctx}.{name}" in PARAM_RULES:
+        return PARAM_RULES[f"{ctx}.{name}"]
+    if name == "wo":  # wo is always context-qualified
+        return None
+    return PARAM_RULES.get(name)
+
+
+def fsdp_extend(
+    spec: AxeSpec, *, axes: Sequence[str] = ("data",)
+) -> AxeSpec:
+    """2D sharding: additionally shard the first replicated dim over the
+    FSDP axes (params are gathered per-layer inside the scan by GSPMD).
+    Required for ≥100B models: TP-only leaves >16 GB of params/device."""
+    mesh_shape = spec.space.mesh_shape
+    avail = [a for a in axes if a in mesh_shape and mesh_shape[a] > 1]
+    if not avail:
+        return spec
+    total = math.prod(mesh_shape[a] for a in avail)
+    placement = list(spec.placement())
+    shape = spec.shape
+    # only shard genuinely large dims (d_model/ff/vocab); sharding small
+    # dims like head_dim makes GSPMD propagate degenerate layouts into
+    # the math (observed: hd-sharded QK -> full-batch logits all-reduce).
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        e, s = placement[i], shape[i]
+        if not e and s % total == 0 and s >= max(512, total):
+            cand = placement.copy()
+            cand[i] = tuple(avail)
+            try:
+                return spec.with_placement({j: a for j, a in enumerate(cand) if a})
+            except SpecError:
+                continue
+    return spec
+
+
+def param_specs(
+    params: Any,
+    space: PhysicalSpace,
+    *,
+    fsdp: bool = False,
+    fsdp_axes: Sequence[str] = ("data",),
+) -> Any:
+    """Pytree of AxeSpecs for a model param tree."""
+    import jax
+
+    def assign(path, leaf):
+        ps = path_str(path)
+        rule = rule_for(ps)
+        dtype = _dtype_str(leaf)
+        if rule is None or leaf.ndim == 0:
+            spec = AxeSpec.replicated(leaf.shape, space, dtype)
+        else:
+            prefs = []
+            for pref in rule:
+                pref = tuple(pref) if isinstance(pref, tuple) else (pref,)
+                pad = leaf.ndim - len(pref)
+                if pad < 0:
+                    continue
+                prefs.append(((None,) * pad) + pref)
+            spec = pick_spec(leaf.shape, prefs, space, dtype)
+        if fsdp:
+            spec = fsdp_extend(spec, axes=fsdp_axes)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+# ---------------------------------------------------------------------------
+# optimizer states: ZeRO-1 (shard moments over the DP axes too)
+# ---------------------------------------------------------------------------
+
+
+def zero1_extend(spec: AxeSpec) -> AxeSpec:
+    """Extend a param spec by sharding a replicated dim over unused
+    data-parallel axes (optimizer-state partitioning). When FSDP already
+    consumed `data`, fall back to single axes — on multi-pod meshes the
+    `pod` axis alone halves the f32 moment footprint (jamba-398B train:
+    26.4 → 15.9 GiB/device, the difference between fitting v5e or not)."""
+    mesh_shape = spec.space.mesh_shape
+    dp = dp_axes(spec.space)
+    if not dp:
+        return spec
+    axis_sets = ([tuple(dp)] if len(dp) > 1 else []) + [(a,) for a in dp]
+    placement = list(spec.placement())
+    for axes in axis_sets:
+        total = math.prod(mesh_shape[a] for a in axes)
+        for i, (e, s) in enumerate(zip(placement, spec.shape)):
+            if not e and s % total == 0 and s >= total:
+                cand = placement.copy()
+                cand[i] = tuple(axes)
+                try:
+                    return spec.with_placement({j: a for j, a in enumerate(cand) if a})
+                except SpecError:
+                    continue
+    return spec
+
+
+def opt_specs(p_specs: Any, *, zero1: bool = True) -> Any:
+    import jax
+
+    if not zero1:
+        return p_specs
+    return jax.tree.map(
+        zero1_extend, p_specs, is_leaf=lambda x: isinstance(x, AxeSpec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def _dp_entry(space: PhysicalSpace) -> PSpecEntry:
+    dp = dp_axes(space)
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def batch_specs(batch: Mapping[str, Any], space: PhysicalSpace) -> Dict[str, AxeSpec]:
+    dp_entry = _dp_entry(space)
+    out = {}
+    for k, v in batch.items():
+        out[k] = pick_spec(v.shape, [(dp_entry,), (None,)], space, _dtype_str(v))
+    return out
+
+
+def cache_specs(cache: Any, space: PhysicalSpace) -> Any:
+    """KV caches [L, B, S, KV, hd] / SSM states [L, B, H, N, P] / conv
+    [L, B, K, C]: shard batch over DP when divisible, else shard the
+    sequence dim over `data` (long-context decode); heads over `model`."""
+    import jax
+
+    dp_entry = _dp_entry(space)
+
+    def assign(path, leaf):
+        ps = path_str(path)
+        shape = leaf.shape
+        dtype = _dtype_str(leaf)
+        if ps.endswith(("k", "v", "ck", "cv")) and leaf.ndim >= 4:
+            # [..., B, S, KV, hd]: prefer batch-DP + head-TP; fall back to
+            # sequence sharding (long-context / non-dividing KV heads).
+            lead = leaf.ndim - 4
+            prefs = [
+                ((None,) * lead) + (dp_entry, None, "model", None),
+                ((None,) * lead) + (dp_entry, "model", None, None),
+                ((None,) * lead) + (None, ("data", "model"), None, None),
+                ((None,) * lead) + (None, "data", None, None),
+                ((None,) * lead) + (dp_entry, None, None, None),
+            ]
+            return pick_spec(shape, prefs, space, dtype)
+        if ps.endswith("ssm") and leaf.ndim >= 4:
+            # [..., B, H, N, P]
+            lead = leaf.ndim - 4
+            prefs = [
+                ((None,) * lead) + (dp_entry, "model", None, None),
+                ((None,) * lead) + (None, "model", None, None),
+            ]
+            return pick_spec(shape, prefs, space, dtype)
+        if ps.endswith("conv") and leaf.ndim >= 3:
+            lead = leaf.ndim - 3
+            prefs = [((None,) * lead) + (dp_entry, None, None)]
+            return pick_spec(shape, prefs, space, dtype)
+        return AxeSpec.replicated(shape, space, dtype)
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers over pytrees
+# ---------------------------------------------------------------------------
+
+
+def pspec_tree(specs: Any) -> Any:
+    """AxeSpec pytree → PartitionSpec pytree (inter-device lowering)."""
+    import jax
+
+    from repro.axe import lower
+
+    return jax.tree.map(
+        lower.to_pspec, specs, is_leaf=lambda x: isinstance(x, AxeSpec)
+    )
+
+
+def sharding_tree(specs: Any, mesh) -> Any:
+    """AxeSpec pytree → NamedSharding pytree on a concrete mesh."""
+    import jax
+
+    from repro.axe import lower
+
+    return jax.tree.map(
+        lambda s: lower.to_named_sharding(s, mesh),
+        specs,
+        is_leaf=lambda x: isinstance(x, AxeSpec),
+    )

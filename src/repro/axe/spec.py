@@ -1,0 +1,292 @@
+"""AxeSpec — one layout spec from the device mesh down to the Pallas block.
+
+The paper's central claim is that a *single* named-axis layout algebra
+covers tiling, sharding, replication, and offsets at every level of the
+machine. Before this module the repo carried three parallel layout
+vocabularies:
+
+1. the Axe ``Layout`` algebra (``core.layout``) — the math,
+2. PartitionSpec rule tables (``train.sharding``) — inter-device,
+3. per-kernel block-size plumbing (``core.blockspec``, ``kernels/*``) —
+   on-device.
+
+``AxeSpec`` unifies them: it binds a logical shape (and dtype) to an Axe
+``Layout`` over a :class:`PhysicalSpace` that names *both* the device
+mesh axes and the on-device memory axes, mirroring the execution-scope
+hierarchy in ``core.scopes``::
+
+    MESH   —  pod / data / model / expert / pipe   (device placement)
+    GRID   —  grid_i / grid_j / grid_k             (Pallas grid steps)
+    BLOCK  —  m                                    (linear HBM / VMEM box)
+    VREG   —  sub / lane                           (vector-register plane)
+
+One spec, two lowerings (``repro.axe.lower``):
+
+* ``to_named_sharding`` — the inter-device adapter (GSPMD), subsuming
+  ``core.dtensor.pspec_of_layout``;
+* ``to_blockspec`` — the on-device adapter (Pallas grid + BlockSpec),
+  subsuming ``core.blockspec.derive_blockspec``.
+
+Propagation over op graphs lives in ``repro.axe.propagate``; the
+sharding rule engine (what used to be PartitionSpec preference tables)
+lives in ``repro.axe.rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Sequence, Tuple
+
+from repro.core.axes import MEM_AXIS, is_mesh_axis
+from repro.core.layout import (
+    GroupingError,
+    It,
+    Layout,
+    canonicalize,
+    group,
+    layouts_equal,
+)
+
+PlacementEntry = Tuple[str, ...]          # mesh axes sharding one logical dim
+Placement = Tuple[PlacementEntry, ...]    # one entry per logical dim
+
+
+# ---------------------------------------------------------------------------
+# PhysicalSpace
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalSpace:
+    """The named physical space an :class:`AxeSpec` maps into.
+
+    ``mesh`` is the ordered (axis, size) tuple of the device mesh; the
+    on-device memory axes (``m``, ``sub``, ``lane``) and the Pallas grid
+    axes (``grid_*``) are implicit — every space has them, with extents
+    fixed by the tensor being laid out rather than by the machine.
+    """
+
+    mesh: Tuple[Tuple[str, int], ...]
+
+    def __post_init__(self) -> None:
+        for a, n in self.mesh:
+            if not is_mesh_axis(a):
+                raise ValueError(f"{a!r} is not a registered mesh axis")
+            if n < 1:
+                raise ValueError(f"mesh axis {a!r} has non-positive size {n}")
+
+    @staticmethod
+    def from_mesh_shape(mesh_shape: Mapping[str, int]) -> "PhysicalSpace":
+        return PhysicalSpace(tuple((str(a), int(n)) for a, n in mesh_shape.items()))
+
+    @property
+    def mesh_shape(self) -> Dict[str, int]:
+        return dict(self.mesh)
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(n for _, n in self.mesh) or 1
+
+    def axis_size(self, axis: str) -> int:
+        return self.mesh_shape.get(axis, 1)
+
+    def signature(self) -> str:
+        return ",".join(f"{a}={n}" for a, n in self.mesh)
+
+    def __repr__(self) -> str:
+        return f"PhysicalSpace({self.signature()})"
+
+
+# ---------------------------------------------------------------------------
+# AxeSpec
+# ---------------------------------------------------------------------------
+
+
+class SpecError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class AxeSpec:
+    """A logical tensor bound to one Axe layout over a physical space.
+
+    ``layout`` maps the (row-major flattened) logical index into the
+    space's mesh axes plus the per-device linear memory axis ``m``.
+    ``partial`` names mesh axes over which the values are *partial sums*
+    pending reduction (the Fig. 8 reduce-scatter precondition) — a
+    property of the data, carried alongside the placement so the
+    propagation pass can resolve it with AllReduce/ReduceScatter steps.
+    """
+
+    shape: Tuple[int, ...]
+    layout: Layout
+    space: PhysicalSpace
+    dtype: str = "float32"
+    partial: Tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        object.__setattr__(self, "partial", tuple(self.partial))
+        if not self.layout.admits(self.shape):
+            raise SpecError(
+                f"layout of size {self.layout.size} does not admit shape {self.shape}"
+            )
+
+    # -- constructors ---------------------------------------------------
+    @staticmethod
+    def sharded(
+        shape: Sequence[int],
+        space: PhysicalSpace,
+        placement: Mapping[int, Sequence[str]] | Placement = (),
+        dtype: str = "float32",
+        partial: Sequence[str] = (),
+    ) -> "AxeSpec":
+        """Build the canonical spec sharding dim ``i`` over the given
+        mesh axes (remaining mesh axes become replication iters). This
+        is the constructor the rule engine uses; divisibility is
+        enforced by the algebra, not by GSPMD padding."""
+        shape = tuple(int(s) for s in shape)
+        if isinstance(placement, Mapping):
+            entries: list = [()] * len(shape)
+            for i, axes in placement.items():
+                if not (0 <= int(i) < len(shape)):
+                    raise SpecError(
+                        f"placement dim {i} out of range for rank-{len(shape)} shape {shape}"
+                    )
+                entries[int(i)] = tuple(axes)
+        else:
+            entries = [tuple(e) for e in placement] + [()] * (len(shape) - len(placement))
+        mesh_shape = space.mesh_shape
+        used: list = [a for e in entries for a in e]
+        if len(used) != len(set(used)):
+            raise SpecError(f"mesh axis used twice in placement {entries}")
+
+        locals_: list = []
+        for s, e in zip(shape, entries):
+            div = math.prod(mesh_shape.get(a, 1) for a in e)
+            for a in e:
+                if a not in mesh_shape:
+                    raise SpecError(f"unknown mesh axis {a!r} in space {space}")
+            if div == 0 or s % div:
+                raise SpecError(f"dim of size {s} not divisible by mesh extent {div}")
+            locals_.append(s // div)
+        mem_strides = []
+        acc = 1
+        for l in reversed(locals_):
+            mem_strides.append(acc)
+            acc *= l
+        mem_strides.reverse()
+
+        D: list = []
+        for e, loc, ms in zip(entries, locals_, mem_strides):
+            for a in e:
+                D.append(It(mesh_shape[a], 1, a))
+            D.append(It(loc, ms, MEM_AXIS))
+        R = tuple(
+            It(n, 1, a) for a, n in space.mesh if a not in used and n > 1
+        )
+        return AxeSpec(shape, canonicalize(Layout(tuple(D), R)), space, dtype, tuple(partial))
+
+    @staticmethod
+    def replicated(
+        shape: Sequence[int], space: PhysicalSpace, dtype: str = "float32"
+    ) -> "AxeSpec":
+        return AxeSpec.sharded(shape, space, {}, dtype)
+
+    # -- views ----------------------------------------------------------
+    def canonical(self) -> "AxeSpec":
+        return dataclasses.replace(self, layout=canonicalize(self.layout))
+
+    def placement(self) -> Placement:
+        """Per-logical-dim mesh-axis placement, recovered from the
+        layout by grouping. Only fully-sharded, unit-strided mesh iters
+        are recognized (the GSPMD-expressible subset); anything else
+        raises — callers that want the raw layout use ``.layout``."""
+        mesh_shape = self.space.mesh_shape
+        try:
+            g = group(self.layout, self.shape)
+        except GroupingError as e:
+            raise SpecError(f"layout does not group by shape {self.shape}: {e}") from e
+        out: list = []
+        for blk in g.blocks:
+            dim_axes: list = []
+            for it in blk:
+                ax = it.axis
+                if ax is not None and is_mesh_axis(ax):
+                    if it.stride[ax] != 1 or it.extent != mesh_shape.get(ax):
+                        raise SpecError(f"mesh iter {it} is not a full unit-stride shard")
+                    dim_axes.append(ax)
+            out.append(tuple(dim_axes))
+        return tuple(out)
+
+    def local_shape(self) -> Tuple[int, ...]:
+        """Per-device logical shape after removing the mesh iters."""
+        mesh_shape = self.space.mesh_shape
+        out = []
+        for s, axes in zip(self.shape, self.placement()):
+            div = math.prod(mesh_shape[a] for a in axes)
+            out.append(s // div)
+        return tuple(out)
+
+    def sharded_axes(self) -> Tuple[str, ...]:
+        return tuple(a for axes in self.placement() for a in axes)
+
+    def replication_axes(self) -> Tuple[str, ...]:
+        used = set(self.sharded_axes())
+        return tuple(a for a, n in self.space.mesh if a not in used and n > 1)
+
+    def with_placement(
+        self, placement: Mapping[int, Sequence[str]] | Placement,
+        partial: Sequence[str] = (),
+    ) -> "AxeSpec":
+        return AxeSpec.sharded(self.shape, self.space, placement, self.dtype, partial)
+
+    def with_partial(self, axes: Sequence[str]) -> "AxeSpec":
+        return dataclasses.replace(self, partial=tuple(axes))
+
+    # -- interchange -----------------------------------------------------
+    def to_dtensor(self):
+        """The distribution-layer view (``core.dtensor.DTensorSpec``)."""
+        from repro.core.dtensor import DTensorSpec
+
+        return DTensorSpec(self.shape, self.layout, self.dtype)
+
+    # -- identity --------------------------------------------------------
+    def signature(self) -> str:
+        """Canonical string identity: equal specs (semantically — layouts
+        that canonicalize equal, same shape/space/partial) produce equal
+        signatures. This is the layout key the tune cache uses."""
+        shp = "x".join(str(s) for s in self.shape)
+        parts = [f"axe[{shp}]", repr(canonicalize(self.layout)), self.space.signature()]
+        if self.partial:
+            parts.append("partial:" + ",".join(sorted(self.partial)))
+        return "|".join(parts)
+
+    def equivalent(self, other: "AxeSpec") -> bool:
+        return (
+            self.shape == other.shape
+            and self.space == other.space
+            and sorted(self.partial) == sorted(other.partial)
+            and layouts_equal(self.layout, other.layout)
+        )
+
+    def bytes_total(self, itemsize: int) -> int:
+        return math.prod(self.shape) * itemsize
+
+    def bytes_per_device(self, itemsize: int) -> int:
+        shards = 1
+        for it in self.layout.D:
+            ax = it.axis
+            if ax is not None and is_mesh_axis(ax):
+                shards *= it.extent
+        return self.bytes_total(itemsize) // shards
+
+    def __repr__(self) -> str:
+        try:
+            pl = ",".join(
+                "(" + "+".join(axes) + ")" if axes else "·" for axes in self.placement()
+            )
+        except SpecError:
+            pl = repr(self.layout)
+        part = f" partial={self.partial}" if self.partial else ""
+        return f"AxeSpec({'x'.join(map(str, self.shape))} [{pl}] @ {self.space.signature()}{part})"

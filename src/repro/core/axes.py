@@ -35,6 +35,7 @@ DEFAULT_AXES: Dict[str, AxisDef] = {
     "data": AxisDef("data", AxisKind.MESH),
     "model": AxisDef("model", AxisKind.MESH),
     "expert": AxisDef("expert", AxisKind.MESH),
+    "pipe": AxisDef("pipe", AxisKind.MESH),   # pipeline stages (train.pipeline)
     # memory
     "m": AxisDef("m", AxisKind.MEMORY),       # linear HBM offsets
     "sub": AxisDef("sub", AxisKind.MEMORY),   # VREG sublane (TPU "P"-like)
@@ -45,7 +46,7 @@ DEFAULT_AXES: Dict[str, AxisDef] = {
     "grid_k": AxisDef("grid_k", AxisKind.GRID),
 }
 
-MESH_AXES: Tuple[str, ...] = ("pod", "data", "model", "expert")
+MESH_AXES: Tuple[str, ...] = ("pod", "data", "model", "expert", "pipe")
 MEM_AXIS = "m"
 
 

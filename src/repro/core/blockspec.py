@@ -20,18 +20,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.layout import (
-    Layout,
-    canonicalize,
-    direct_sum,
-    from_shape,
-    layouts_equal,
-    strided,
-)
+from repro.core.layout import direct_sum, from_shape, layouts_equal, strided
 
 
 def vreg_atom(dtype) -> Tuple[int, int]:
@@ -45,7 +38,10 @@ MXU_TILE = (128, 128)
 
 
 class TilingError(ValueError):
-    pass
+    """A tile the Axe algebra rejects for a shape. Raised through one
+    shared path (``check_tiling``) by every kernel call site, so a
+    non-divisible shape surfaces one actionable message (shape, tile,
+    nearest valid tile) instead of a backend-dependent Pallas failure."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +91,59 @@ def derive_tiling(shape: Sequence[int], tile: Sequence[int], dtype=jnp.float32) 
     return TileDerivation(shape, tile, grid, tuple(full_strides), vreg_ok, mxu_ok)
 
 
+def nearest_valid_tile(
+    shape: Sequence[int], tile: Sequence[int], dtype=jnp.float32
+) -> Tuple[int, ...]:
+    """The valid tile closest to the requested one, per dim, drawn from
+    ``candidate_blocks`` — what the unified TilingError suggests."""
+    shape = tuple(int(s) for s in shape)
+    tile = tuple(int(t) for t in tile) + (1,) * (len(shape) - len(tile))
+    sub, lane = vreg_atom(dtype)
+    mins = [1] * len(shape)
+    if len(shape) >= 2:
+        mins[-2], mins[-1] = sub, lane
+    elif len(shape) == 1:
+        mins[-1] = lane
+    out = []
+    for s, t, mn in zip(shape, tile, mins):
+        cands = candidate_blocks(s, minimum=mn) or (s,)
+        out.append(min(cands, key=lambda c: (abs(c - t), c)))
+    return tuple(out)
+
+
+def check_tiling(
+    shape: Sequence[int],
+    tile: Sequence[int],
+    dtype=jnp.float32,
+    *,
+    op: str = "pallas",
+    require_vreg: bool = False,
+) -> TileDerivation:
+    """The single kernel-facing tiling validation path.
+
+    Wraps ``derive_tiling`` so every kernel call site raises the same
+    actionable ``TilingError`` — naming the op, the offending shape and
+    tile, and the nearest Axe-valid tile from ``candidate_blocks`` —
+    rather than a backend-dependent Pallas shape assertion."""
+    try:
+        d = derive_tiling(shape, tile, dtype)
+    except TilingError as e:
+        suggestion = nearest_valid_tile(shape, tile, dtype)
+        raise TilingError(
+            f"[{op}] tile {tuple(int(t) for t in tile)} is not Axe-valid for shape "
+            f"{tuple(int(s) for s in shape)} ({jnp.dtype(dtype).name}): {e}; "
+            f"nearest valid tile {suggestion}"
+        ) from e
+    if require_vreg and not d.vreg_aligned:
+        suggestion = nearest_valid_tile(shape, tile, dtype)
+        raise TilingError(
+            f"[{op}] tile {tuple(int(t) for t in tile)} not VREG-aligned for shape "
+            f"{tuple(int(s) for s in shape)} ({jnp.dtype(dtype).name}, atom "
+            f"{vreg_atom(dtype)}); nearest valid tile {suggestion}"
+        )
+    return d
+
+
 def derive_blockspec(
     shape: Sequence[int],
     tile: Sequence[int],
@@ -102,16 +151,16 @@ def derive_blockspec(
     *,
     index_map=None,
     require_vreg: bool = False,
+    op: str = "pallas",
 ):
-    """Return ``(grid, pl.BlockSpec)`` for a dense tensor, Axe-verified."""
+    """Return ``(grid, pl.BlockSpec)`` for a dense tensor, Axe-verified.
+
+    Kept as the shape-level entry point; the spec-level adapter is
+    ``repro.axe.lower.to_blockspec`` (which routes here conceptually —
+    both share the ``check_tiling`` error path)."""
     from jax.experimental import pallas as pl  # deferred: keep core import-light
 
-    d = derive_tiling(shape, tile, dtype)
-    if require_vreg and not d.vreg_aligned:
-        raise TilingError(
-            f"tile {tile} not VREG-aligned for {jnp.dtype(dtype).name} "
-            f"(atom {vreg_atom(dtype)})"
-        )
+    d = check_tiling(shape, tile, dtype, op=op, require_vreg=require_vreg)
     if index_map is None:
         rank = len(d.grid)
         index_map = lambda *ids: ids[:rank]

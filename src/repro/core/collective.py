@@ -14,7 +14,6 @@ import dataclasses
 from typing import List, Mapping, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.dtensor import DTensorSpec, pspec_of_layout
 

@@ -13,29 +13,24 @@ it operationally by converting both ways:
 
 Model code builds Axe layouts; NamedShardings handed to ``jax.jit`` are
 derived, never hand-written.
+
+Both conversions are now thin shims over the unified AxeSpec lowering
+adapter in ``repro.axe.lower`` (see docs/axespec.md); ``DTensorSpec``
+remains the distribution-layer signature type the collective layer
+(``core.collective``) plans over.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+from typing import Mapping, Sequence, Tuple, Union
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.axes import MEM_AXIS, is_mesh_axis
-from repro.core.layout import GroupingError, It, Iter, Layout, canonicalize, group, layouts_equal
-from repro.core.za import ZA
+from repro.core.axes import is_mesh_axis
+from repro.core.layout import Layout, layouts_equal
 
 PSpecEntry = Union[None, str, Tuple[str, ...]]
-
-
-def _entry_axes(entry: PSpecEntry) -> Tuple[str, ...]:
-    if entry is None:
-        return ()
-    if isinstance(entry, str):
-        return (entry,)
-    return tuple(entry)
 
 
 def layout_of_pspec(
@@ -43,45 +38,12 @@ def layout_of_pspec(
     pspec: Sequence[PSpecEntry],
     mesh_shape: Mapping[str, int],
 ) -> Layout:
-    """Axe layout of a tensor sharded per ``pspec`` on mesh ``mesh_shape``.
+    """Deprecated shim: the implementation moved to
+    ``repro.axe.lower.layout_of_pspec`` (the AxeSpec inter-device
+    adapter). Kept so existing imports keep working."""
+    from repro.axe import lower as _axe_lower
 
-    Per dim i with mesh axes (a, b, ...): D gets iters
-    ``(size_a, 1@a), (size_b, 1@b), ..., (local_i, stride@m)`` — exactly
-    the paper's "fully sharded" 2×2-mesh example generalized. Mesh axes
-    unused by any dim land in R (replication).
-    """
-    shape = tuple(int(s) for s in shape)
-    pspec = tuple(pspec) + (None,) * (len(shape) - len(pspec))
-    used = [a for e in pspec for a in _entry_axes(e)]
-    if len(used) != len(set(used)):
-        raise ValueError(f"mesh axis used twice in pspec {pspec}")
-    for a in used:
-        if a not in mesh_shape:
-            raise ValueError(f"unknown mesh axis {a!r}")
-
-    # local (per-device) shape and row-major local strides
-    locals_: list[int] = []
-    for s, e in zip(shape, pspec):
-        div = math.prod(mesh_shape[a] for a in _entry_axes(e))
-        if s % div:
-            raise ValueError(f"dim of size {s} not divisible by mesh extent {div}")
-        locals_.append(s // div)
-    mem_strides = []
-    acc = 1
-    for l in reversed(locals_):
-        mem_strides.append(acc)
-        acc *= l
-    mem_strides.reverse()
-
-    D: list[Iter] = []
-    for s, e, loc, ms in zip(shape, pspec, locals_, mem_strides):
-        for a in _entry_axes(e):
-            D.append(It(mesh_shape[a], 1, a))
-        D.append(It(loc, ms, MEM_AXIS))
-    R = tuple(
-        It(size, 1, a) for a, size in mesh_shape.items() if a not in used and size > 1
-    )
-    return canonicalize(Layout(tuple(D), R))
+    return _axe_lower.layout_of_pspec(shape, pspec, mesh_shape)
 
 
 def pspec_of_layout(
@@ -89,50 +51,11 @@ def pspec_of_layout(
     shape: Sequence[int],
     mesh_shape: Mapping[str, int],
 ) -> P:
-    """Invert ``layout_of_pspec``; raises if the layout is outside the
-    GSPMD-expressible subset (strided device placement, offsets, ...)."""
-    shape = tuple(int(s) for s in shape)
-    if not layout.O.is_zero:
-        raise ValueError("GSPMD cannot express per-tensor offsets (O != 0)")
-    g = group(layout, shape)
+    """Deprecated shim: subsumed by ``repro.axe.lower.pspec_of_layout``
+    (lowered from ``AxeSpec`` via ``repro.axe.lower.to_pspec``)."""
+    from repro.axe import lower as _axe_lower
 
-    entries: list[PSpecEntry] = []
-    used: list[str] = []
-    for blk, s in zip(g.blocks, shape):
-        dim_axes: list[str] = []
-        local = 1
-        mem_done = False
-        for it in blk:
-            ax = it.axis
-            if ax is None:
-                raise ValueError(f"multi-axis iter {it} not expressible in PartitionSpec")
-            if is_mesh_axis(ax):
-                if mem_done:
-                    raise ValueError("mesh iter inside local-memory digits (interleaved shard)")
-                if it.stride[ax] != 1 or it.extent != mesh_shape.get(ax):
-                    raise ValueError(f"mesh axis {ax} not fully, unit-strided sharded: {it}")
-                dim_axes.append(ax)
-                used.append(ax)
-            elif ax == MEM_AXIS:
-                mem_done = True
-                local *= it.extent
-            else:
-                raise ValueError(f"axis {ax} is not a mesh or linear-memory axis")
-        entries.append(tuple(dim_axes) if len(dim_axes) > 1 else (dim_axes[0] if dim_axes else None))
-
-    # replicated axes must appear in R with full extent (or be size-1)
-    r_axes = {}
-    for it in layout.R:
-        ax = it.axis
-        if ax is None or not is_mesh_axis(ax):
-            raise ValueError(f"replication iter {it} is not a mesh axis")
-        r_axes[ax] = r_axes.get(ax, 1) * it.extent
-    for a, size in mesh_shape.items():
-        if a in used or size == 1:
-            continue
-        if r_axes.get(a, 1) != size:
-            raise ValueError(f"mesh axis {a} neither sharded nor fully replicated")
-    return P(*entries)
+    return _axe_lower.pspec_of_layout(layout, shape, mesh_shape)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,7 +36,7 @@ import itertools
 import math
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
-from repro.core.za import ZA, za
+from repro.core.za import ZA
 
 Shape = Tuple[int, ...]
 

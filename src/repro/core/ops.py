@@ -22,16 +22,15 @@ signatures checked at trace time.
 """
 from __future__ import annotations
 
-import functools
 from typing import Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro import compat
 from repro.core import collective as coll
-from repro.core.blockspec import TilingError, derive_tiling
+from repro.core.blockspec import TilingError, check_tiling
 from repro.core.dtensor import DTensorSpec
 from repro.core.scopes import Scope, current_scope
 
@@ -51,6 +50,8 @@ def matmul(
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
     schedule=None,
+    a_spec=None,
+    b_spec=None,
 ) -> jax.Array:
     """Dispatch a 2-D matmul to the best schedule for the current scope.
 
@@ -60,6 +61,14 @@ def matmul(
     (``repro.tune.get_schedule`` — forced-env > cached-measurement >
     roofline-ranked plan). An infeasible kernel schedule (TilingError)
     falls back to the XLA dot rather than failing the trace.
+
+    ``a_spec`` / ``b_spec`` are optional operand ``AxeSpec``s
+    (``repro.axe``): when given, the tune cache keys on their canonical
+    signatures, so call sites whose layouts canonicalize equal share one
+    schedule. The shapes planned against are ``a``/``b`` as passed —
+    inside a shard_map body those are already the local (per-device)
+    view. Use ``matmul_spec`` to get the propagated output spec and
+    required redistributions.
     """
     scope = current_scope()
     out_dtype = out_dtype or a.dtype
@@ -77,24 +86,37 @@ def matmul(
             else:
                 schedule = tune.get_schedule(
                     "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
+                    layout_sig=tune.layout_signature(a_spec, b_spec),
                 )
         if schedule.impl == "kernel":
             bm = schedule.block("bm", 256)
             bn = schedule.block("bn", 256)
             bk = schedule.block("bk", 512)
             try:
-                derive_tiling(
+                check_tiling(
                     (a.shape[0], b.shape[1]),
                     (min(bm, a.shape[0]), min(bn, b.shape[1])), a.dtype,
+                    op="ops.matmul",
                 )
                 from repro.kernels import ops as kops
 
+                # blocks are fully resolved here (spec-keyed lookup above),
+                # so the kernel wrapper's own schedule path is bypassed
                 return kops.matmul(
                     a, b, block_m=bm, block_n=bn, block_k=bk
                 ).astype(out_dtype)
             except (TilingError, ImportError):
                 pass
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def matmul_spec(a_spec, b_spec):
+    """Propagated output ``AxeSpec`` (+ required input redistributions)
+    of ``matmul(a, b)`` — the §3.2 layout-inference step, exposed so
+    entry points can plan collectives before tracing."""
+    from repro.axe.propagate import propagate_matmul
+
+    return propagate_matmul(a_spec, b_spec)
 
 
 def collective_matmul(

@@ -15,7 +15,7 @@ from __future__ import annotations
 import contextlib
 import enum
 import threading
-from typing import Iterator, List, Optional
+from typing import Iterator, List
 
 
 class Scope(enum.Enum):

@@ -20,6 +20,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro import compat
+from repro.axe.lower import block_lowering
 
 NEG_INF = -1e30
 
@@ -105,13 +106,28 @@ def flash_attention_pallas(
         block_kv = block_kv or sched.block("bkv", 128)
     block_q = min(block_q, sq)
     block_kv = min(block_kv, skv)
-    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
 
     bh = b * h
     qr = q.reshape(bh, sq, d)
     kr = k.reshape(bh, skv, d)
     vr = v.reshape(bh, skv, d)
-    kv_steps = skv // block_kv
+
+    # Axe on-device lowering: q/k/v/o tiles validated through the
+    # unified TilingError path (one actionable error, not a
+    # backend-dependent Pallas shape assertion).
+    q_low = block_lowering((bh, sq, d), (1, block_q, d), q.dtype,
+                           index_map=lambda bhi, qi, kj: (bhi, qi, 0),
+                           op="flash_attention.Q")
+    k_low = block_lowering((bh, skv, d), (1, block_kv, d), k.dtype,
+                           index_map=lambda bhi, qi, kj: (bhi, kj, 0),
+                           op="flash_attention.K")
+    v_low = block_lowering((bh, skv, d), (1, block_kv, d), v.dtype,
+                           index_map=lambda bhi, qi, kj: (bhi, kj, 0),
+                           op="flash_attention.V")
+    o_low = block_lowering((bh, sq, d), (1, block_q, d), q.dtype,
+                           index_map=lambda bhi, qi, kj: (bhi, qi, 0),
+                           op="flash_attention.O")
+    kv_steps = k_low.grid[1]
 
     kernel = functools.partial(
         _flash_kernel,
@@ -126,13 +142,9 @@ def flash_attention_pallas(
     )
     out = pl.pallas_call(
         kernel,
-        grid=(bh, sq // block_q, kv_steps),
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda bhi, qi, kj: (bhi, qi, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda bhi, qi, kj: (bhi, kj, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda bhi, qi, kj: (bhi, kj, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda bhi, qi, kj: (bhi, qi, 0)),
+        grid=(bh, q_low.grid[1], kv_steps),
+        in_specs=[q_low.spec, k_low.spec, v_low.spec],
+        out_specs=o_low.spec,
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, d), jnp.float32),

@@ -22,7 +22,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro import compat
-from repro.core.blockspec import derive_tiling
+from repro.axe.lower import block_lowering
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
@@ -72,21 +72,22 @@ def matmul_pallas(
     block_k = min(block_k, k)
     out_dtype = out_dtype or a.dtype
 
-    # Axe validation: every grid cell must be a strided HBM box (App. F
-    # direct-sum decomposition of the dense layout).
-    derive_tiling((m, k), (block_m, block_k), a.dtype)
-    derive_tiling((k, n), (block_k, block_n), b.dtype)
-    derive_tiling((m, n), (block_m, block_n), out_dtype)
-    k_steps = k // block_k
+    # Axe on-device lowering (repro.axe.lower): every grid cell must be
+    # a strided HBM box (App. F direct-sum decomposition of the dense
+    # layout); infeasible tiles raise the unified TilingError.
+    a_low = block_lowering((m, k), (block_m, block_k), a.dtype,
+                           index_map=lambda i, j, kk: (i, kk), op="matmul.A")
+    b_low = block_lowering((k, n), (block_k, block_n), b.dtype,
+                           index_map=lambda i, j, kk: (kk, j), op="matmul.B")
+    o_low = block_lowering((m, n), (block_m, block_n), out_dtype,
+                           index_map=lambda i, j, kk: (i, j), op="matmul.C")
+    k_steps = a_low.grid[1]
 
     return pl.pallas_call(
         functools.partial(_matmul_kernel, k_steps=k_steps),
-        grid=(m // block_m, n // block_n, k_steps),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        grid=(a_low.grid[0], b_low.grid[1], k_steps),
+        in_specs=[a_low.spec, b_low.spec],
+        out_specs=o_low.spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         compiler_params=compat.tpu_compiler_params(

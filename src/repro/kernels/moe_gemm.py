@@ -20,7 +20,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro import compat
-from repro.core.blockspec import derive_tiling
+from repro.axe.lower import block_lowering
 
 
 def _moe_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
@@ -66,18 +66,21 @@ def moe_gemm_pallas(
     block_d = min(block_d, d)
     out_dtype = out_dtype or x.dtype
 
-    derive_tiling((c, d), (block_c, block_d), x.dtype)
-    derive_tiling((d, f), (block_d, block_f), w.dtype)
-    k_steps = d // block_d
+    # Axe on-device lowering: per-expert tiles validated through the
+    # unified TilingError path (repro.axe.lower.block_lowering).
+    x_low = block_lowering((e, c, d), (1, block_c, block_d), x.dtype,
+                           index_map=lambda ei, ci, fi, ki: (ei, ci, ki), op="moe_gemm.X")
+    w_low = block_lowering((e, d, f), (1, block_d, block_f), w.dtype,
+                           index_map=lambda ei, ci, fi, ki: (ei, ki, fi), op="moe_gemm.W")
+    o_low = block_lowering((e, c, f), (1, block_c, block_f), out_dtype,
+                           index_map=lambda ei, ci, fi, ki: (ei, ci, fi), op="moe_gemm.O")
+    k_steps = x_low.grid[2]
 
     return pl.pallas_call(
         functools.partial(_moe_kernel, k_steps=k_steps),
-        grid=(e, c // block_c, f // block_f, k_steps),
-        in_specs=[
-            pl.BlockSpec((1, block_c, block_d), lambda ei, ci, fi, ki: (ei, ci, ki)),
-            pl.BlockSpec((1, block_d, block_f), lambda ei, ci, fi, ki: (ei, ki, fi)),
-        ],
-        out_specs=pl.BlockSpec((1, block_c, block_f), lambda ei, ci, fi, ki: (ei, ci, fi)),
+        grid=(e, x_low.grid[1], w_low.grid[2], k_steps),
+        in_specs=[x_low.spec, w_low.spec],
+        out_specs=o_low.spec,
         out_shape=jax.ShapeDtypeStruct((e, c, f), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
         compiler_params=compat.tpu_compiler_params(

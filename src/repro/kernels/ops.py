@@ -13,6 +13,11 @@ Resolution happens *before* the jitted inner call, so the schedule is
 part of the static argument key: when an in-process autotune run (or
 ``tune.use_cache`` / the env knobs) changes the answer, the next call
 traces with the new blocks instead of replaying a stale cached trace.
+
+Wrappers accept optional operand ``AxeSpec``s (``repro.axe``): when
+given, the schedule cache keys on the canonical AxeSpec signature, so
+two call sites whose layouts canonicalize equal share one schedule and
+differently-laid-out operands never collide on a key.
 """
 from __future__ import annotations
 
@@ -38,12 +43,13 @@ def _matmul_jit(a, b, *, block_m: int, block_n: int, block_k: int):
 
 
 def matmul(a, b, *, block_m: int | None = None, block_n: int | None = None,
-           block_k: int | None = None):
+           block_k: int | None = None, a_spec=None, b_spec=None):
     if block_m is None or block_n is None or block_k is None:
         from repro import tune
 
         sched = tune.get_schedule(
             "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
+            layout_sig=tune.layout_signature(a_spec, b_spec),
             impl="kernel",
         )
         block_m = block_m or sched.block("bm", 256)
@@ -65,13 +71,16 @@ def _flash_attention_jit(q, k, v, *, causal, window, scale, block_q: int, block_
 def flash_attention(
     q, k, v, *, causal: bool = False, window=None, scale=None,
     block_q: int | None = None, block_kv: int | None = None,
+    q_spec=None, kv_spec=None,
 ):
     if block_q is None or block_kv is None:
         from repro import tune
 
         sched = tune.get_schedule(
             "flash_attention", shapes=(q.shape, k.shape), dtypes=(q.dtype, k.dtype),
-            layout_sig="causal" if causal else "dense",
+            layout_sig=tune.layout_signature(
+                q_spec, kv_spec, tag="causal" if causal else None,
+            ),
             impl="kernel",
         )
         block_q = block_q or sched.block("bq", 128)
@@ -90,12 +99,13 @@ def _moe_gemm_jit(x, w, *, block_c: int, block_f: int, block_d: int):
 
 
 def moe_gemm(x, w, *, block_c: int | None = None, block_f: int | None = None,
-             block_d: int | None = None):
+             block_d: int | None = None, x_spec=None, w_spec=None):
     if block_c is None or block_f is None or block_d is None:
         from repro import tune
 
         sched = tune.get_schedule(
             "moe_gemm", shapes=(x.shape, w.shape), dtypes=(x.dtype, w.dtype),
+            layout_sig=tune.layout_signature(x_spec, w_spec),
             impl="kernel",
         )
         block_c = block_c or sched.block("bc", 128)

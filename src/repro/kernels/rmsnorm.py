@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.axe.lower import block_lowering
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -40,14 +42,17 @@ def rmsnorm_pallas(
     pad = (-rows) % block_rows
     if pad:
         xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    # Axe on-device lowering (unified TilingError path) for the row
+    # blocks; the gamma vector is a single whole-dim block.
+    x_low = block_lowering(xr.shape, (block_rows, d), x.dtype,
+                           index_map=lambda i: (i, 0), op="rmsnorm.X")
+    w_low = block_lowering((d,), (d,), w.dtype,
+                           index_map=lambda i: (0,), op="rmsnorm.W")
     out = pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps),
-        grid=(xr.shape[0] // block_rows,),
-        in_specs=[
-            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
-            pl.BlockSpec((d,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        grid=x_low.grid[:1],
+        in_specs=[x_low.spec, w_low.spec],
+        out_specs=x_low.spec,
         out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
         interpret=interpret,
     )(xr, w)

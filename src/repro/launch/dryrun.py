@@ -5,8 +5,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 with ShapeDtypeStruct inputs (no allocation), record memory/cost
 analysis + collective bytes for the roofline.
 
+``--layout-plan`` skips lowering entirely and reports the propagated
+AxeSpec layout plan (per-op output specs, redistribution collectives,
+and comm bytes from ``collective.plan_comm_bytes``) for one decoder
+layer — the full layout story with no devices at all.
+
 Usage:
     python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k --layout-plan
     python -m repro.launch.dryrun --all --out results.jsonl
 """
 import argparse
@@ -29,6 +35,40 @@ from repro.train.train_loop import TrainState, make_train_step
 
 def _tree_specs(tree):
     return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _mesh_shape(multi_pod: bool):
+    # the make_production_mesh geometry, as a dict — no devices needed
+    return {"pod": 2, "data": 16, "model": 16} if multi_pod else {"data": 16, "model": 16}
+
+
+def layout_plan_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose: bool = True):
+    """Propagate one decoder layer's layout plan — no mesh, no compile."""
+    from repro.axe.graphs import decoder_layer_graph
+    from repro.axe.propagate import PropagationError, propagate
+    from repro.axe.spec import PhysicalSpace
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    space = PhysicalSpace.from_mesh_shape(_mesh_shape(multi_pod))
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "kind": shape.kind, "batch": shape.batch, "seq": shape.seq,
+    }
+    try:
+        nodes, env = decoder_layer_graph(cfg, shape.batch, shape.seq, space)
+        plan = propagate(nodes, env)
+    except Exception as e:  # record an error row; never abort a sweep
+        record.update(status="error", error=f"{type(e).__name__}: {e}")
+        if not isinstance(e, PropagationError):
+            record["traceback"] = traceback.format_exc()[-2000:]
+        return record
+    record["layout_plan"] = plan.to_dict()
+    record["status"] = "ok"
+    if verbose:
+        print(plan.describe())
+    return record
 
 
 def lower_cell(
@@ -81,6 +121,13 @@ def lower_cell(
         "options": {"fsdp": fsdp, "zero1": zero1, "microbatches": microbatches,
                     "compress_pod_grads": compress_pod_grads, "remat": remat},
     }
+
+    # propagated per-layer layout plan (AxeSpec redistributions + comm
+    # bytes) — recorded alongside the compiled analyses so one dry-run
+    # row carries both the planned and the XLA-observed collectives
+    plan_rec = layout_plan_cell(arch, shape_name, multi_pod, verbose=False)
+    if plan_rec.get("status") == "ok":
+        record["layout_plan"] = plan_rec["layout_plan"]
 
     if shape.kind == "train":
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -203,6 +250,8 @@ def main():
     ap.add_argument("--compress-pod-grads", action="store_true")
     ap.add_argument("--dump-hlo", default=None, help="write compiled HLO text here")
     ap.add_argument("--remat-policy", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--layout-plan", action="store_true",
+                    help="report the propagated AxeSpec layout plan only (no lowering, no devices)")
     args = ap.parse_args()
 
     cells = []
@@ -218,6 +267,22 @@ def main():
     out_f = open(args.out, "a") if args.out else None
     failures = 0
     for arch, shape, mesh in cells:
+        if args.layout_plan:
+            rec = layout_plan_cell(arch, shape, mesh == "multi")
+            line = json.dumps(rec)
+            if rec["status"] != "ok":
+                failures += 1
+                print(line)
+            else:
+                lp = rec["layout_plan"]
+                n_steps = sum(len(e["steps"]) for e in lp["entries"])
+                print(f"PLAN {arch} {shape} {mesh} ops={len(lp['entries'])} "
+                      f"redistributions={n_steps} "
+                      f"comm={lp['total_comm_bytes']/2**20:.1f} MiB/device")
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+            continue
         try:
             rec = lower_cell(
                 arch, shape, mesh == "multi",

@@ -19,8 +19,6 @@ All totals are PER DEVICE of the SPMD program.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -12,10 +12,8 @@ all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.launch import mesh as meshmod
 

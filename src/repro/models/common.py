@@ -1,8 +1,7 @@
 """Shared model building blocks (pure functional JAX; params are pytrees)."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

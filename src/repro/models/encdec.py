@@ -5,8 +5,7 @@ with cross-attention, serving caches) is real.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ lowers to an all-to-all — exactly the collective the Axe layout pair
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,14 @@ class ServeEngine:
     measured for this model's shapes instead of re-planning per
     process. ``force_schedule`` is the serve-time escape hatch — a
     ``Schedule.parse`` spec (e.g. ``"xla"``) applied to every dispatch
-    while this engine's jitted functions trace."""
+    while this engine's jitted functions trace.
+
+    ``mesh`` opts into sharded serving: param and KV-cache placement
+    comes from the AxeSpec rule engine (``repro.axe.rules``) lowered
+    through ``repro.axe.lower.to_named_sharding`` — the same propagated
+    layout plan the trainer and dry-run use, never a hand-written
+    PartitionSpec table. ``mesh=None`` (tests, single host) keeps the
+    unsharded behavior."""
 
     api: Any                 # ModelAPI
     batch_size: int
@@ -28,6 +35,7 @@ class ServeEngine:
     rng_seed: int = 0
     schedule_cache: Optional[str] = None
     force_schedule: Optional[str] = None
+    mesh: Optional[Any] = None       # jax.sharding.Mesh
 
     def __post_init__(self):
         from repro import tune
@@ -37,6 +45,27 @@ class ServeEngine:
         self.params = None
         self._decode = self._scheduled(jax.jit(self.api.decode_step))
         self._prefill = self._scheduled(jax.jit(self.api.prefill))
+
+    def _space(self):
+        from repro.axe.spec import PhysicalSpace
+
+        return PhysicalSpace.from_mesh_shape(
+            dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        )
+
+    def _place_params(self, params):
+        from repro.axe import rules as axe_rules
+
+        specs = axe_rules.param_specs(params, self._space())
+        shardings = axe_rules.sharding_tree(specs, self.mesh)
+        return jax.device_put(params, shardings)
+
+    def _place_cache(self, cache):
+        from repro.axe import rules as axe_rules
+
+        specs = axe_rules.cache_specs(cache, self._space())
+        shardings = axe_rules.sharding_tree(specs, self.mesh)
+        return jax.device_put(cache, shardings)
 
     def _scheduled(self, fn):
         """Hold the forced-schedule context across calls so jit tracing
@@ -52,7 +81,7 @@ class ServeEngine:
         return wrapped
 
     def load(self, params) -> None:
-        self.params = params
+        self.params = self._place_params(params) if self.mesh is not None else params
 
     def generate(
         self,
@@ -66,6 +95,8 @@ class ServeEngine:
         b, s_prompt = prompts.shape
         assert b == self.batch_size
         cache = self.api.cache_init(b, self.max_seq)
+        if self.mesh is not None:
+            cache = self._place_cache(cache)
         batch = {"tokens": prompts}
         if extra_inputs:
             batch.update(extra_inputs)

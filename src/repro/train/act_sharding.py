@@ -14,12 +14,12 @@ hd-sharded QK projections ⇒ full-batch logits + giant all-reduces).
 from __future__ import annotations
 
 import contextlib
-from typing import Dict, Iterator, Optional, Sequence, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.train.sharding import dp_axes, mesh_shape_of, pick_pspec
+from repro.train.sharding import dp_axes, mesh_shape_of
 
 _CTX: Dict[str, object] = {"mesh": None, "mesh_shape": None}
 
@@ -120,14 +120,16 @@ def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
             cap *= mesh_shape.get(a, 1)
         return cap
 
-    from repro.train.sharding import _admissible
+    from repro.axe import rules as axe_rules
+    from repro.axe.spec import PhysicalSpace
 
+    space = PhysicalSpace.from_mesh_shape(mesh_shape)
     best = None
     best_key = None
     for combo in itertools.product(*[list(enumerate(c)) for c in per_dim]):
         ranks = sum(i for i, _ in combo)
         spec = tuple(c for _, c in combo)
-        if not _admissible(x.shape, spec, mesh_shape):
+        if axe_rules.spec_of_entries(x.shape, spec, space) is None:
             continue
         key = (-axes_used(spec), ranks)
         if best_key is None or key < best_key:

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import Mesh

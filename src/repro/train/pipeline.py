@@ -18,15 +18,21 @@ so it composes with the existing train step.
 In Axe terms the activation layout is
 ``D: (n_micro · stage@pipe, …)`` with the stage iter walking the pipe
 axis over time — the same named-axis vocabulary as every other layout
-in this framework (see DESIGN.md).
+in this framework: ``pipe`` is a registered mesh axis (``core.axes``)
+and the stage-param / microbatch placements handed to shard_map are
+AxeSpecs lowered through ``repro.axe.lower``, not hand-written
+PartitionSpecs.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
+
+from repro.axe import lower as axe_lower
+from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
 
 
 def pipeline_apply(
@@ -84,14 +90,34 @@ def pipeline_apply(
         )
         return outputs
 
-    spec_params = jax.tree.map(lambda _: P(axis_name), stage_params)
+    # stage-param placement: leading stage dim sharded over `pipe`,
+    # everything else replicated — stated as an AxeSpec and lowered.
+    space = PhysicalSpace.from_mesh_shape(
+        dict(zip(mesh.axis_names, mesh.devices.shape))
+    )
+
+    def stage_pspec(p):
+        try:
+            return axe_lower.to_pspec(
+                AxeSpec.sharded(p.shape, space, {0: (axis_name,)})
+            )
+        except SpecError as e:
+            raise ValueError(
+                f"stage params of shape {p.shape} not shardable over "
+                f"{axis_name}={n_stages}: {e}"
+            ) from e
+
+    spec_params = jax.tree.map(stage_pspec, stage_params)
+    replicated = axe_lower.to_pspec(
+        AxeSpec.replicated(microbatches.shape, space)
+    )
     from repro import compat
 
     return compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(spec_params, P()),
-        out_specs=P(),
+        in_specs=(spec_params, replicated),
+        out_specs=replicated,
         check_vma=False,
     )(stage_params, microbatches)
 

@@ -1,41 +1,45 @@
-"""Axe-derived sharding rules for params / optimizer states / batches /
-serving caches.
+"""Deprecated shims: PartitionSpec views of the AxeSpec sharding rules.
 
-Every rule is a *preference list* of layouts; the first one the Axe
-algebra admits (exact divisibility — no silent GSPMD padding) wins.
-E.g. attention projections prefer head-sharding (column parallel) and
-fall back to d_model-sharding (row parallel, partial-sum outputs) when
-the head count does not divide the ``model`` axis (starcoder2: 36 heads,
-whisper: 20 heads). The chosen PartitionSpec is produced by building
-the Axe layout and converting (``DTensorSpec``), so an inadmissible
-spec can never silently reach XLA.
+The hand-written PartitionSpec rule tables that used to live here moved
+to ``repro.axe.rules``, where they are expressed as AxeSpec placement
+preferences — the Axe layout is the source of truth and the
+PartitionSpec is *derived* through the inter-device lowering adapter
+(``repro.axe.lower.to_pspec``). These wrappers keep the historical
+signatures (``param_pspecs`` / ``batch_pspecs`` / ``cache_pspecs`` /
+``opt_pspecs`` and the per-spec helpers) for existing call sites; new
+code should consume the AxeSpec trees from ``repro.axe.rules`` directly
+and lower only at the jit boundary. See docs/axespec.md (migration
+notes).
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, Mapping, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.dtensor import DTensorSpec, layout_of_pspec
+from repro.axe import lower as _lower
+from repro.axe import rules as _rules
+from repro.axe.spec import PhysicalSpace
 
 
 def mesh_shape_of(mesh: Mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def _space(mesh_shape: Mapping[str, int]) -> PhysicalSpace:
+    return PhysicalSpace.from_mesh_shape(mesh_shape)
+
+
 def dp_axes(mesh_shape: Mapping[str, int]) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh_shape)
+    return _rules.dp_axes(_space(mesh_shape))
 
 
-def _admissible(shape: Sequence[int], pspec: Sequence, mesh_shape: Mapping[str, int]) -> bool:
-    try:
-        layout_of_pspec(shape, pspec, mesh_shape)
-        return True
-    except ValueError:
-        return False
+def _admissible(
+    shape: Sequence[int], pspec: Sequence, mesh_shape: Mapping[str, int]
+) -> bool:
+    """Deprecated shim: Axe admissibility of one placement."""
+    return _rules.spec_of_entries(shape, tuple(pspec), _space(mesh_shape)) is not None
 
 
 def pick_pspec(
@@ -43,166 +47,44 @@ def pick_pspec(
     preferences: Sequence[Sequence],
     mesh_shape: Mapping[str, int],
 ) -> P:
-    """First Axe-admissible preference; final fallback is replication."""
-    for pref in preferences:
-        pref = tuple(pref) + (None,) * (len(shape) - len(pref))
-        if _admissible(shape, pref, mesh_shape):
-            return P(*pref)
-    return P(*([None] * len(shape)))
+    """Deprecated shim over ``repro.axe.rules.pick_spec``."""
+    return _lower.to_pspec(_rules.pick_spec(shape, preferences, _space(mesh_shape)))
 
 
-# ---------------------------------------------------------------------------
-# parameter rules
-# ---------------------------------------------------------------------------
-
-# name -> list of preferred (suffix) pspecs applied to the *trailing* dims
-# (stacked scan/vmap leading dims are padded with None automatically).
-_PARAM_RULES: Dict[str, Tuple[Tuple, ...]] = {
-    # embeddings
-    "embed": ((("model", None)), (None, "model")),
-    "lm_head": ((None, "model"), ("model", None)),
-    "mm_proj": ((None, "model"),),
-    # attention  (wq/wk/wv: [d, H, hd]; wo: [H, hd, d]).
-    # NOTE(perf §C-iter2, refuted): replacing the row-parallel fallback
-    # with replicated projections did NOT remove the big all-reduces
-    # (those are the DP gradient reduction) and raised memory 18.5→21.7s.
-    "wq": ((None, "model", None), ("model", None, None)),
-    "wk": ((None, "model", None), ("model", None, None)),
-    "wv": ((None, "model", None), ("model", None, None)),
-    "attn.wo": (("model", None, None), (None, None, "model")),
-    # dense mlp
-    "wg": ((None, "model"),),
-    "wu": ((None, "model"),),
-    "wi": ((None, "model"),),
-    "mlp.wo": (("model", None),),
-    # moe (router replicated; experts over model = expert parallelism)
-    "router": ((None, None),),
-    "moe.wg": (("model", None, None), (None, None, "model")),
-    "moe.wu": (("model", None, None), (None, None, "model")),
-    "moe.wo": (("model", None, None), (None, "model", None)),
-    # ssm
-    "wx": ((None, "model"),),
-    "wz": ((None, "model"),),
-    "wdt": ((None, "model"),),
-    "wB": ((None, None),),
-    "wC": ((None, None),),
-    "ssm.wo": (("model", None),),
-}
-
-
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if hasattr(p, "key"):
-            parts.append(str(p.key))
-        elif hasattr(p, "name"):
-            parts.append(str(p.name))
-        elif hasattr(p, "idx"):
-            parts.append(str(p.idx))
-    return ".".join(parts)
-
-
-_CTX_ALIASES = {
-    "attn": "attn", "self_attn": "attn", "cross_attn": "attn",
-    "mlp": "mlp", "moe": "moe", "ssm": "ssm",
-}
-
-
-def _rule_for(path_str: str) -> Optional[Tuple[Tuple, ...]]:
-    segs = path_str.split(".")
-    name = segs[-1]
-    ctx = None
-    for s in segs[:-1]:
-        if s in _CTX_ALIASES:
-            ctx = _CTX_ALIASES[s]
-    if ctx and f"{ctx}.{name}" in _PARAM_RULES:
-        return _PARAM_RULES[f"{ctx}.{name}"]
-    if name == "wo":  # wo is always context-qualified
-        return None
-    return _PARAM_RULES.get(name)
-
-
-def fsdp_extend(pspec: P, shape: Sequence[int], mesh_shape: Mapping[str, int], axes=("data",)) -> P:
-    """2D sharding: additionally shard the first replicated dim over the
-    FSDP axes (params are gathered per-layer inside the scan by GSPMD).
-    Required for ≥100B models: TP-only leaves >16 GB of params/device."""
-    avail = [a for a in axes if a in mesh_shape and mesh_shape[a] > 1]
-    if not avail:
+def fsdp_extend(
+    pspec: P, shape: Sequence[int], mesh_shape: Mapping[str, int], axes=("data",)
+) -> P:
+    """Deprecated shim over ``repro.axe.rules.fsdp_extend``."""
+    space = _space(mesh_shape)
+    spec = _rules.spec_of_entries(shape, tuple(pspec), space)
+    if spec is None:
         return pspec
-    total = 1
-    for a in avail:
-        total *= mesh_shape[a]
-    entries = list(pspec) + [None] * (len(shape) - len(pspec))
-    # only shard genuinely large dims (d_model/ff/vocab); sharding small
-    # dims like head_dim makes GSPMD propagate degenerate layouts into
-    # the math (observed: hd-sharded QK -> full-batch logits all-reduce).
-    order = sorted(range(len(shape)), key=lambda i: -shape[i])
-    for i in order:
-        e, s = entries[i], shape[i]
-        if e is None and s % total == 0 and s >= max(512, total):
-            cand = entries.copy()
-            cand[i] = tuple(avail) if len(avail) > 1 else avail[0]
-            if _admissible(shape, cand, mesh_shape):
-                return P(*cand)
-    return pspec
+    return _lower.to_pspec(_rules.fsdp_extend(spec, axes=axes))
+
+
+def zero1_pspec(pspec: P, shape: Sequence[int], mesh_shape: Mapping[str, int]) -> P:
+    """Deprecated shim over ``repro.axe.rules.zero1_extend``."""
+    space = _space(mesh_shape)
+    spec = _rules.spec_of_entries(shape, tuple(pspec), space)
+    if spec is None:
+        return pspec
+    return _lower.to_pspec(_rules.zero1_extend(spec))
 
 
 def param_pspecs(
     params: Any, mesh_shape: Mapping[str, int], *, fsdp: bool = False, fsdp_axes=("data",)
 ) -> Any:
-    """Pytree of PartitionSpecs for a model param tree."""
-
-    def assign(path, leaf):
-        ps = _path_str(path)
-        rule = _rule_for(ps)
-        if rule is None or leaf.ndim == 0:
-            spec = P(*([None] * leaf.ndim))
-        else:
-            out = []
-            for pref in rule:
-                pref = tuple(pref) if isinstance(pref, tuple) else (pref,)
-                pad = leaf.ndim - len(pref)
-                if pad < 0:
-                    continue
-                out.append(((None,) * pad) + pref)
-            spec = pick_pspec(leaf.shape, out, mesh_shape)
-        if fsdp:
-            spec = fsdp_extend(spec, leaf.shape, mesh_shape, fsdp_axes)
-        return spec
-
-    return jax.tree_util.tree_map_with_path(assign, params)
+    """Pytree of PartitionSpecs for a model param tree (deprecated shim
+    over ``repro.axe.rules.param_specs`` + the inter-device lowering)."""
+    specs = _rules.param_specs(
+        params, _space(mesh_shape), fsdp=fsdp, fsdp_axes=fsdp_axes
+    )
+    return _rules.pspec_tree(specs)
 
 
-# ---------------------------------------------------------------------------
-# optimizer states: ZeRO-1 (shard moments over the DP axes too)
-# ---------------------------------------------------------------------------
-
-
-def zero1_pspec(pspec: P, shape: Sequence[int], mesh_shape: Mapping[str, int]) -> P:
-    """Extend a param pspec by sharding a replicated dim over unused
-    data-parallel axes (optimizer-state partitioning). When FSDP already
-    consumed `data`, fall back to single axes — on multi-pod meshes the
-    `pod` axis alone halves the f32 moment footprint (jamba-398B train:
-    26.4 → 15.9 GiB/device, the difference between fitting v5e or not)."""
-    dp = dp_axes(mesh_shape)
-    if not dp:
-        return pspec
-    axis_sets = ([tuple(dp)] if len(dp) > 1 else []) + [(a,) for a in dp]
-    entries = list(pspec) + [None] * (len(shape) - len(pspec))
-    for axes in axis_sets:
-        total = 1
-        for a in axes:
-            total *= mesh_shape[a]
-        for i, (e, s) in enumerate(zip(entries, shape)):
-            if e is None and s % total == 0 and s >= total:
-                cand = entries.copy()
-                cand[i] = axes if len(axes) > 1 else axes[0]
-                if _admissible(shape, cand, mesh_shape):
-                    return P(*cand)
-    return pspec
-
-
-def opt_pspecs(params: Any, p_pspecs: Any, mesh_shape: Mapping[str, int], *, zero1: bool = True) -> Any:
+def opt_pspecs(
+    params: Any, p_pspecs: Any, mesh_shape: Mapping[str, int], *, zero1: bool = True
+) -> Any:
     if not zero1:
         return p_pspecs
     return jax.tree.map(
@@ -212,61 +94,14 @@ def opt_pspecs(params: Any, p_pspecs: Any, mesh_shape: Mapping[str, int], *, zer
     )
 
 
-# ---------------------------------------------------------------------------
-# batch / cache rules
-# ---------------------------------------------------------------------------
-
-
 def batch_pspecs(batch: Mapping[str, Any], mesh_shape: Mapping[str, int]) -> Dict[str, P]:
-    dp = dp_axes(mesh_shape)
-    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
-    out = {}
-    for k, v in batch.items():
-        shape = v.shape
-        pref = [(dp_entry,), (None,)]
-        out[k] = pick_pspec(shape, pref, mesh_shape)
-    return out
+    specs = _rules.batch_specs(batch, _space(mesh_shape))
+    return {k: _lower.to_pspec(s) for k, s in specs.items()}
 
 
 def cache_pspecs(cache: Any, mesh_shape: Mapping[str, int]) -> Any:
-    """KV caches [L, B, S, KV, hd] / SSM states [L, B, H, N, P] / conv
-    [L, B, K, C]: shard batch over DP when divisible, else shard the
-    sequence dim over `data` (long-context decode); heads over `model`."""
-    dp = dp_axes(mesh_shape)
-    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
-
-    def assign(path, leaf):
-        ps = _path_str(path)
-        shape = leaf.shape
-        if shape and shape[-1] == 1:
-            pass
-        if ps.endswith(("k", "v", "ck", "cv")) and leaf.ndim >= 4:
-            # [..., B, S, KV, hd]: prefer batch-DP + head-TP; fall back to
-            # sequence sharding (long-context / non-dividing KV heads).
-            lead = leaf.ndim - 4
-            prefs = [
-                ((None,) * lead) + (dp_entry, None, "model", None),
-                ((None,) * lead) + (dp_entry, "model", None, None),
-                ((None,) * lead) + (None, ("data", "model"), None, None),
-                ((None,) * lead) + (None, "data", None, None),
-                ((None,) * lead) + (dp_entry, None, None, None),
-            ]
-            return pick_pspec(shape, prefs, mesh_shape)
-        if ps.endswith("ssm") and leaf.ndim >= 4:
-            # [..., B, H, N, P]
-            lead = leaf.ndim - 4
-            prefs = [
-                ((None,) * lead) + (dp_entry, "model", None, None),
-                ((None,) * lead) + (None, "model", None, None),
-            ]
-            return pick_pspec(shape, prefs, mesh_shape)
-        if ps.endswith("conv") and leaf.ndim >= 3:
-            lead = leaf.ndim - 3
-            prefs = [((None,) * lead) + (dp_entry, None, None)]
-            return pick_pspec(shape, prefs, mesh_shape)
-        return P(*([None] * leaf.ndim))
-
-    return jax.tree_util.tree_map_with_path(assign, cache)
+    specs = _rules.cache_specs(cache, _space(mesh_shape))
+    return _rules.pspec_tree(specs)
 
 
 def shardings_of(pspecs: Any, mesh: Mesh) -> Any:

@@ -15,13 +15,12 @@ same order (ties broken by the schedule's string form).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.blockspec import MXU_TILE, candidate_tilings, derive_tiling, vreg_atom
+from repro.core.blockspec import candidate_tilings, derive_tiling, vreg_atom
 from repro.launch import roofline
 from repro.tune.schedule import Schedule
 

@@ -111,12 +111,15 @@ def schedule_key(
     return f"{op}|{shp}|{dts}|{layout_sig}|{backend}"
 
 
-def layout_signature(*layouts) -> str:
-    """Canonical signature of operand Axe layouts for keying schedules.
+def layout_signature(*layouts, tag: Optional[str] = None) -> str:
+    """Canonical signature of operand layouts for keying schedules.
 
-    Accepts ``Layout`` objects, ``DTensorSpec`` objects, or None (dense).
-    Layouts that canonicalize equal produce identical signatures.
-    """
+    Accepts ``AxeSpec`` objects (preferred — the canonical end-to-end
+    signature including shape, space, and pending-partial axes),
+    ``Layout`` / ``DTensorSpec`` objects, or None (dense). Operands that
+    canonicalize equal produce identical signatures, so the tune cache
+    keys on layout *semantics*, never on how a spec was constructed.
+    ``tag`` prefixes an op-level variant (e.g. ``"causal"``)."""
     from repro.core.layout import Layout, canonicalize
 
     parts = []
@@ -124,9 +127,16 @@ def layout_signature(*layouts) -> str:
         if l is None:
             parts.append("dense")
             continue
+        sig = getattr(l, "signature", None)
+        if callable(sig):          # AxeSpec (duck-typed: no core->axe import)
+            parts.append(sig())
+            continue
         layout = getattr(l, "layout", l)
         if isinstance(layout, Layout):
             parts.append(repr(canonicalize(layout)))
         else:
             parts.append(str(layout))
-    return "dense" if all(p == "dense" for p in parts) else "&".join(parts)
+    base = "dense" if all(p == "dense" for p in parts) else "&".join(parts)
+    if tag:
+        return tag if base == "dense" else f"{tag}&{base}"
+    return base

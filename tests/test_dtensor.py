@@ -1,6 +1,5 @@
 """Tests for the Axe distribution layer: DTensorSpec <-> PartitionSpec,
 collective inference, BlockSpec derivation, scope dispatch."""
-import math
 
 import jax
 import jax.numpy as jnp

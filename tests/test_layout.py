@@ -11,7 +11,7 @@ the operator laws covered.
 import math
 
 import pytest
-from _hyp import HAS_HYPOTHESIS, given, settings, st
+from _hyp import given, settings, st
 
 from repro.core.layout import (
     GroupingError,

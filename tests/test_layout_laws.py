@@ -6,10 +6,9 @@ the gap condition.
 hypothesis is optional (the ``dev`` extra): without it the property
 tests skip and the deterministic ``FIXED_TRIPLES`` sweep below keeps
 the laws covered."""
-import math
 
 import pytest
-from _hyp import HAS_HYPOTHESIS, given, settings, st
+from _hyp import given, settings, st
 
 from repro.core.layout import (
     GroupingError,

@@ -1,6 +1,5 @@
 """Per-architecture smoke tests (reduced configs, CPU): one forward +
 train-grad step and one prefill+decode step; asserts shapes + finite."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

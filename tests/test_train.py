@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, smoke_variant
@@ -15,7 +14,7 @@ from repro.optim.adamw import AdamW
 from repro.optim.grad_compress import error_feedback_update, quantize_dequantize
 from repro.optim.schedule import warmup_cosine
 from repro.train import elastic
-from repro.train.train_loop import Trainer, TrainState, init_state, make_train_step
+from repro.train.train_loop import Trainer, init_state, make_train_step
 
 
 def _setup(arch="qwen3-4b", lr=3e-3):

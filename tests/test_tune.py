@@ -6,7 +6,6 @@ regression guarantee that tuned dispatch never selects an invalid
 tiling (TilingError) — on any shape, including non-tileable ones.
 """
 import json
-import os
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro import tune
-from repro.core.blockspec import TilingError, derive_tiling
+from repro.core.blockspec import derive_tiling
 from repro.tune import planner
 from repro.tune.cache import ScheduleCache
 from repro.tune.schedule import Schedule, layout_signature, schedule_key
