@@ -2,8 +2,10 @@
 
 Runs in a subprocess with 8 host-platform devices (so the main process
 and other benches keep seeing 1 device). Compares:
-  * unfused — full local GEMM then psum_scatter (cuBLAS+NCCL analogue)
-  * fused   — the ring-overlapped collective matmul (ops.collective_matmul)
+  * unfused — the collective_matmul program's psum_scatter variant
+    (full local GEMM then reduce-scatter, the cuBLAS+NCCL analogue)
+  * fused   — the ring variant of the same program stage
+    (collective_matmul/kshard — one tune key, two schedules)
 and reports wall-time plus the layout-inferred collective plan bytes.
 """
 from __future__ import annotations
@@ -20,20 +22,23 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, time
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
-from repro.core import ops as cops
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import collective as coll
 from repro.core.dtensor import DTensorSpec
+from repro.kernels import programs
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("model",))
 M, K, N = 1024, 2048, 1024
 a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
 b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
 
 def run(mode):
     def body(a, b):
-        return cops.collective_matmul(a, b, axis_name="model", overlap=(mode == "fused"))
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
+        return programs.collective_matmul(
+            a, b, axis_name="model",
+            impl="ring" if mode == "fused" else "psum_scatter")
+    f = jax.jit(compat.shard_map(body, mesh=mesh,
                 in_specs=(P(None, "model"), P("model", None)),
                 out_specs=P("model", None), check_vma=False))
     out = f(a, b); jax.block_until_ready(out)

@@ -3,11 +3,14 @@ Trainium workload, adapted): full-materialization attention vs the
 blocked online-softmax schedule (identical math to the Pallas kernel),
 plus a kernel-vs-oracle check in interpret mode.
 
-Modes (``python benchmarks/bench_mha.py [--default | --tuned]``):
+Modes (``python benchmarks/bench_mha.py [--default | --tuned | --program]``):
 
   --default  fixed chunk=256 blocked schedule
   --tuned    autotune the blocked schedule's chunk size per length
              (persisted in the schedule cache) and report the delta
+  --program  benchmark the axe.program flash-attention path against the
+             legacy deprecated-shim path (same blocks) and append to the
+             ``BENCH_kernels.json`` perf baseline
 """
 from __future__ import annotations
 
@@ -21,8 +24,8 @@ if __package__ in (None, ""):  # script mode: make `benchmarks.*` importable
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_jitted
-from repro.kernels import ops as kops, ref as kref
+from benchmarks.common import row, time_jitted, write_bench_json
+from repro.kernels import programs, ref as kref
 from repro.models import attention as attn_mod
 
 LENS = [512, 1024, 2048]
@@ -63,9 +66,49 @@ def run(mode: str = "default") -> list:
     q = jax.random.normal(jax.random.PRNGKey(7), (1, 2, 256, 64), jnp.float32)
     kk = jax.random.normal(jax.random.PRNGKey(8), (1, 2, 256, 64), jnp.float32)
     vv = jax.random.normal(jax.random.PRNGKey(9), (1, 2, 256, 64), jnp.float32)
-    got = kops.flash_attention(q, kk, vv, causal=True)
+    got = programs.flash_attention(q, kk, vv, causal=True)
     err = float(jnp.max(jnp.abs(got - kref.attention_ref(q, kk, vv, causal=True))))
     rows.append(row("mha.pallas_check", 0.0, f"max_err={err:.2e}"))
+    return rows
+
+
+def run_program_mode() -> list:
+    """DSL path vs the legacy shim path for the flash-attention kernel
+    (interpret mode, identical blocks), appended to BENCH_kernels.json."""
+    import warnings
+
+    from repro.kernels import ops as legacy_ops
+
+    rows = []
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(8), (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(9), (1, 2, 256, 64), jnp.float32)
+    blocks = {"bq": 128, "bkv": 128}
+    us_prog = time_jitted(
+        lambda q, k, v: programs.flash_attention(q, k, v, causal=True,
+                                                 blocks=blocks), q, k, v)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        us_shim = time_jitted(
+            lambda q, k, v: legacy_ops.flash_attention(
+                q, k, v, causal=True, block_q=128, block_kv=128), q, k, v)
+    delta = (us_shim - us_prog) / us_shim * 100.0
+    rows.append(row("mha.program.kernel", us_prog,
+                    "flash_attention/attend kernel:bq=128,bkv=128"))
+    rows.append(row("mha.shim.kernel", us_shim,
+                    f"legacy kernels.ops.flash_attention; program delta={delta:+.1f}%"))
+    # the MESH-scope blocked-softmax schedule at one paper length
+    s = 1024
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    qb = jax.random.normal(ks[0], (1, s, 8, 64), jnp.float32)
+    kb = jax.random.normal(ks[1], (1, s, 8, 64), jnp.float32)
+    vb = jax.random.normal(ks[2], (1, s, 8, 64), jnp.float32)
+    blocked = jax.jit(functools.partial(
+        attn_mod._gqa_blocked, cfg=None, causal=False, window=None, chunk=256))
+    rows.append(row(f"mha.program.blocked.s{s}", time_jitted(blocked, qb, kb, vb),
+                    "mha_blocked xla:chunk=256"))
+    path = write_bench_json("mha", rows)
+    rows.append(row("mha.bench_json", 0.0, f"path={path}"))
     return rows
 
 
@@ -78,10 +121,14 @@ def main(argv=None) -> None:
                    help="autotune the blocked chunk size per length")
     g.add_argument("--default", dest="default_", action="store_true",
                    help="fixed default schedules only (the default)")
+    g.add_argument("--program", dest="program_", action="store_true",
+                   help="DSL-vs-legacy-shim comparison; appends to BENCH_kernels.json")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
-    for line in run("tuned" if args.tuned else "default"):
+    rows = run_program_mode() if args.program_ else \
+        run("tuned" if args.tuned else "default")
+    for line in rows:
         print(line)
         sys.stdout.flush()
 

@@ -1,10 +1,16 @@
 """Benchmark timing helpers."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
+
+#: merged perf-baseline file the --program benchmark modes write
+#: (override the directory with $REPRO_BENCH_DIR)
+BENCH_KERNELS_JSON = "BENCH_kernels.json"
 
 
 def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -22,3 +28,32 @@ def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def bench_json_path() -> str:
+    return os.path.join(os.environ.get("REPRO_BENCH_DIR", "."), BENCH_KERNELS_JSON)
+
+
+def write_bench_json(section: str, rows: Sequence[str], *, backend: str = "") -> str:
+    """Merge one benchmark's rows into ``BENCH_kernels.json`` (keyed by
+    section so bench_gemm and bench_mha share one baseline file later
+    PRs diff against). Rows are the ``row()`` strings; parsed here so
+    the JSON carries structured ``us``/``derived`` fields."""
+    path = bench_json_path()
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        data = {"version": 1, "sections": {}}
+    parsed = {}
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        parsed[name] = {"us": float(us), "derived": derived}
+    data["sections"][section] = {
+        "backend": backend or jax.default_backend(),
+        "rows": parsed,
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

@@ -18,14 +18,17 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core import DTensorSpec, collective as coll, ops as cops
+from repro.axe import rules as axe_rules
+from repro.axe.spec import AxeSpec, PhysicalSpace
+from repro.core import DTensorSpec, collective as coll
+from repro.kernels import programs
 from repro.train import act_sharding
-from repro.train.sharding import mesh_shape_of, param_pspecs
 
 
 def main():
     mesh = compat.make_mesh((2, 4), ("data", "model"))
-    ms = mesh_shape_of(mesh)
+    ms = axe_rules.mesh_shape_of(mesh)
+    space = PhysicalSpace.from_mesh_shape(ms)
     print("mesh:", ms)
 
     # --- Axe layout -> sharding for a weight matrix --------------------
@@ -42,18 +45,15 @@ def main():
     per_dev = coll.plan_comm_bytes(plan, src, ms, 4)
     print(f"  bytes/device: {per_dev}")
 
-    # --- fused GEMM+ReduceScatter on the mesh --------------------------
+    # --- fused GEMM+ReduceScatter: the collective_matmul program ------
+    # operand/result AxeSpecs are the only placement input; the ring
+    # schedule is the program's "ring" stage variant (docs/kernel-dsl.md)
     a = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
     b = jax.random.normal(jax.random.PRNGKey(1), (512, 128), jnp.float32)
-
-    def body(a, b):
-        return cops.collective_matmul(a, b, axis_name="model", overlap=True)
-
-    f = jax.jit(compat.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(None, "model"), P("model", None)),
-        out_specs=P("model", None), check_vma=False,
-    ))
+    sa = AxeSpec.sharded((256, 512), space, {1: ("model",)})
+    sb = AxeSpec.sharded((512, 128), space, {0: ("model",)})
+    so = AxeSpec.sharded((256, 128), space, {0: ("model",)})
+    f = jax.jit(programs.collective_matmul.shard_map(mesh, (sa, sb), so, impl="ring"))
     out = f(a, b)
     err = float(jnp.max(jnp.abs(out - a @ b)))
     print(f"fused GEMM+RS max err vs dense: {err:.2e}")
@@ -65,7 +65,7 @@ def main():
     cfg = smoke_variant(get_config("qwen3-4b"))
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    pspecs = param_pspecs(jax.tree.map(lambda x: x, params), ms)
+    pspecs = axe_rules.pspec_tree(axe_rules.param_specs(params, space))
     n_sharded = sum(any(e is not None for e in ps) for ps in jax.tree.leaves(
         pspecs, is_leaf=lambda x: isinstance(x, P)))
     print(f"param tensors with sharded dims: {n_sharded}")

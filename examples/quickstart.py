@@ -47,6 +47,21 @@ def main():
     print("\nPallas grid for 4096x8192 bf16 tiled 256x512:", d.grid,
           "| vreg aligned:", d.vreg_aligned, "| mxu aligned:", d.mxu_aligned)
 
+    # --- 5b. The kernel DSL: programs of scope-tagged stages ----------
+    # (docs/kernel-dsl.md) — one definition, dispatched by execution
+    # scope; schedules resolve under program/stage tune keys
+    from repro.core.scopes import Scope, scope as exec_scope
+    from repro.kernels import programs
+
+    print("\n" + programs.matmul.describe())
+    a = jax.random.normal(jax.random.PRNGKey(3), (256, 512), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(4), (512, 256), jnp.float32)
+    y_mesh = programs.matmul(a, b)            # MESH scope -> XLA dot
+    with exec_scope(Scope.DEVICE):            # DEVICE scope -> Pallas tile stage
+        y_dev = programs.matmul(a, b, blocks={"bm": 128, "bn": 128, "bk": 256})
+    print("matmul program: mesh-vs-device max err:",
+          float(jnp.max(jnp.abs(y_mesh - y_dev))))
+
     # --- 6. A tiny model forward --------------------------------------
     from repro.configs import get_config, smoke_variant
     from repro.models.model_zoo import ShapeSpec, build_model

@@ -1,0 +1,19 @@
+"""One helper for every deprecated-shim layer (kernels.ops, core.ops,
+train.sharding): a uniform DeprecationWarning pointing at the
+replacement API and its guide, with a stacklevel that lands on the
+caller of the shim rather than the shim itself."""
+from __future__ import annotations
+
+import warnings
+
+
+def warn_deprecated(
+    old: str, new: str, doc: str = "docs/kernel-dsl.md", *, stacklevel: int = 3
+) -> None:
+    """``stacklevel=3`` lands on the caller when a shim calls this
+    directly; shims that route through a module-local wrapper pass 4."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see {doc})",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )

@@ -1,5 +1,6 @@
 """AxeSpec end-to-end: one layout spec from the device mesh to the
-Pallas block (docs/axespec.md).
+Pallas block (docs/axespec.md), plus the multi-granularity kernel DSL
+written against it (docs/kernel-dsl.md).
 
 * ``repro.axe.spec``      — :class:`AxeSpec` + :class:`PhysicalSpace`
 * ``repro.axe.lower``     — the two lowering adapters
@@ -7,8 +8,22 @@ Pallas block (docs/axespec.md).
 * ``repro.axe.propagate`` — layout propagation over op graphs
 * ``repro.axe.rules``     — the sharding rule engine (params / batches /
   caches), formerly the PartitionSpec tables in ``train.sharding``
+* ``repro.axe.program``   — ``axe.program`` / ``@axe.kernel``: kernels
+  as graphs of scope-tagged stages (MESH / GRID / BLOCK), schedules
+  keyed ``program_name/stage_name`` through ``repro.tune``
+* ``repro.axe.stages``    — the :class:`Stage` unit + scope validation
 """
 from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
+from repro.axe.program import (
+    PROGRAMS,
+    Program,
+    ProgramError,
+    StageContext,
+    get_program,
+    kernel,
+    program,
+)
+from repro.axe.stages import Stage, StageError
 from repro.axe.lower import (
     BlockLowering,
     block_lowering,
@@ -37,12 +52,21 @@ __all__ = [
     "BlockLowering",
     "LayoutPlan",
     "OpNode",
+    "PROGRAMS",
     "PhysicalSpace",
     "PlanEntry",
+    "Program",
+    "ProgramError",
     "PropagationError",
     "Redistribution",
     "SpecError",
+    "Stage",
+    "StageContext",
+    "StageError",
     "block_lowering",
+    "get_program",
+    "kernel",
+    "program",
     "from_pspec",
     "from_sharding",
     "layout_of_pspec",

@@ -37,9 +37,15 @@ def placement_of_entries(entries: Sequence[PSpecEntry]) -> Tuple[Tuple[str, ...]
     return tuple(_entry_axes(e) for e in entries)
 
 
-def dp_axes(space: PhysicalSpace) -> Tuple[str, ...]:
-    """The data-parallel mesh axes present in this space."""
-    mesh_shape = space.mesh_shape
+def mesh_shape_of(mesh) -> Dict[str, int]:
+    """(axis → size) dict of a concrete ``jax.sharding.Mesh``."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(space: Union[PhysicalSpace, Mapping[str, int]]) -> Tuple[str, ...]:
+    """The data-parallel mesh axes present in this space (accepts a
+    :class:`PhysicalSpace` or a plain mesh-shape mapping)."""
+    mesh_shape = space.mesh_shape if isinstance(space, PhysicalSpace) else dict(space)
     return tuple(a for a in ("pod", "data") if a in mesh_shape)
 
 

@@ -15,7 +15,7 @@ from typing import List, Mapping, Sequence, Tuple
 
 import jax
 
-from repro.core.dtensor import DTensorSpec, pspec_of_layout
+from repro.core.dtensor import DTensorSpec
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +60,8 @@ Step = object
 
 
 def _placement(spec: DTensorSpec, mesh_shape: Mapping[str, int]) -> List[Tuple[str, ...]]:
+    from repro.axe.lower import pspec_of_layout
+
     p = pspec_of_layout(spec.layout, spec.shape, mesh_shape)
     out: List[Tuple[str, ...]] = []
     for i in range(len(spec.shape)):

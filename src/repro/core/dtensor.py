@@ -38,11 +38,13 @@ def layout_of_pspec(
     pspec: Sequence[PSpecEntry],
     mesh_shape: Mapping[str, int],
 ) -> Layout:
-    """Deprecated shim: the implementation moved to
-    ``repro.axe.lower.layout_of_pspec`` (the AxeSpec inter-device
-    adapter). Kept so existing imports keep working."""
+    """Deprecated re-export of ``repro.axe.lower.layout_of_pspec`` (the
+    AxeSpec inter-device adapter); warns on call."""
+    from repro._deprecation import warn_deprecated
     from repro.axe import lower as _axe_lower
 
+    warn_deprecated("repro.core.dtensor.layout_of_pspec",
+                    "repro.axe.lower.layout_of_pspec", doc="docs/axespec.md")
     return _axe_lower.layout_of_pspec(shape, pspec, mesh_shape)
 
 
@@ -51,10 +53,14 @@ def pspec_of_layout(
     shape: Sequence[int],
     mesh_shape: Mapping[str, int],
 ) -> P:
-    """Deprecated shim: subsumed by ``repro.axe.lower.pspec_of_layout``
-    (lowered from ``AxeSpec`` via ``repro.axe.lower.to_pspec``)."""
+    """Deprecated re-export of ``repro.axe.lower.pspec_of_layout``
+    (lowered from ``AxeSpec`` via ``repro.axe.lower.to_pspec``); warns
+    on call."""
+    from repro._deprecation import warn_deprecated
     from repro.axe import lower as _axe_lower
 
+    warn_deprecated("repro.core.dtensor.pspec_of_layout",
+                    "repro.axe.lower.pspec_of_layout", doc="docs/axespec.md")
     return _axe_lower.pspec_of_layout(layout, shape, mesh_shape)
 
 
@@ -69,10 +75,16 @@ class DTensorSpec:
 
     @staticmethod
     def from_pspec(shape, pspec, mesh_shape, dtype="bfloat16") -> "DTensorSpec":
-        return DTensorSpec(tuple(shape), layout_of_pspec(shape, pspec, mesh_shape), dtype)
+        from repro.axe import lower as _axe_lower
+
+        return DTensorSpec(
+            tuple(shape), _axe_lower.layout_of_pspec(shape, pspec, mesh_shape), dtype
+        )
 
     def pspec(self, mesh_shape: Mapping[str, int]) -> P:
-        return pspec_of_layout(self.layout, self.shape, mesh_shape)
+        from repro.axe import lower as _axe_lower
+
+        return _axe_lower.pspec_of_layout(self.layout, self.shape, mesh_shape)
 
     def sharding(self, mesh: Mesh) -> NamedSharding:
         mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))

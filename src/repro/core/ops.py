@@ -1,42 +1,35 @@
-"""Multi-granularity operators with layout-driven schedule dispatch
-(paper §3.2 "Operators and schedules").
+"""Multi-granularity operators (paper §3.2 "Operators and schedules").
 
-Each operator has several *schedules*; the one chosen depends on the
-current execution scope and the Axe layouts / shapes of its operands —
-the JAX/TPU analogue of the paper's copy dispatching to LDG/TMA/NVSHMEM:
+The kernel entry points that used to live here — the scope-dispatched
+``matmul`` and the K-sharded ``collective_matmul`` — are now
+``axe.program`` stage graphs (``repro.kernels.programs``); the
+functions below remain as keyword-compatible deprecated shims that
+delegate and warn. Scope dispatch, schedule resolution
+(``program_name/stage_name`` tune keys), and the ring-vs-psum_scatter
+choice all live in the programs.
 
-``matmul``:
-  * BLOCK scope              → ``jnp.dot`` on VMEM tiles (MXU)
-  * DEVICE scope, aligned    → Pallas tiled kernel (Axe-derived BlockSpec)
-  * DEVICE scope, unaligned  → XLA dot
-  * MESH scope, K sharded    → collective matmul (psum_scatter), optionally
-                               the overlapped ring schedule (§4.2 analogue)
-
-``copy``:
-  * same placement           → identity / with_sharding_constraint
-  * placement differs        → collective plan inferred from the layout
-                               pair (core.collective), applied in shard_map
-
-``reduce_scatter`` / ``all_reduce``: Fig. 8 semantics with DTensorSpec
-signatures checked at trace time.
+Still first-class here: the layout-to-layout ``copy`` (collective plan
+inferred from the DTensorSpec pair, applied in shard_map), the
+MESH-scope ``constrain``, and the Fig. 8-style collective signatures.
 """
 from __future__ import annotations
 
 from typing import Mapping, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro import compat
+from repro._deprecation import warn_deprecated
 from repro.core import collective as coll
-from repro.core.blockspec import TilingError, check_tiling
 from repro.core.dtensor import DTensorSpec
-from repro.core.scopes import Scope, current_scope
+
+
+def _deprecated(old: str, new: str) -> None:
+    warn_deprecated(f"repro.core.ops.{old}", new, stacklevel=4)
 
 
 # ---------------------------------------------------------------------------
-# matmul
+# deprecated shims over the axe.program entry points
 # ---------------------------------------------------------------------------
 
 
@@ -53,70 +46,28 @@ def matmul(
     a_spec=None,
     b_spec=None,
 ) -> jax.Array:
-    """Dispatch a 2-D matmul to the best schedule for the current scope.
+    """Deprecated shim over ``repro.kernels.programs.matmul`` (the
+    ``matmul`` program dispatches on the current scope exactly as this
+    function used to: MESH/BLOCK → ``dot``, DEVICE/GRID → ``tile`` with
+    xla fallback on infeasible tiles — including infeasible *explicit*
+    ``block_*`` sizes, this function's documented legacy behavior;
+    the program itself fails loudly on pinned schedules)."""
+    from repro.core.blockspec import TilingError
+    from repro.kernels import programs
 
-    At DEVICE/GRID scope the schedule comes from, in priority order:
-    an explicit ``schedule`` object, explicit ``block_*`` sizes (forces
-    the Pallas kernel with those tiles), or the planner/autotuner
-    (``repro.tune.get_schedule`` — forced-env > cached-measurement >
-    roofline-ranked plan). An infeasible kernel schedule (TilingError)
-    falls back to the XLA dot rather than failing the trace.
-
-    ``a_spec`` / ``b_spec`` are optional operand ``AxeSpec``s
-    (``repro.axe``): when given, the tune cache keys on their canonical
-    signatures, so call sites whose layouts canonicalize equal share one
-    schedule. The shapes planned against are ``a``/``b`` as passed —
-    inside a shard_map body those are already the local (per-device)
-    view. Use ``matmul_spec`` to get the propagated output spec and
-    required redistributions.
-    """
-    scope = current_scope()
-    out_dtype = out_dtype or a.dtype
-    if scope == Scope.BLOCK:
-        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
-    if scope in (Scope.DEVICE, Scope.GRID) and prefer_kernel and a.ndim == b.ndim == 2:
-        from repro import tune
-
-        if schedule is None:
-            if block_m is not None or block_n is not None or block_k is not None:
-                schedule = tune.Schedule(
-                    "matmul", "kernel",
-                    (("bm", block_m or 256), ("bn", block_n or 256), ("bk", block_k or 512)),
-                )
-            else:
-                schedule = tune.get_schedule(
-                    "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
-                    layout_sig=tune.layout_signature(a_spec, b_spec),
-                )
-        if schedule.impl == "kernel":
-            bm = schedule.block("bm", 256)
-            bn = schedule.block("bn", 256)
-            bk = schedule.block("bk", 512)
-            try:
-                check_tiling(
-                    (a.shape[0], b.shape[1]),
-                    (min(bm, a.shape[0]), min(bn, b.shape[1])), a.dtype,
-                    op="ops.matmul",
-                )
-                from repro.kernels import ops as kops
-
-                # blocks are fully resolved here (spec-keyed lookup above),
-                # so the kernel wrapper's own schedule path is bypassed
-                return kops.matmul(
-                    a, b, block_m=bm, block_n=bn, block_k=bk
-                ).astype(out_dtype)
-            except (TilingError, ImportError):
-                pass
-    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
-
-
-def matmul_spec(a_spec, b_spec):
-    """Propagated output ``AxeSpec`` (+ required input redistributions)
-    of ``matmul(a, b)`` — the §3.2 layout-inference step, exposed so
-    entry points can plan collectives before tracing."""
-    from repro.axe.propagate import propagate_matmul
-
-    return propagate_matmul(a_spec, b_spec)
+    _deprecated("matmul", "repro.kernels.programs.matmul")
+    blocks = {k: v for k, v in
+              (("bm", block_m), ("bn", block_n), ("bk", block_k)) if v is not None}
+    try:
+        return programs.matmul(
+            a, b, out_dtype=out_dtype, schedule=schedule,
+            blocks=blocks or None, impl=None if prefer_kernel else "xla",
+            arg_specs=(a_spec, b_spec),
+        )
+    except TilingError:
+        return programs.matmul(
+            a, b, out_dtype=out_dtype, impl="xla", arg_specs=(a_spec, b_spec)
+        )
 
 
 def collective_matmul(
@@ -126,65 +77,24 @@ def collective_matmul(
     axis_name: str,
     overlap: Optional[bool] = None,
 ) -> jax.Array:
-    """K-sharded GEMM + reduce-scatter inside shard_map (paper §4.2).
+    """Deprecated shim over ``repro.kernels.programs.collective_matmul``
+    (paper §4.2): ``overlap`` maps onto the program's ``ring`` /
+    ``psum_scatter`` stage variants; ``None`` lets the planner rank the
+    two with the roofline collective model."""
+    from repro.kernels import programs
 
-    ``a``: [M, K_local], ``b``: [K_local, N]; K is sharded over
-    ``axis_name`` (P devices). Output: rows scattered over the axis,
-    [M / P, N] per device.
+    _deprecated("collective_matmul", "repro.kernels.programs.collective_matmul")
+    impl = None if overlap is None else ("ring" if overlap else "psum_scatter")
+    return programs.collective_matmul(a, b, axis_name=axis_name, impl=impl)
 
-    overlap=False — baseline schedule: full local GEMM then psum_scatter
-    (the cuBLAS+NCCL analogue).
-    overlap=True  — ring schedule: M is chunked into P pieces; each step
-    computes one chunk's partial GEMM and accumulates into a rotating
-    buffer (ppermute), so ICI transfer of chunk t overlaps the MXU work
-    of chunk t+1 — the paper's fused GEMM+RS kernel, on ICI.
-    overlap=None  — the planner ranks the two schedules with the
-    roofline collective model and picks (``repro.tune``).
-    """
-    p = compat.axis_size(axis_name)
-    if overlap is None:
-        from repro import tune
 
-        sched = tune.get_schedule(
-            "collective_matmul",
-            shapes=(a.shape, b.shape, (p,)),
-            dtypes=(a.dtype, b.dtype),
-        )
-        overlap = sched.impl == "ring"
-    if not overlap or p == 1:
-        partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
-        return jax.lax.psum_scatter(
-            partial, axis_name, scatter_dimension=0, tiled=True
-        ).astype(a.dtype)
+def matmul_spec(a_spec, b_spec):
+    """Propagated output ``AxeSpec`` (+ required input redistributions)
+    of ``matmul(a, b)`` — the §3.2 layout-inference step, exposed so
+    entry points can plan collectives before tracing."""
+    from repro.axe.propagate import propagate_matmul
 
-    m = a.shape[0]
-    assert m % p == 0, f"M={m} must divide over {axis_name}={p}"
-    chunk = m // p
-    idx = jax.lax.axis_index(axis_name)
-    perm = [(i, (i + 1) % p) for i in range(p)]
-
-    def body(t, acc):
-        # the accumulator on device i at step t is destined for chunk
-        # d = (i - t - 1) mod p (it still has to traverse the remaining
-        # devices and land on device d with no permute after the last add)
-        src = (idx + p - 1 - t) % p
-        part = jnp.dot(
-            jax.lax.dynamic_slice_in_dim(a, src * chunk, chunk, axis=0),
-            b,
-            preferred_element_type=jnp.float32,
-        )
-        acc = acc + part
-        acc = jax.lax.cond(
-            t < p - 1,
-            lambda x: jax.lax.ppermute(x, axis_name, perm),
-            lambda x: x,
-            acc,
-        )
-        return acc
-
-    acc = jnp.zeros((chunk, b.shape[1]), jnp.float32)
-    acc = jax.lax.fori_loop(0, p, body, acc, unroll=True)
-    return acc.astype(a.dtype)
+    return propagate_matmul(a_spec, b_spec)
 
 
 # ---------------------------------------------------------------------------

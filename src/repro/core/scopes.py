@@ -6,9 +6,12 @@ be issued at. On TPU/JAX the hierarchy is
     GRID   — a Pallas grid program (one (i, j, ...) step)
     BLOCK  — inside a Pallas kernel body (VMEM-resident tiles)
 
-``ops`` dispatches schedules on ``current_scope()`` — e.g. a ``matmul``
-at MESH scope becomes a sharded einsum with collectives; at DEVICE scope
-a Pallas kernel launch; at BLOCK scope a jnp.dot on VMEM refs.
+The ordering is first-class: ``Scope.rank`` increases from coarse to
+fine, and ``Scope.finer_than`` / ``Scope.can_enter`` express the single
+legality rule of the multi-granularity DSL (``repro.axe.program``) —
+execution may only move *inward*. ``scope(...)`` enforces it on the
+thread-local scope stack; ``axe.program`` stage dispatch enforces the
+same rule when one stage invokes another.
 """
 from __future__ import annotations
 
@@ -23,6 +26,23 @@ class Scope(enum.Enum):
     DEVICE = "device"
     GRID = "grid"
     BLOCK = "block"
+
+    @property
+    def rank(self) -> int:
+        """Position in the coarse→fine order (MESH=0 … BLOCK=3)."""
+        return _ORDER.index(self)
+
+    def finer_than(self, other: "Scope") -> bool:
+        return self.rank > other.rank
+
+    def coarser_than(self, other: "Scope") -> bool:
+        return self.rank < other.rank
+
+    def can_enter(self, current: "Scope") -> bool:
+        """A scope may be opened inside ``current`` iff it is the same
+        granularity or finer — never coarser (you cannot launch a mesh
+        program from inside a Pallas block)."""
+        return not self.coarser_than(current)
 
 
 _ORDER = [Scope.MESH, Scope.DEVICE, Scope.GRID, Scope.BLOCK]
@@ -44,7 +64,7 @@ def current_scope() -> Scope:
 def scope(s: Scope | str) -> Iterator[Scope]:
     s = Scope(s) if isinstance(s, str) else s
     cur = current_scope()
-    if _ORDER.index(s) < _ORDER.index(cur):
+    if not s.can_enter(cur):
         raise ValueError(f"cannot open {s} inside finer scope {cur}")
     _stack().append(s)
     try:

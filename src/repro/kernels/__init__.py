@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the compute hot-spots the paper optimizes,
+# written as axe.program stage graphs (see repro.kernels.programs —
+# the canonical entry points — and docs/kernel-dsl.md).
+# repro.kernels.ops keeps the legacy keyword-compatible wrappers as
+# deprecated shims.

@@ -1,14 +1,18 @@
-"""Blocked online-softmax attention (FlashAttention) as a Pallas TPU
-kernel — the paper's §4.3 MHA workload, adapted from Trainium's NKI
-pipeline to the TPU grid/VMEM model.
+"""Blocked online-softmax attention (FlashAttention) as an
+``axe.program`` stage graph — the paper's §4.3 MHA workload, adapted
+from Trainium's NKI pipeline to the TPU grid/VMEM model.
 
-Grid: (batch*heads, q_blocks, kv_blocks); kv is the innermost
-"arbitrary" dim. Running max / denominator / f32 accumulator live in
-VMEM scratch and are finalized on the last kv step. Supports causal and
-sliding-window masking (Gemma-3-style local attention) — the mask is
-computed from grid coordinates, exactly the Axe story of deriving
-addresses/predicates from layout coordinates rather than hand-written
-index math.
+* ``flash_attention/attend``      (GRID)  — the Pallas launch. Grid:
+  (batch*heads, q_blocks, kv_blocks); kv is the innermost "arbitrary"
+  dim. Schedule key ``flash_attention/attend`` (blocks bq/bkv; the
+  causal flag tags the layout signature so causal and full sweeps tune
+  separately).
+* ``flash_attention/softmax_mac`` (BLOCK) — the per-cell online-softmax
+  update on VMEM refs: running max / denominator / f32 accumulator live
+  in scratch and are finalized on the last kv step. Causal and
+  sliding-window masks (Gemma-3-style local attention) are computed
+  from grid coordinates — the Axe story of deriving predicates from
+  layout coordinates rather than hand-written index math.
 """
 from __future__ import annotations
 
@@ -19,13 +23,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro import compat
 from repro.axe.lower import block_lowering
+from repro.axe.program import program
+from repro.core.scopes import Scope
 
 NEG_INF = -1e30
 
+flash_attention_program = program(
+    "flash_attention",
+    doc="softmax(Q Kᵀ / √d) V with online softmax, causal/window masking",
+)
 
-def _flash_kernel(
+
+def _fa_key(args, kw, arg_specs=()):
+    return {"tag": "causal" if kw.get("causal") else None}
+
+
+def _fa_flops(args, kw) -> float:
+    q, k = args[0], args[1]
+    b, h, sq, d = q.shape
+    return 4.0 * b * h * sq * k.shape[2] * d
+
+
+@flash_attention_program.stage("softmax_mac", scope=Scope.BLOCK)
+def _softmax_mac(
+    ctx,
     q_ref, k_ref, v_ref, o_ref,
     acc_ref, m_ref, l_ref,
     *,
@@ -77,6 +99,72 @@ def _flash_kernel(
         o_ref[0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+@flash_attention_program.stage(
+    "attend", scope=Scope.GRID, entry=True,
+    blocks=(("bq", 128), ("bkv", 128)),
+    variants=("kernel",),
+    key=_fa_key,
+    flops=_fa_flops,
+)
+def _attend(ctx, q, k, v, *, causal: bool = False, window: int | None = None,
+            scale: float | None = None):
+    b, h, sq, d = q.shape
+    _, _, skv, _ = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    block_q = min(ctx.block("bq"), sq)
+    block_kv = min(ctx.block("bkv"), skv)
+
+    def make():
+        def launch(q, k, v):
+            b, h, sq, d = q.shape
+            skv = k.shape[2]
+            bh = b * h
+            qr = q.reshape(bh, sq, d)
+            kr = k.reshape(bh, skv, d)
+            vr = v.reshape(bh, skv, d)
+
+            # Axe on-device lowering: q/k/v/o tiles validated through the
+            # unified TilingError path.
+            q_low = block_lowering((bh, sq, d), (1, block_q, d), q.dtype,
+                                   index_map=lambda bhi, qi, kj: (bhi, qi, 0),
+                                   op="flash_attention.Q")
+            k_low = block_lowering((bh, skv, d), (1, block_kv, d), k.dtype,
+                                   index_map=lambda bhi, qi, kj: (bhi, kj, 0),
+                                   op="flash_attention.K")
+            v_low = block_lowering((bh, skv, d), (1, block_kv, d), v.dtype,
+                                   index_map=lambda bhi, qi, kj: (bhi, kj, 0),
+                                   op="flash_attention.V")
+            o_low = block_lowering((bh, sq, d), (1, block_q, d), q.dtype,
+                                   index_map=lambda bhi, qi, kj: (bhi, qi, 0),
+                                   op="flash_attention.O")
+            kv_steps = k_low.grid[1]
+
+            body = functools.partial(
+                ctx.run, "softmax_mac",
+                kv_steps=kv_steps, block_q=block_q, block_kv=block_kv,
+                causal=causal, window=window, scale=scale,
+                kv_len=skv, q_len=sq,
+            )
+            out = ctx.pallas_call(
+                lambda *refs: body(*refs),
+                grid=(bh, q_low.grid[1], kv_steps),
+                in_specs=[q_low.spec, k_low.spec, v_low.spec],
+                out_specs=o_low.spec,
+                out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+                scratch_shapes=[
+                    pltpu.VMEM((block_q, d), jnp.float32),
+                    pltpu.VMEM((block_q, 1), jnp.float32),
+                    pltpu.VMEM((block_q, 1), jnp.float32),
+                ],
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            )(qr, kr, vr)
+            return out.reshape(b, h, sq, d)
+
+        return launch
+
+    return ctx.jit((block_q, block_kv, causal, window, scale), make)(q, k, v)
+
+
 def flash_attention_pallas(
     q: jax.Array,  # [B, H, Sq, D]
     k: jax.Array,  # [B, H, Skv, D]
@@ -89,74 +177,13 @@ def flash_attention_pallas(
     block_kv: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    b, h, sq, d = q.shape
-    _, _, skv, _ = k.shape
-    scale = scale if scale is not None else 1.0 / (d ** 0.5)
-    if block_q is None or block_kv is None:
-        # planner-chosen default blocks (kernel-only plan; cached
-        # measurements from the autotuner win over the roofline rank)
-        from repro import tune
-
-        sched = tune.get_schedule(
-            "flash_attention", shapes=(q.shape, k.shape), dtypes=(q.dtype, k.dtype),
-            layout_sig="causal" if causal else "dense",  # matches the autotuner's key
-            impl="kernel",
-        )
-        block_q = block_q or sched.block("bq", 128)
-        block_kv = block_kv or sched.block("bkv", 128)
-    block_q = min(block_q, sq)
-    block_kv = min(block_kv, skv)
-
-    bh = b * h
-    qr = q.reshape(bh, sq, d)
-    kr = k.reshape(bh, skv, d)
-    vr = v.reshape(bh, skv, d)
-
-    # Axe on-device lowering: q/k/v/o tiles validated through the
-    # unified TilingError path (one actionable error, not a
-    # backend-dependent Pallas shape assertion).
-    q_low = block_lowering((bh, sq, d), (1, block_q, d), q.dtype,
-                           index_map=lambda bhi, qi, kj: (bhi, qi, 0),
-                           op="flash_attention.Q")
-    k_low = block_lowering((bh, skv, d), (1, block_kv, d), k.dtype,
-                           index_map=lambda bhi, qi, kj: (bhi, kj, 0),
-                           op="flash_attention.K")
-    v_low = block_lowering((bh, skv, d), (1, block_kv, d), v.dtype,
-                           index_map=lambda bhi, qi, kj: (bhi, kj, 0),
-                           op="flash_attention.V")
-    o_low = block_lowering((bh, sq, d), (1, block_q, d), q.dtype,
-                           index_map=lambda bhi, qi, kj: (bhi, qi, 0),
-                           op="flash_attention.O")
-    kv_steps = k_low.grid[1]
-
-    kernel = functools.partial(
-        _flash_kernel,
-        kv_steps=kv_steps,
-        block_q=block_q,
-        block_kv=block_kv,
-        causal=causal,
-        window=window,
-        scale=scale,
-        kv_len=skv,
-        q_len=sq,
+    """Raw kernel launcher: the ``flash_attention/attend`` stage with
+    optional pinned blocks (unset sizes resolve through the planner)."""
+    blocks = {n: s for n, s in (("bq", block_q), ("bkv", block_kv)) if s is not None}
+    return flash_attention_program(
+        q, k, v, causal=causal, window=window, scale=scale,
+        blocks=blocks or None, interpret=interpret,
     )
-    out = pl.pallas_call(
-        kernel,
-        grid=(bh, q_low.grid[1], kv_steps),
-        in_specs=[q_low.spec, k_low.spec, v_low.spec],
-        out_specs=o_low.spec,
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, d), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-        ],
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(qr, kr, vr)
-    return out.reshape(b, h, sq, d)
 
 
 # ---------------------------------------------------------------------------
@@ -174,17 +201,17 @@ def _ref_attention(q, k, v, causal, window, scale):
 def flash_attention_trainable(
     q, k, v, causal: bool = False, window=None, scale=None, interpret: bool = True
 ):
-    """Differentiable flash attention: the Pallas kernel runs the
-    forward (VMEM-resident logits); the backward recomputes attention
-    (flash-style — only q/k/v are saved, O(S²) logits never hit HBM in
-    fwd). Grad-checked against the jnp oracle in tests."""
-    return flash_attention_pallas(
+    """Differentiable flash attention: the ``flash_attention`` program
+    runs the forward (VMEM-resident logits); the backward recomputes
+    attention (flash-style — only q/k/v are saved, O(S²) logits never
+    hit HBM in fwd). Grad-checked against the jnp oracle in tests."""
+    return flash_attention_program(
         q, k, v, causal=causal, window=window, scale=scale, interpret=interpret
     )
 
 
 def _fat_fwd(q, k, v, causal, window, scale, interpret):
-    out = flash_attention_pallas(
+    out = flash_attention_program(
         q, k, v, causal=causal, window=window, scale=scale, interpret=interpret
     )
     return out, (q, k, v)

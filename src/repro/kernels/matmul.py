@@ -1,31 +1,55 @@
-"""Tiled MXU GEMM as a Pallas TPU kernel, with the loop nest derived the
-way the paper derives TensorEngine matmuls (§3.4, App. H, adapted):
+"""Tiled MXU GEMM as an ``axe.program`` stage graph (paper §3.2/§3.4).
 
-1. *Group* the operand layouts by (M, K), (K, N), (M, N).
-2. Pick the largest instruction tile the hardware admits — on TPU the
-   MXU wants the contraction and lane dims in multiples of 128 and the
-   sublane dim in multiples of the VREG sublane count.
-3. Build a grid loop nest over the remaining iters.
+The kernel is written once as three scope-tagged stages:
 
-Here step 2/3 are realized by ``core.blockspec.derive_tiling`` (an Axe
-direct-sum check that each grid cell's HBM region is a strided box) and
-the ``pl.pallas_call`` grid. K is the innermost ("arbitrary") grid dim;
-a VMEM f32 scratch accumulates partial products across K steps.
+* ``matmul/dot``  (BLOCK) — the functional single-tile body: one
+  f32-accumulated ``jnp.dot``. Doubles as the whole-array XLA schedule
+  at MESH scope (where GSPMD distributes it) and as the fallback when a
+  tile is infeasible.
+* ``matmul/tile`` (GRID)  — the Pallas launch: operand tilings derived
+  the way the paper derives TensorEngine matmuls (group by (M,K),
+  (K,N), (M,N); pick the largest admissible instruction tile; loop the
+  remaining iters), realized by ``axe.lower.block_lowering`` (App. F
+  direct-sum check) with K as the innermost "arbitrary" grid dim and a
+  VMEM f32 scratch accumulating across K steps. Schedule key
+  ``matmul/tile`` (blocks bm/bn/bk; variants kernel|xla).
+* ``matmul/mac``  (BLOCK) — the per-grid-cell body on VMEM refs.
+
+Dispatch by execution scope: MESH/BLOCK → ``dot``, DEVICE/GRID →
+``tile``. Placement comes only from operand AxeSpecs (``arg_specs``).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro import compat
 from repro.axe.lower import block_lowering
+from repro.axe.program import program
+from repro.core.blockspec import TilingError, check_tiling
+from repro.core.scopes import Scope
+
+matmul_program = program(
+    "matmul", doc="C[M,N] = A[M,K] @ B[K,N] with f32 VMEM accumulation"
+)
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+def _flops(args, kw) -> float:
+    a, b = args[0], args[1]
+    return 2.0 * a.shape[0] * a.shape[1] * b.shape[1]
+
+
+@matmul_program.stage("dot", scope=Scope.BLOCK,
+                      dispatch=(Scope.MESH, Scope.BLOCK))
+def _dot(ctx, a, b, *, out_dtype=None):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(
+        out_dtype or a.dtype
+    )
+
+
+@matmul_program.stage("mac", scope=Scope.BLOCK)
+def _mac(ctx, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -39,6 +63,67 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+@matmul_program.stage(
+    "tile", scope=Scope.GRID, entry=True,
+    dispatch=(Scope.DEVICE, Scope.GRID),
+    blocks=(("bm", 256), ("bn", 256), ("bk", 512)),
+    variants=("kernel", "xla"),
+    flops=_flops,
+)
+def _tile(ctx, a, b, *, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    if a.ndim != 2 or b.ndim != 2:
+        return ctx.run("dot", a, b, out_dtype=out_dtype)
+    if ctx.impl != "kernel":
+        return ctx.run("dot", a, b, out_dtype=out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(ctx.block("bm"), m)
+    bn = min(ctx.block("bn"), n)
+    bk = min(ctx.block("bk"), k)
+    try:
+        # fail fast on infeasible output tiles (same precheck the legacy
+        # dispatch made); A/B tilings are re-validated inside the launch
+        check_tiling((m, n), (bm, bn), a.dtype, op="matmul/tile")
+    except TilingError:
+        if ctx.pinned:
+            raise  # caller pinned the kernel: the unified error path
+        return ctx.run("dot", a, b, out_dtype=out_dtype)
+
+    def make():
+        def launch(a, b):
+            m, k = a.shape
+            _, n = b.shape
+            a_low = block_lowering((m, k), (bm, bk), a.dtype,
+                                   index_map=lambda i, j, kk: (i, kk),
+                                   op="matmul.A")
+            b_low = block_lowering((k, n), (bk, bn), b.dtype,
+                                   index_map=lambda i, j, kk: (kk, j),
+                                   op="matmul.B")
+            o_low = block_lowering((m, n), (bm, bn), out_dtype,
+                                   index_map=lambda i, j, kk: (i, j),
+                                   op="matmul.C")
+            k_steps = a_low.grid[1]
+            return ctx.pallas_call(
+                lambda *refs: ctx.run("mac", *refs, k_steps=k_steps),
+                grid=(a_low.grid[0], b_low.grid[1], k_steps),
+                in_specs=[a_low.spec, b_low.spec],
+                out_specs=o_low.spec,
+                out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+                scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            )(a, b)
+
+        return launch
+
+    try:
+        return ctx.jit((bm, bn, bk, str(out_dtype)), make)(a, b)
+    except TilingError:
+        if ctx.pinned:
+            raise
+        return ctx.run("dot", a, b, out_dtype=out_dtype)
+
+
 def matmul_pallas(
     a: jax.Array,
     b: jax.Array,
@@ -49,49 +134,12 @@ def matmul_pallas(
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """C[M, N] = A[M, K] @ B[K, N] with f32 VMEM accumulation.
-
-    Unset block sizes are resolved by the schedule planner
-    (``repro.tune``, kernel-only plan: cached measurement if one
-    exists, else the roofline-ranked Axe-valid tiling)."""
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    if block_m is None or block_n is None or block_k is None:
-        from repro import tune
-
-        sched = tune.get_schedule(
-            "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
-            impl="kernel",
-        )
-        block_m = block_m or sched.block("bm", 256)
-        block_n = block_n or sched.block("bn", 256)
-        block_k = block_k or sched.block("bk", 512)
-    block_m = min(block_m, m)
-    block_n = min(block_n, n)
-    block_k = min(block_k, k)
-    out_dtype = out_dtype or a.dtype
-
-    # Axe on-device lowering (repro.axe.lower): every grid cell must be
-    # a strided HBM box (App. F direct-sum decomposition of the dense
-    # layout); infeasible tiles raise the unified TilingError.
-    a_low = block_lowering((m, k), (block_m, block_k), a.dtype,
-                           index_map=lambda i, j, kk: (i, kk), op="matmul.A")
-    b_low = block_lowering((k, n), (block_k, block_n), b.dtype,
-                           index_map=lambda i, j, kk: (kk, j), op="matmul.B")
-    o_low = block_lowering((m, n), (block_m, block_n), out_dtype,
-                           index_map=lambda i, j, kk: (i, j), op="matmul.C")
-    k_steps = a_low.grid[1]
-
-    return pl.pallas_call(
-        functools.partial(_matmul_kernel, k_steps=k_steps),
-        grid=(a_low.grid[0], b_low.grid[1], k_steps),
-        in_specs=[a_low.spec, b_low.spec],
-        out_specs=o_low.spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(a, b)
+    """Raw kernel launcher: the ``matmul/tile`` stage pinned to the
+    Pallas variant. Unset block sizes resolve through the planner under
+    the ``matmul/tile`` key."""
+    blocks = {k: v for k, v in
+              (("bm", block_m), ("bn", block_n), ("bk", block_k)) if v is not None}
+    return matmul_program(
+        a, b, stage="tile", impl="kernel", blocks=blocks or None,
+        out_dtype=out_dtype, interpret=interpret,
+    )

@@ -1,29 +1,52 @@
-"""Grouped (per-expert) GEMM for fused MoE layers (paper §4.1).
+"""Grouped (per-expert) GEMM for fused MoE layers (paper §4.1), as an
+``axe.program`` stage graph.
 
 With capacity-based routing the dispatched activations are a dense
 [E, C, d] tensor (E experts × capacity C), so the expert FFN is a
-batched GEMM with per-expert weights [E, d, f]. The kernel tiles
-(C, f, d) per expert on the MXU; the expert dim is the outermost
-"parallel" grid axis — the analogue of the paper's group-GEMM tiles,
-which its finer-grained pipeline then chains into the second GEMM.
+batched GEMM with per-expert weights [E, d, f]:
 
-The second group GEMM (f -> d) reuses the same kernel with swapped
+* ``moe_gemm/einsum``      (BLOCK) — the functional oracle-shaped body
+  (``ecd,edf->ecf``); the XLA variant and the MESH-scope dispatch.
+* ``moe_gemm/expert_gemm`` (GRID)  — the Pallas launch tiling (C, f, d)
+  per expert on the MXU, expert dim outermost "parallel". Schedule key
+  ``moe_gemm/expert_gemm`` (blocks bc/bf/bd; variants kernel|xla).
+* ``moe_gemm/mac``         (BLOCK) — the per-cell body on VMEM refs.
+
+The second group GEMM (f -> d) reuses the same program with swapped
 weight dims.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro import compat
 from repro.axe.lower import block_lowering
+from repro.axe.program import program
+from repro.core.scopes import Scope
+
+moe_gemm_program = program(
+    "moe_gemm", doc="per-expert batched GEMM [E,C,d] @ [E,d,f] -> [E,C,f]"
+)
 
 
-def _moe_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+def _flops(args, kw) -> float:
+    x, w = args[0], args[1]
+    e, c, d = x.shape
+    return 2.0 * e * c * d * w.shape[2]
+
+
+@moe_gemm_program.stage("einsum", scope=Scope.BLOCK,
+                        dispatch=(Scope.MESH, Scope.BLOCK))
+def _einsum(ctx, x, w, *, out_dtype=None):
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(out_dtype or x.dtype)
+
+
+@moe_gemm_program.stage("mac", scope=Scope.BLOCK)
+def _mac(ctx, x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -37,6 +60,59 @@ def _moe_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
         o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
 
 
+@moe_gemm_program.stage(
+    "expert_gemm", scope=Scope.GRID, entry=True,
+    dispatch=(Scope.DEVICE, Scope.GRID),
+    blocks=(("bc", 128), ("bf", 256), ("bd", 512)),
+    variants=("kernel", "xla"),
+    flops=_flops,
+)
+def _expert_gemm(ctx, x, w, *, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    if ctx.impl != "kernel":
+        return ctx.run("einsum", x, w, out_dtype=out_dtype)
+    e, c, d = x.shape
+    _, _, f = w.shape
+    bc = min(ctx.block("bc"), c)
+    bf = min(ctx.block("bf"), f)
+    bd = min(ctx.block("bd"), d)
+
+    def make():
+        def launch(x, w):
+            e, c, d = x.shape
+            f = w.shape[2]
+            x_low = block_lowering((e, c, d), (1, bc, bd), x.dtype,
+                                   index_map=lambda ei, ci, fi, ki: (ei, ci, ki),
+                                   op="moe_gemm.X")
+            w_low = block_lowering((e, d, f), (1, bd, bf), w.dtype,
+                                   index_map=lambda ei, ci, fi, ki: (ei, ki, fi),
+                                   op="moe_gemm.W")
+            o_low = block_lowering((e, c, f), (1, bc, bf), out_dtype,
+                                   index_map=lambda ei, ci, fi, ki: (ei, ci, fi),
+                                   op="moe_gemm.O")
+            k_steps = x_low.grid[2]
+            return ctx.pallas_call(
+                lambda *refs: ctx.run("mac", *refs, k_steps=k_steps),
+                grid=(e, x_low.grid[1], w_low.grid[2], k_steps),
+                in_specs=[x_low.spec, w_low.spec],
+                out_specs=o_low.spec,
+                out_shape=jax.ShapeDtypeStruct((e, c, f), out_dtype),
+                scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+                dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+            )(x, w)
+
+        return launch
+
+    from repro.core.blockspec import TilingError
+
+    try:
+        return ctx.jit((bc, bf, bd, str(out_dtype)), make)(x, w)
+    except TilingError:
+        if ctx.pinned:
+            raise  # caller pinned the kernel: the unified error path
+        return ctx.run("einsum", x, w, out_dtype=out_dtype)
+
+
 def moe_gemm_pallas(
     x: jax.Array,  # [E, C, d]
     w: jax.Array,  # [E, d, f]
@@ -47,44 +123,11 @@ def moe_gemm_pallas(
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    e, c, d = x.shape
-    e2, d2, f = w.shape
-    assert e == e2 and d == d2, (x.shape, w.shape)
-    if block_c is None or block_f is None or block_d is None:
-        # planner-chosen default blocks (kernel-only plan)
-        from repro import tune
-
-        sched = tune.get_schedule(
-            "moe_gemm", shapes=(x.shape, w.shape), dtypes=(x.dtype, w.dtype),
-            impl="kernel",
-        )
-        block_c = block_c or sched.block("bc", 128)
-        block_f = block_f or sched.block("bf", 256)
-        block_d = block_d or sched.block("bd", 512)
-    block_c = min(block_c, c)
-    block_f = min(block_f, f)
-    block_d = min(block_d, d)
-    out_dtype = out_dtype or x.dtype
-
-    # Axe on-device lowering: per-expert tiles validated through the
-    # unified TilingError path (repro.axe.lower.block_lowering).
-    x_low = block_lowering((e, c, d), (1, block_c, block_d), x.dtype,
-                           index_map=lambda ei, ci, fi, ki: (ei, ci, ki), op="moe_gemm.X")
-    w_low = block_lowering((e, d, f), (1, block_d, block_f), w.dtype,
-                           index_map=lambda ei, ci, fi, ki: (ei, ki, fi), op="moe_gemm.W")
-    o_low = block_lowering((e, c, f), (1, block_c, block_f), out_dtype,
-                           index_map=lambda ei, ci, fi, ki: (ei, ci, fi), op="moe_gemm.O")
-    k_steps = x_low.grid[2]
-
-    return pl.pallas_call(
-        functools.partial(_moe_kernel, k_steps=k_steps),
-        grid=(e, x_low.grid[1], w_low.grid[2], k_steps),
-        in_specs=[x_low.spec, w_low.spec],
-        out_specs=o_low.spec,
-        out_shape=jax.ShapeDtypeStruct((e, c, f), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(x, w)
+    """Raw kernel launcher: the ``moe_gemm/expert_gemm`` stage pinned to
+    the Pallas variant (unset blocks resolve through the planner)."""
+    blocks = {n: s for n, s in
+              (("bc", block_c), ("bf", block_f), ("bd", block_d)) if s is not None}
+    return moe_gemm_program(
+        x, w, stage="expert_gemm", impl="kernel", blocks=blocks or None,
+        out_dtype=out_dtype, interpret=interpret,
+    )

@@ -1,70 +1,34 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""Deprecated shims: the pre-DSL jit'd kernel wrappers.
 
-On CPU (this container) kernels execute in interpret mode — the kernel
-body runs in Python per grid step, validating the exact TPU program. On
-a TPU backend the same calls compile to Mosaic.
-
-Block sizes default to None, which defers to the schedule planner
-(``repro.tune``): a cached autotuner measurement if one exists for the
-(op, shapes, dtypes, backend) key, else the roofline-ranked Axe-valid
-tiling. Pass explicit sizes to pin a schedule by hand.
-
-Resolution happens *before* the jitted inner call, so the schedule is
-part of the static argument key: when an in-process autotune run (or
-``tune.use_cache`` / the env knobs) changes the answer, the next call
-traces with the new blocks instead of replaying a stale cached trace.
-
-Wrappers accept optional operand ``AxeSpec``s (``repro.axe``): when
-given, the schedule cache keys on the canonical AxeSpec signature, so
-two call sites whose layouts canonicalize equal share one schedule and
-differently-laid-out operands never collide on a key.
+Every function here is a single-expression, keyword-compatible delegate
+to the corresponding ``axe.program`` (``repro.kernels.programs``) and
+emits a ``DeprecationWarning`` on call. New code calls the programs
+directly — block sizes become per-stage schedules
+(``program_name/stage_name`` keys in ``repro.tune``), and placement
+comes from operand AxeSpecs (``arg_specs=``), so there is nothing left
+for a wrapper layer to plumb. See docs/kernel-dsl.md (migration table).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-
-from repro.kernels import flash_attention as _fa
-from repro.kernels import matmul as _mm
-from repro.kernels import moe_gemm as _mg
-from repro.kernels import rmsnorm as _rn
+from repro._deprecation import warn_deprecated
+from repro.kernels import programs as _programs
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _deprecated(old: str, new: str) -> None:
+    warn_deprecated(f"repro.kernels.ops.{old}", new, stacklevel=4)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def _matmul_jit(a, b, *, block_m: int, block_n: int, block_k: int):
-    return _mm.matmul_pallas(
-        a, b, block_m=block_m, block_n=block_n, block_k=block_k, interpret=_interpret()
-    )
+def _blocks(**named):
+    return {k: v for k, v in named.items() if v is not None} or None
 
 
 def matmul(a, b, *, block_m: int | None = None, block_n: int | None = None,
            block_k: int | None = None, a_spec=None, b_spec=None):
-    if block_m is None or block_n is None or block_k is None:
-        from repro import tune
-
-        sched = tune.get_schedule(
-            "matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype),
-            layout_sig=tune.layout_signature(a_spec, b_spec),
-            impl="kernel",
-        )
-        block_m = block_m or sched.block("bm", 256)
-        block_n = block_n or sched.block("bn", 256)
-        block_k = block_k or sched.block("bk", 512)
-    return _matmul_jit(a, b, block_m=block_m, block_n=block_n, block_k=block_k)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("causal", "window", "scale", "block_q", "block_kv")
-)
-def _flash_attention_jit(q, k, v, *, causal, window, scale, block_q: int, block_kv: int):
-    return _fa.flash_attention_pallas(
-        q, k, v, causal=causal, window=window, scale=scale,
-        block_q=block_q, block_kv=block_kv, interpret=_interpret(),
+    _deprecated("matmul", "repro.kernels.programs.matmul")
+    return _programs.matmul(
+        a, b, stage="tile", impl="kernel",
+        blocks=_blocks(bm=block_m, bn=block_n, bk=block_k),
+        arg_specs=(a_spec, b_spec),
     )
 
 
@@ -73,47 +37,26 @@ def flash_attention(
     block_q: int | None = None, block_kv: int | None = None,
     q_spec=None, kv_spec=None,
 ):
-    if block_q is None or block_kv is None:
-        from repro import tune
-
-        sched = tune.get_schedule(
-            "flash_attention", shapes=(q.shape, k.shape), dtypes=(q.dtype, k.dtype),
-            layout_sig=tune.layout_signature(
-                q_spec, kv_spec, tag="causal" if causal else None,
-            ),
-            impl="kernel",
-        )
-        block_q = block_q or sched.block("bq", 128)
-        block_kv = block_kv or sched.block("bkv", 128)
-    return _flash_attention_jit(
+    _deprecated("flash_attention", "repro.kernels.programs.flash_attention")
+    return _programs.flash_attention(
         q, k, v, causal=causal, window=window, scale=scale,
-        block_q=block_q, block_kv=block_kv,
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
-def _moe_gemm_jit(x, w, *, block_c: int, block_f: int, block_d: int):
-    return _mg.moe_gemm_pallas(
-        x, w, block_c=block_c, block_f=block_f, block_d=block_d, interpret=_interpret()
+        blocks=_blocks(bq=block_q, bkv=block_kv),
+        arg_specs=(q_spec, kv_spec),
     )
 
 
 def moe_gemm(x, w, *, block_c: int | None = None, block_f: int | None = None,
              block_d: int | None = None, x_spec=None, w_spec=None):
-    if block_c is None or block_f is None or block_d is None:
-        from repro import tune
-
-        sched = tune.get_schedule(
-            "moe_gemm", shapes=(x.shape, w.shape), dtypes=(x.dtype, w.dtype),
-            layout_sig=tune.layout_signature(x_spec, w_spec),
-            impl="kernel",
-        )
-        block_c = block_c or sched.block("bc", 128)
-        block_f = block_f or sched.block("bf", 256)
-        block_d = block_d or sched.block("bd", 512)
-    return _moe_gemm_jit(x, w, block_c=block_c, block_f=block_f, block_d=block_d)
+    _deprecated("moe_gemm", "repro.kernels.programs.moe_gemm")
+    return _programs.moe_gemm(
+        x, w, stage="expert_gemm", impl="kernel",
+        blocks=_blocks(bc=block_c, bf=block_f, bd=block_d),
+        arg_specs=(x_spec, w_spec),
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
 def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
-    return _rn.rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows, interpret=_interpret())
+    _deprecated("rmsnorm", "repro.kernels.programs.rmsnorm")
+    return _programs.rmsnorm(
+        x, w, stage="rows", impl="kernel", blocks={"brows": block_rows}, eps=eps
+    )

@@ -1,0 +1,47 @@
+"""The five kernel entry points, as ``axe.program`` stage graphs
+(docs/kernel-dsl.md). This is the canonical import surface::
+
+    from repro.kernels import programs
+
+    y = programs.matmul(a, b)                       # scope-dispatched
+    y = programs.matmul(a, b, arg_specs=(sa, sb))   # AxeSpec-keyed
+    y = programs.flash_attention(q, k, v, causal=True)
+    y = programs.rmsnorm(x, w, eps=1e-6)
+    y = programs.moe_gemm(x, w)
+    f = programs.collective_matmul.shard_map(mesh, (sa, sb), s_out)
+
+Each name is a callable :class:`~repro.axe.program.Program`; schedules
+resolve per stage under ``program_name/stage_name`` keys
+(``repro.tune.get_schedule``), and ``repro.tune.autotune_program``
+measures any tunable stage. The legacy wrappers in
+``repro.kernels.ops`` and ``repro.core.ops`` are deprecated shims over
+these programs.
+
+On CPU (this container) Pallas stages execute in interpret mode — the
+kernel body runs in Python per grid step, validating the exact TPU
+program. On a TPU backend the same programs compile to Mosaic.
+"""
+from __future__ import annotations
+
+from repro.kernels.collective_matmul import (
+    collective_matmul_program as collective_matmul,
+)
+from repro.kernels.collective_matmul import derive_axis_name as derive_axis_name
+from repro.kernels.flash_attention import (
+    flash_attention_program as flash_attention,
+)
+from repro.kernels.matmul import matmul_program as matmul
+from repro.kernels.moe_gemm import moe_gemm_program as moe_gemm
+from repro.kernels.rmsnorm import rmsnorm_program as rmsnorm
+
+ALL_PROGRAMS = (matmul, flash_attention, moe_gemm, rmsnorm, collective_matmul)
+
+__all__ = [
+    "ALL_PROGRAMS",
+    "collective_matmul",
+    "derive_axis_name",
+    "flash_attention",
+    "matmul",
+    "moe_gemm",
+    "rmsnorm",
+]

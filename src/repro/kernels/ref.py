@@ -1,13 +1,15 @@
-"""Pure-jnp oracles for every Pallas kernel in this package.
+"""Pure oracles for every ``axe.program`` kernel in this package.
 
-Each kernel's tests sweep shapes/dtypes and assert_allclose against
+Each program's tests sweep shapes/dtypes and assert_allclose against
 these references (kernels run in interpret mode on CPU; on TPU they
-compile to Mosaic).
+compile to Mosaic). The routing oracle is deliberately loop-based
+numpy — independent of the sort/scatter implementation it checks.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -54,3 +56,73 @@ def moe_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.einsum(
         "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
     ).astype(x.dtype)
+
+
+def collective_matmul_ref(a: jax.Array, b: jax.Array, p: int) -> jax.Array:
+    """Oracle for the K-sharded collective matmul (paper §4.2): the
+    global result both schedules must reconstruct. ``a`` [M, K] /
+    ``b`` [K, N] are the *logical* (unsharded) operands; the device
+    view splits K into ``p`` local slices, computes partial products in
+    f32, and the reduce-scatter sums them — reproduced here as the
+    explicit p-way partial accumulation so the accumulation order (and
+    dtype) matches what the ``psum_scatter``/``ring`` schedules do."""
+    m, k = a.shape
+    assert k % p == 0, (k, p)
+    kl = k // p
+    acc = jnp.zeros((m, b.shape[1]), jnp.float32)
+    for i in range(p):
+        acc = acc + jnp.dot(
+            a[:, i * kl:(i + 1) * kl].astype(jnp.float32),
+            b[i * kl:(i + 1) * kl].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    return acc.astype(a.dtype)
+
+
+def moe_routing_ref(
+    x: np.ndarray,       # [T, d] tokens
+    router: np.ndarray,  # [d, E] router weights
+    *,
+    experts_per_tok: int,
+    capacity: int,
+):
+    """Loop-based oracle for capacity routing (dispatch → combine),
+    independent of the sort/scatter implementation in ``models.moe``.
+
+    Token t's k-th routed copy goes to expert e = top-k(e)(softmax(x_t
+    @ router)); within an expert, slots fill in (token, k) lexicographic
+    order (exactly the stable argsort order the fused dispatch uses) and
+    overflow tokens are dropped. Returns ``(buf, combine)`` where
+    ``buf`` is the dense [E, C, d] dispatch buffer and ``combine(out)``
+    gate-weights and gathers an [E, C, d']-shaped expert output back to
+    [T, d'] (the identity-FFN check: ``combine(buf)`` ≈ the gate-weighted
+    reconstruction of kept tokens)."""
+    x = np.asarray(x, np.float32)
+    router = np.asarray(router, np.float32)
+    t, d = x.shape
+    e = router.shape[1]
+    logits = x @ router
+    z = np.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = z / z.sum(axis=-1, keepdims=True)
+
+    buf = np.zeros((e, capacity, d), np.float32)
+    assignments = []  # (token, expert, slot, gate)
+    fill = np.zeros(e, np.int64)
+    for ti in range(t):
+        order = np.argsort(-probs[ti], kind="stable")[:experts_per_tok]
+        gates = probs[ti][order]
+        gates = gates / gates.sum()
+        for ei, g in zip(order, gates):
+            if fill[ei] < capacity:
+                buf[ei, fill[ei]] = x[ti]
+                assignments.append((ti, int(ei), int(fill[ei]), float(g)))
+                fill[ei] += 1
+
+    def combine(out):
+        out = np.asarray(out, np.float32)
+        y = np.zeros((t, out.shape[-1]), np.float32)
+        for ti, ei, slot, g in assignments:
+            y[ti] += g * out[ei, slot]
+        return y
+
+    return buf, combine

@@ -1,26 +1,88 @@
-"""Fused RMSNorm Pallas kernel.
+"""Fused RMSNorm as an ``axe.program`` stage graph.
 
-Row-blocked: each grid step normalizes a [block_rows, d] tile entirely
-in VMEM (one HBM read + one write — the memory-bound fusion XLA would
-otherwise split into multiple passes at boundaries).
+* ``rmsnorm/rows``      (GRID)  — row-blocked Pallas launch: each grid
+  step normalizes a [block_rows, d] tile entirely in VMEM (one HBM read
+  + one write — the memory-bound fusion XLA would otherwise split).
+  Schedule key ``rmsnorm/rows`` (block brows; variants kernel|xla — the
+  planner picks the unfused XLA composite where interpret-mode Pallas
+  would lose).
+* ``rmsnorm/normalize`` (BLOCK) — the per-tile body, also the
+  functional XLA variant (same jnp math on whole arrays).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.axe.lower import block_lowering
+from repro.axe.program import program
+from repro.core.scopes import Scope
+
+rmsnorm_program = program(
+    "rmsnorm", doc="x * rsqrt(mean(x², -1) + eps) * w, row-blocked"
+)
 
 
-def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+@rmsnorm_program.stage("normalize", scope=Scope.BLOCK,
+                       dispatch=(Scope.BLOCK,))
+def _normalize(ctx, x_ref, w_ref, o_ref=None, *, eps: float = 1e-6):
+    # ``[...]`` reads a VMEM ref inside the kernel and is a no-op view
+    # on a plain array, so the same body serves as the XLA variant
     x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
     var = jnp.mean(x * x, axis=-1, keepdims=True)
-    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)).astype(
-        o_ref.dtype
-    )
+    y = x * jax.lax.rsqrt(var + eps) * w
+    if o_ref is None:
+        return y
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@rmsnorm_program.stage(
+    "rows", scope=Scope.GRID, entry=True,
+    blocks=(("brows", 256),),
+    variants=("kernel", "xla"),
+)
+def _rows(ctx, x, w, *, eps: float = 1e-6):
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    if ctx.impl != "kernel":
+        y = ctx.run("normalize", x.reshape(rows, d), w, eps=eps)
+        return y.astype(x.dtype).reshape(orig_shape)
+    block_rows = min(ctx.block("brows"), rows)
+
+    def make():
+        def launch(x, w):
+            orig_shape = x.shape
+            d = orig_shape[-1]
+            rows = 1
+            for s in orig_shape[:-1]:
+                rows *= s
+            xr = x.reshape(rows, d)
+            # pad rows to a multiple of block_rows
+            pad = (-rows) % block_rows
+            if pad:
+                xr = jnp.pad(xr, ((0, pad), (0, 0)))
+            x_low = block_lowering(xr.shape, (block_rows, d), x.dtype,
+                                   index_map=lambda i: (i, 0), op="rmsnorm.X")
+            w_low = block_lowering((d,), (d,), w.dtype,
+                                   index_map=lambda i: (0,), op="rmsnorm.W")
+            out = ctx.pallas_call(
+                lambda *refs: ctx.run("normalize", *refs, eps=eps),
+                grid=x_low.grid[:1],
+                in_specs=[x_low.spec, w_low.spec],
+                out_specs=x_low.spec,
+                out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+            )(xr, w)
+            if pad:
+                out = out[:rows]
+            return out.reshape(orig_shape)
+
+        return launch
+
+    return ctx.jit((block_rows, eps), make)(x, w)
 
 
 def rmsnorm_pallas(
@@ -31,31 +93,9 @@ def rmsnorm_pallas(
     block_rows: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    orig_shape = x.shape
-    d = orig_shape[-1]
-    rows = 1
-    for s in orig_shape[:-1]:
-        rows *= s
-    xr = x.reshape(rows, d)
-    block_rows = min(block_rows, rows)
-    # pad rows to a multiple of block_rows
-    pad = (-rows) % block_rows
-    if pad:
-        xr = jnp.pad(xr, ((0, pad), (0, 0)))
-    # Axe on-device lowering (unified TilingError path) for the row
-    # blocks; the gamma vector is a single whole-dim block.
-    x_low = block_lowering(xr.shape, (block_rows, d), x.dtype,
-                           index_map=lambda i: (i, 0), op="rmsnorm.X")
-    w_low = block_lowering((d,), (d,), w.dtype,
-                           index_map=lambda i: (0,), op="rmsnorm.W")
-    out = pl.pallas_call(
-        functools.partial(_rmsnorm_kernel, eps=eps),
-        grid=x_low.grid[:1],
-        in_specs=[x_low.spec, w_low.spec],
-        out_specs=x_low.spec,
-        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
-        interpret=interpret,
-    )(xr, w)
-    if pad:
-        out = out[:rows]
-    return out.reshape(orig_shape)
+    """Raw kernel launcher: the ``rmsnorm/rows`` stage pinned to the
+    Pallas variant with an explicit row block."""
+    return rmsnorm_program(
+        x, w, stage="rows", impl="kernel", blocks={"brows": block_rows},
+        eps=eps, interpret=interpret,
+    )

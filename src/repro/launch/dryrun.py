@@ -29,7 +29,9 @@ from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.models.model_zoo import SHAPES, build_model, shape_applicable
 from repro.optim.adamw import AdamW
-from repro.train import sharding as rules
+from repro.axe import lower as axe_lower
+from repro.axe import rules as axe_rules
+from repro.axe.spec import PhysicalSpace
 from repro.train.train_loop import TrainState, make_train_step
 
 
@@ -94,7 +96,8 @@ def lower_cell(
 
     api = build_model(cfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    mesh_shape = rules.mesh_shape_of(mesh)
+    mesh_shape = axe_rules.mesh_shape_of(mesh)
+    space = PhysicalSpace.from_mesh_shape(mesh_shape)
     n_chips = 512 if multi_pod else 256
 
     from repro.train import act_sharding
@@ -110,8 +113,8 @@ def lower_cell(
 
     t0 = time.time()
     params_s = jax.eval_shape(api.init, jax.random.PRNGKey(0))
-    p_pspecs = rules.param_pspecs(params_s, mesh_shape, fsdp=fsdp)
-    p_sh = rules.shardings_of(p_pspecs, mesh)
+    p_specs = axe_rules.param_specs(params_s, space, fsdp=fsdp)
+    p_sh = axe_rules.sharding_tree(p_specs, mesh)
 
     record = {
         "arch": arch, "shape": shape_name,
@@ -136,15 +139,15 @@ def lower_cell(
 
         opt = AdamW(learning_rate=1e-4)
         opt_s = jax.eval_shape(opt.init, params_s)
-        o_pspecs = rules.opt_pspecs(params_s, p_pspecs, mesh_shape, zero1=zero1)
-        o_sh = rules.shardings_of(o_pspecs, mesh)
+        o_specs = axe_rules.opt_specs(p_specs, zero1=zero1)
+        o_sh = axe_rules.sharding_tree(o_specs, mesh)
         scalar_sh = NamedSharding(mesh, P())
         state_s = TrainState(params_s, opt_s, jax.ShapeDtypeStruct((), jnp.int32))
         state_sh = TrainState(p_sh, AdamWState(mu=o_sh, nu=o_sh, count=scalar_sh), scalar_sh)
 
         batch_s = api.train_batch_specs(shape)
-        b_pspecs = rules.batch_pspecs(batch_s, mesh_shape)
-        b_sh = {k: jax.sharding.NamedSharding(mesh, v) for k, v in b_pspecs.items()}
+        b_specs = axe_rules.batch_specs(batch_s, space)
+        b_sh = {k: axe_lower.to_named_sharding(s_, mesh) for k, s_ in b_specs.items()}
 
         step = make_train_step(
             api.loss_fn, opt, microbatches=microbatches,
@@ -160,12 +163,11 @@ def lower_cell(
             lowered = fn.lower(state_s, batch_s)
     elif shape.kind == "prefill":
         cache_s = jax.eval_shape(lambda: api.cache_init(shape.batch, shape.seq))
-        c_pspecs = rules.cache_pspecs(cache_s, mesh_shape)
-        c_sh = rules.shardings_of(c_pspecs, mesh)
+        c_sh = axe_rules.sharding_tree(axe_rules.cache_specs(cache_s, space), mesh)
         batch_s = api.train_batch_specs(shape)
         del batch_s["labels"]
-        b_pspecs = rules.batch_pspecs(batch_s, mesh_shape)
-        b_sh = {k: jax.sharding.NamedSharding(mesh, v) for k, v in b_pspecs.items()}
+        b_specs = axe_rules.batch_specs(batch_s, space)
+        b_sh = {k: axe_lower.to_named_sharding(s_, mesh) for k, s_ in b_specs.items()}
         fn = jax.jit(
             api.prefill,
             in_shardings=(p_sh, b_sh, c_sh),
@@ -176,8 +178,7 @@ def lower_cell(
             lowered = fn.lower(params_s, batch_s, cache_s)
     else:  # decode
         cache_s = jax.eval_shape(lambda: api.cache_init(shape.batch, shape.seq))
-        c_pspecs = rules.cache_pspecs(cache_s, mesh_shape)
-        c_sh = rules.shardings_of(c_pspecs, mesh)
+        c_sh = axe_rules.sharding_tree(axe_rules.cache_specs(cache_s, space), mesh)
         tok_s = api.decode_token_specs(shape)["tokens"]
         pos_s = jax.ShapeDtypeStruct((), jnp.int32)
         fn = jax.jit(

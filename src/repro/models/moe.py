@@ -108,7 +108,7 @@ def moe_apply_expert_parallel(p: Params, x: jax.Array, cfg, mesh) -> jax.Array:
     collective traffic on qwen3-moe train_4k (see EXPERIMENTS §Perf)."""
     from jax.sharding import PartitionSpec as P
 
-    from repro.train.sharding import dp_axes, mesh_shape_of
+    from repro.axe.rules import dp_axes, mesh_shape_of
 
     ms = mesh_shape_of(mesh)
     dp = dp_axes(ms)
@@ -145,7 +145,7 @@ def moe_apply_expert_parallel(p: Params, x: jax.Array, cfg, mesh) -> jax.Array:
 def _ep_eligible(x: jax.Array, cfg, mesh) -> bool:
     if mesh is None:
         return False
-    from repro.train.sharding import dp_axes, mesh_shape_of
+    from repro.axe.rules import dp_axes, mesh_shape_of
 
     ms = mesh_shape_of(mesh)
     if "model" not in ms:

@@ -4,7 +4,7 @@ tracking (continuous-batching-lite) and greedy/temperature sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -14,12 +14,15 @@ import numpy as np
 @dataclasses.dataclass
 class ServeEngine:
     """``schedule_cache`` pins the process-wide schedule cache
-    (``repro.tune``) to a server-local file, so operator dispatches
-    traced inside prefill/decode reuse schedules a prior autotune run
-    measured for this model's shapes instead of re-planning per
-    process. ``force_schedule`` is the serve-time escape hatch — a
-    ``Schedule.parse`` spec (e.g. ``"xla"``) applied to every dispatch
-    while this engine's jitted functions trace.
+    (``repro.tune``) to a server-local file, so ``axe.program`` stage
+    dispatches traced inside prefill/decode reuse schedules a prior
+    autotune run measured for this model's shapes (keyed
+    ``program_name/stage_name``) instead of re-planning per process.
+    ``force_schedule`` is the serve-time escape hatch — a
+    ``Schedule.parse`` spec (e.g. ``"xla"``) applied to every dispatch,
+    or a mapping pinning individual stages (e.g. ``{"matmul/tile":
+    "kernel:bm=128,bn=128,bk=256", "collective_matmul/kshard":
+    "psum_scatter"}``) while this engine's jitted functions trace.
 
     ``mesh`` opts into sharded serving: param and KV-cache placement
     comes from the AxeSpec rule engine (``repro.axe.rules``) lowered
@@ -34,7 +37,7 @@ class ServeEngine:
     temperature: float = 0.0
     rng_seed: int = 0
     schedule_cache: Optional[str] = None
-    force_schedule: Optional[str] = None
+    force_schedule: Optional[Union[str, Mapping[str, str]]] = None
     mesh: Optional[Any] = None       # jax.sharding.Mesh
 
     def __post_init__(self):

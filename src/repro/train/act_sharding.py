@@ -19,7 +19,7 @@ from typing import Dict, Iterator, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.train.sharding import dp_axes, mesh_shape_of
+from repro.axe.rules import dp_axes, mesh_shape_of
 
 _CTX: Dict[str, object] = {"mesh": None, "mesh_shape": None}
 

@@ -18,7 +18,9 @@ from typing import Any, Tuple
 import jax
 from jax.sharding import Mesh
 
-from repro.train import sharding as shard_rules
+from repro.axe.spec import PhysicalSpace
+
+from repro.axe import rules as axe_rules
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,11 +62,11 @@ def reshard_state(
     zero1: bool = True,
 ) -> Any:
     """Re-derive shardings (Axe rules) on the new mesh and device_put."""
-    mesh_shape = shard_rules.mesh_shape_of(new_mesh)
-    p_specs = shard_rules.param_pspecs(params_template, mesh_shape)
-    p_sh = shard_rules.shardings_of(p_specs, new_mesh)
-    o_specs = shard_rules.opt_pspecs(params_template, p_specs, mesh_shape, zero1=zero1)
-    o_sh = shard_rules.shardings_of(o_specs, new_mesh)
+    space = PhysicalSpace.from_mesh_shape(axe_rules.mesh_shape_of(new_mesh))
+    p_specs = axe_rules.param_specs(params_template, space)
+    p_sh = axe_rules.sharding_tree(p_specs, new_mesh)
+    o_specs = axe_rules.opt_specs(p_specs, zero1=zero1)
+    o_sh = axe_rules.sharding_tree(o_specs, new_mesh)
 
     new_params = jax.device_put(state.params, p_sh)
     new_mu = jax.device_put(state.opt_state.mu, o_sh)

@@ -33,6 +33,7 @@ from jax.sharding import Mesh
 
 from repro.axe import lower as axe_lower
 from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
+from repro.core.scopes import Scope, scope
 
 
 def pipeline_apply(
@@ -54,6 +55,13 @@ def pipeline_apply(
     total_steps = n_micro + n_stages - 1
 
     def body(xl_params, mb):
+        # the shard_map body is per-device code: enter DEVICE scope so
+        # any axe.program dispatched inside stage_fn picks its
+        # device-scope stage (e.g. matmul -> the Pallas tile stage)
+        with scope(Scope.DEVICE):
+            return _pipeline_body(xl_params, mb)
+
+    def _pipeline_body(xl_params, mb):
         params_local = jax.tree.map(lambda p: p[0], xl_params)  # drop stage dim
         s = jax.lax.axis_index(axis_name)
         fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]

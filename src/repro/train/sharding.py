@@ -1,110 +1,97 @@
-"""Deprecated shims: PartitionSpec views of the AxeSpec sharding rules.
+"""Deprecated re-exports: PartitionSpec views of the AxeSpec rules.
 
-The hand-written PartitionSpec rule tables that used to live here moved
-to ``repro.axe.rules``, where they are expressed as AxeSpec placement
-preferences — the Axe layout is the source of truth and the
-PartitionSpec is *derived* through the inter-device lowering adapter
-(``repro.axe.lower.to_pspec``). These wrappers keep the historical
-signatures (``param_pspecs`` / ``batch_pspecs`` / ``cache_pspecs`` /
-``opt_pspecs`` and the per-spec helpers) for existing call sites; new
-code should consume the AxeSpec trees from ``repro.axe.rules`` directly
-and lower only at the jit boundary. See docs/axespec.md (migration
-notes).
+The rule tables live in ``repro.axe.rules`` (AxeSpec placement
+preferences; PartitionSpecs are *derived* through the inter-device
+lowering adapter ``repro.axe.lower.to_pspec``). Nothing inside this
+repo imports these wrappers anymore — each one is a single deprecated
+delegate kept for external callers, and every call emits a
+``DeprecationWarning``. New code consumes ``repro.axe.rules`` directly
+and lowers only at the jit boundary. See docs/axespec.md (migration
+notes) and docs/kernel-dsl.md.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Mapping, Sequence, Tuple
+from typing import Any, Dict, Mapping
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro._deprecation import warn_deprecated
 from repro.axe import lower as _lower
 from repro.axe import rules as _rules
 from repro.axe.spec import PhysicalSpace
 
 
-def mesh_shape_of(mesh: Mesh) -> Dict[str, int]:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+def _deprecated(old: str, new: str) -> None:
+    warn_deprecated(f"repro.train.sharding.{old}", new, doc="docs/axespec.md", stacklevel=4)
 
 
 def _space(mesh_shape: Mapping[str, int]) -> PhysicalSpace:
     return PhysicalSpace.from_mesh_shape(mesh_shape)
 
 
-def dp_axes(mesh_shape: Mapping[str, int]) -> Tuple[str, ...]:
-    return _rules.dp_axes(_space(mesh_shape))
+def mesh_shape_of(mesh: Mesh) -> Dict[str, int]:
+    _deprecated("mesh_shape_of", "repro.axe.rules.mesh_shape_of")
+    return _rules.mesh_shape_of(mesh)
 
 
-def _admissible(
-    shape: Sequence[int], pspec: Sequence, mesh_shape: Mapping[str, int]
-) -> bool:
-    """Deprecated shim: Axe admissibility of one placement."""
-    return _rules.spec_of_entries(shape, tuple(pspec), _space(mesh_shape)) is not None
+def dp_axes(mesh_shape: Mapping[str, int]):
+    _deprecated("dp_axes", "repro.axe.rules.dp_axes")
+    return _rules.dp_axes(mesh_shape)
 
 
-def pick_pspec(
-    shape: Sequence[int],
-    preferences: Sequence[Sequence],
-    mesh_shape: Mapping[str, int],
-) -> P:
-    """Deprecated shim over ``repro.axe.rules.pick_spec``."""
+def pick_pspec(shape, preferences, mesh_shape: Mapping[str, int]) -> P:
+    _deprecated("pick_pspec", "repro.axe.rules.pick_spec")
     return _lower.to_pspec(_rules.pick_spec(shape, preferences, _space(mesh_shape)))
 
 
-def fsdp_extend(
-    pspec: P, shape: Sequence[int], mesh_shape: Mapping[str, int], axes=("data",)
-) -> P:
-    """Deprecated shim over ``repro.axe.rules.fsdp_extend``."""
-    space = _space(mesh_shape)
-    spec = _rules.spec_of_entries(shape, tuple(pspec), space)
-    if spec is None:
-        return pspec
-    return _lower.to_pspec(_rules.fsdp_extend(spec, axes=axes))
+def fsdp_extend(pspec: P, shape, mesh_shape: Mapping[str, int], axes=("data",)) -> P:
+    _deprecated("fsdp_extend", "repro.axe.rules.fsdp_extend")
+    spec = _rules.spec_of_entries(shape, tuple(pspec), _space(mesh_shape))
+    return pspec if spec is None else _lower.to_pspec(_rules.fsdp_extend(spec, axes=axes))
 
 
-def zero1_pspec(pspec: P, shape: Sequence[int], mesh_shape: Mapping[str, int]) -> P:
-    """Deprecated shim over ``repro.axe.rules.zero1_extend``."""
-    space = _space(mesh_shape)
-    spec = _rules.spec_of_entries(shape, tuple(pspec), space)
-    if spec is None:
-        return pspec
-    return _lower.to_pspec(_rules.zero1_extend(spec))
+def zero1_pspec(pspec: P, shape, mesh_shape: Mapping[str, int]) -> P:
+    _deprecated("zero1_pspec", "repro.axe.rules.zero1_extend")
+    spec = _rules.spec_of_entries(shape, tuple(pspec), _space(mesh_shape))
+    return pspec if spec is None else _lower.to_pspec(_rules.zero1_extend(spec))
 
 
-def param_pspecs(
-    params: Any, mesh_shape: Mapping[str, int], *, fsdp: bool = False, fsdp_axes=("data",)
-) -> Any:
-    """Pytree of PartitionSpecs for a model param tree (deprecated shim
-    over ``repro.axe.rules.param_specs`` + the inter-device lowering)."""
-    specs = _rules.param_specs(
-        params, _space(mesh_shape), fsdp=fsdp, fsdp_axes=fsdp_axes
+def param_pspecs(params: Any, mesh_shape: Mapping[str, int], *,
+                 fsdp: bool = False, fsdp_axes=("data",)) -> Any:
+    _deprecated("param_pspecs", "repro.axe.rules.param_specs")
+    return _rules.pspec_tree(
+        _rules.param_specs(params, _space(mesh_shape), fsdp=fsdp, fsdp_axes=fsdp_axes)
     )
-    return _rules.pspec_tree(specs)
 
 
-def opt_pspecs(
-    params: Any, p_pspecs: Any, mesh_shape: Mapping[str, int], *, zero1: bool = True
-) -> Any:
+def opt_pspecs(params: Any, p_pspecs: Any, mesh_shape: Mapping[str, int], *,
+               zero1: bool = True) -> Any:
+    _deprecated("opt_pspecs", "repro.axe.rules.opt_specs")
     if not zero1:
         return p_pspecs
-    return jax.tree.map(
-        lambda p, ps: zero1_pspec(ps, p.shape, mesh_shape),
-        params,
-        p_pspecs,
-    )
+    space = _space(mesh_shape)
+
+    def z1(p, ps):
+        spec = _rules.spec_of_entries(p.shape, tuple(ps), space)
+        return ps if spec is None else _lower.to_pspec(_rules.zero1_extend(spec))
+
+    return jax.tree.map(z1, params, p_pspecs)
 
 
 def batch_pspecs(batch: Mapping[str, Any], mesh_shape: Mapping[str, int]) -> Dict[str, P]:
+    _deprecated("batch_pspecs", "repro.axe.rules.batch_specs")
     specs = _rules.batch_specs(batch, _space(mesh_shape))
     return {k: _lower.to_pspec(s) for k, s in specs.items()}
 
 
 def cache_pspecs(cache: Any, mesh_shape: Mapping[str, int]) -> Any:
-    specs = _rules.cache_specs(cache, _space(mesh_shape))
-    return _rules.pspec_tree(specs)
+    _deprecated("cache_pspecs", "repro.axe.rules.cache_specs")
+    return _rules.pspec_tree(_rules.cache_specs(cache, _space(mesh_shape)))
 
 
 def shardings_of(pspecs: Any, mesh: Mesh) -> Any:
+    _deprecated("shardings_of", "repro.axe.rules.sharding_tree")
     return jax.tree.map(
         lambda ps: NamedSharding(mesh, ps),
         pspecs,

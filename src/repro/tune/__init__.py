@@ -25,17 +25,19 @@ from __future__ import annotations
 import contextlib
 import os
 import threading
-from typing import Iterator, Optional, Sequence, Union
+from typing import Iterator, Mapping, Optional, Sequence, Union
 
 import jax
 
 from repro.tune import planner
+from repro.tune import schedule as _schedule_mod
 from repro.tune.autotuner import (
     TuneReport,
     autotune_flash_attention,
     autotune_matmul,
     autotune_mha_blocked,
     autotune_moe_gemm,
+    autotune_program,
     measure,
 )
 from repro.tune.cache import ScheduleCache, default_cache, default_cache_path, use_cache
@@ -43,6 +45,7 @@ from repro.tune.schedule import (
     InvalidImplError,
     Schedule,
     layout_signature,
+    register_stage_op,
     schedule_key,
 )
 
@@ -63,9 +66,14 @@ _force = threading.local()
 
 
 @contextlib.contextmanager
-def force_schedule(spec: Union[str, Schedule, None]) -> Iterator[None]:
+def force_schedule(
+    spec: Union[str, Schedule, Mapping[str, Union[str, Schedule]], None],
+) -> Iterator[None]:
     """Pin every ``get_schedule`` call in this thread to ``spec``
-    (string form per ``Schedule.parse``). ``None`` re-enables planning
+    (string form per ``Schedule.parse``). A mapping pins per op /
+    program-stage key — e.g. ``{"matmul/tile": "kernel:bm=128,bn=128,
+    bk=256", "collective_matmul/kshard": "psum_scatter"}`` — and ops
+    absent from it resolve normally. ``None`` re-enables planning
     inside an outer forced region."""
     prev = getattr(_force, "spec", None)
     _force.spec = spec
@@ -75,11 +83,45 @@ def force_schedule(spec: Union[str, Schedule, None]) -> Iterator[None]:
         _force.spec = prev
 
 
-def _forced_spec() -> Union[str, Schedule, None]:
+def _parse_forced_env(raw: str) -> Union[str, dict, None]:
+    """``REPRO_FORCE_SCHEDULE`` syntax: a bare spec applied to every
+    dispatch (``"xla"``, ``"kernel:bm=128,bn=128,bk=256"``) or a
+    ``;``-separated list of ``op=spec`` pairs where ``op`` is a
+    ``program/stage`` key (``"matmul/tile=xla;rmsnorm/rows=kernel:
+    brows=512"``). An entry is op-qualified iff the text before its
+    first ``=`` contains a ``/`` and no ``:``. Mixing is allowed: a
+    bare segment becomes the fallback (``"*"``) for ops without their
+    own pin."""
+    entries = [e.strip() for e in raw.split(";") if e.strip()]
+    scoped: dict = {}
+    for e in entries:
+        head = e.split("=", 1)[0]
+        if "/" in head and ":" not in head and "=" in e:
+            op, _, spec = e.partition("=")
+            scoped[op.strip()] = spec.strip()
+        else:
+            scoped["*"] = e
+    if list(scoped) == ["*"]:
+        return scoped["*"]
+    return scoped or None
+
+
+def _forced_spec() -> Union[str, Schedule, Mapping, None]:
     ctx = getattr(_force, "spec", None)
     if ctx is not None:
         return ctx
-    return os.environ.get(FORCE_ENV) or None
+    env = os.environ.get(FORCE_ENV)
+    return _parse_forced_env(env) if env else None
+
+
+def _default_schedule(op: str) -> Schedule:
+    """The pre-planner default for ``op``: the legacy table for bare op
+    names, the stage registry (populated by ``axe.program``) for
+    ``program/stage`` keys."""
+    d = DEFAULT_SCHEDULES.get(op) or _schedule_mod.default_schedule(op)
+    if d is None:
+        raise KeyError(f"no default schedule registered for op {op!r}")
+    return d
 
 
 def get_schedule(
@@ -101,6 +143,18 @@ def get_schedule(
     path rather than crashing the trace. A *malformed* spec still
     raises."""
     forced = _forced_spec()
+    scoped = False  # spec addressed to THIS op by name (mapping key)
+    if isinstance(forced, Mapping):
+        entry = forced.get(op)
+        scoped = entry is not None
+        # "*" is the global fallback for mixed scoped+bare specs; it
+        # behaves like a bare spec (invalid impls fall through)
+        forced = entry if entry is not None else forced.get("*")
+        if isinstance(forced, Schedule) and scoped and forced.op != op:
+            raise ValueError(
+                f"forced schedule mapping entry for {op!r} carries op "
+                f"{forced.op!r}"
+            )
     if forced is not None:
         if isinstance(forced, Schedule):
             if forced.op == op:
@@ -109,9 +163,12 @@ def get_schedule(
             try:
                 return Schedule.parse(forced, op=op)
             except InvalidImplError:
-                pass  # spec targets a different op: resolve normally
+                if scoped:
+                    raise  # an explicitly targeted pin must never
+                    # silently fail to apply
+                pass  # global spec reaching a different op: resolve normally
     if os.environ.get(DISABLE_ENV, "") not in ("", "0"):
-        return DEFAULT_SCHEDULES[op]
+        return _default_schedule(op)
 
     backend = backend or jax.default_backend()
     cache = cache if cache is not None else default_cache()
@@ -132,7 +189,7 @@ def get_schedule(
 
     sched = planner.best_schedule(op, shapes=shapes, dtypes=dtypes, backend=backend, impl=impl)
     if sched is None:
-        sched = DEFAULT_SCHEDULES[op]
+        sched = _default_schedule(op)
     cache.put(key, sched, source="planned", persist=False)
     return sched
 
@@ -149,7 +206,9 @@ __all__ = [
     "autotune_matmul",
     "autotune_mha_blocked",
     "autotune_moe_gemm",
+    "autotune_program",
     "default_cache",
+    "register_stage_op",
     "default_cache_path",
     "force_schedule",
     "get_schedule",

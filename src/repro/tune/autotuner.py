@@ -20,11 +20,10 @@ import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.tune import planner
 from repro.tune.cache import ScheduleCache, default_cache
-from repro.tune.schedule import Schedule, schedule_key
+from repro.tune.schedule import Schedule, layout_signature, schedule_key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,7 +112,59 @@ def _tune(
 
 
 # ---------------------------------------------------------------------------
-# op-specific front ends
+# the one program path: tune any tunable stage of an axe.program
+# ---------------------------------------------------------------------------
+
+
+def autotune_program(
+    prog,
+    *args,
+    stage: Optional[str] = None,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 4,
+    iters: int = 3,
+    **kw,
+) -> TuneReport:
+    """Measure the planner's top candidates for one tunable stage of an
+    ``axe.program`` (default: its entry stage) and persist the winner
+    under the ``program_name/stage_name`` key — the same key the
+    program's dispatch resolves, so the next call picks the measurement
+    up. ``kw`` is forwarded to the program on every candidate run (so
+    op flags like ``causal=True`` are both measured and keyed)."""
+    stage_name = stage or prog.entry_stage
+    st = prog.stages[stage_name]
+    if not st.tunable:
+        raise ValueError(f"stage {prog.stage_key(stage_name)} has no schedule surface")
+    from repro.core.scopes import Scope
+
+    if st.scope == Scope.MESH:
+        raise ValueError(
+            f"stage {prog.stage_key(stage_name)} runs at MESH scope: its "
+            f"variants issue collectives and cannot be measured standalone "
+            f"— MESH stages are planner-ranked (roofline collective model) "
+            f"at dispatch, or pinned via force_schedule/schedules="
+        )
+    op = prog.stage_key(stage_name)
+    arg_specs = tuple(kw.get("arg_specs") or ())
+    parts = st.schedule_key_parts(args, kw, arg_specs)
+    layout_sig_ = layout_signature(*arg_specs, tag=parts.get("tag"))
+    flops = float(st.flops_fn(args, kw)) if st.flops_fn is not None else 0.0
+
+    def make(s: Schedule) -> Callable:
+        return jax.jit(
+            lambda *arrays: prog(*arrays, stage=stage_name,
+                                 schedules={stage_name: s}, **kw)
+        )
+
+    return _tune(
+        op, parts["shapes"], parts["dtypes"], make, args,
+        flops=flops, layout_sig=layout_sig_,
+        cache=cache, top_k=top_k, iters=iters,
+    )
+
+
+# ---------------------------------------------------------------------------
+# op-specific front ends (thin wrappers over the program path)
 # ---------------------------------------------------------------------------
 
 
@@ -125,21 +176,11 @@ def autotune_matmul(
     top_k: int = 4,
     iters: int = 3,
 ) -> TuneReport:
-    """Tune the 2-D matmul dispatch for these concrete operands."""
+    """Tune the matmul program's ``tile`` stage for these operands."""
+    from repro.kernels import programs
 
-    def make(s: Schedule) -> Callable:
-        if s.impl == "xla":
-            return jax.jit(lambda a, b: jnp.dot(a, b, preferred_element_type=jnp.float32)
-                           .astype(a.dtype))
-        from repro.kernels import ops as kops
-
-        bm, bn, bk = s.block("bm"), s.block("bn"), s.block("bk")
-        return lambda a, b: kops.matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
-
-    return _tune(
-        "matmul", (a.shape, b.shape), (a.dtype, b.dtype), make, (a, b),
-        flops=2.0 * a.shape[0] * a.shape[1] * b.shape[1],
-        cache=cache, top_k=top_k, iters=iters,
+    return autotune_program(
+        programs.matmul, a, b, stage="tile", cache=cache, top_k=top_k, iters=iters,
     )
 
 
@@ -151,21 +192,11 @@ def autotune_flash_attention(
     top_k: int = 3,
     iters: int = 2,
 ) -> TuneReport:
-    """Tune the flash-attention kernel's (block_q, block_kv)."""
-    b, h, sq, d = q.shape
-    skv = k.shape[2]
+    """Tune the flash-attention program's (block_q, block_kv)."""
+    from repro.kernels import programs
 
-    def make(s: Schedule) -> Callable:
-        from repro.kernels import ops as kops
-
-        bq, bkv = s.block("bq"), s.block("bkv")
-        return lambda q, k, v: kops.flash_attention(
-            q, k, v, causal=causal, block_q=bq, block_kv=bkv)
-
-    return _tune(
-        "flash_attention", (q.shape, k.shape), (q.dtype, k.dtype), make, (q, k, v),
-        flops=4.0 * b * h * sq * skv * d,
-        layout_sig="dense" if not causal else "causal",
+    return autotune_program(
+        programs.flash_attention, q, k, v, stage="attend", causal=causal,
         cache=cache, top_k=top_k, iters=iters,
     )
 
@@ -206,20 +237,10 @@ def autotune_moe_gemm(
     top_k: int = 3,
     iters: int = 2,
 ) -> TuneReport:
-    """Tune the grouped expert GEMM's (block_c, block_f, block_d)."""
-    e, c, d = x.shape
-    f = w.shape[2]
+    """Tune the moe_gemm program's (block_c, block_f, block_d)."""
+    from repro.kernels import programs
 
-    def make(s: Schedule) -> Callable:
-        if s.impl == "xla":
-            return jax.jit(lambda x, w: jnp.einsum("ecd,edf->ecf", x, w))
-        from repro.kernels import ops as kops
-
-        bc, bf, bd = s.block("bc"), s.block("bf"), s.block("bd")
-        return lambda x, w: kops.moe_gemm(x, w, block_c=bc, block_f=bf, block_d=bd)
-
-    return _tune(
-        "moe_gemm", (x.shape, w.shape), (x.dtype, w.dtype), make, (x, w),
-        flops=2.0 * e * c * d * f,
+    return autotune_program(
+        programs.moe_gemm, x, w, stage="expert_gemm",
         cache=cache, top_k=top_k, iters=iters,
     )

@@ -74,6 +74,7 @@ def plan_matmul(
     *,
     backend: Optional[str] = None,
     use_hlo: bool = False,
+    op_name: str = "matmul",
 ) -> List[Candidate]:
     """Candidates for ``C[M,N] = A[M,K] @ B[K,N]``.
 
@@ -107,7 +108,7 @@ def plan_matmul(
             xla_bytes = c.bytes or xla_bytes
         except Exception:
             pass
-    out.append(_mk(Schedule("matmul", "xla"), flops, xla_bytes, backend=backend))
+    out.append(_mk(Schedule(op_name, "xla"), flops, xla_bytes, backend=backend))
 
     # Pallas kernel candidates: Axe-validated (M,N) tilings × K blocks
     penalty = _kernel_penalty(backend)
@@ -124,7 +125,7 @@ def plan_matmul(
                 derive_tiling((k, n), (bk, bn), dtype)
             except Exception:
                 continue
-            sched = Schedule("matmul", "kernel",
+            sched = Schedule(op_name, "kernel",
                              (("bm", bm), ("bn", bn), ("bk", bk)))
             cp = penalty if d.mxu_aligned else penalty * 4.0
             out.append(_mk(sched, flops, gemm_bytes(bm, bn, bk),
@@ -144,6 +145,7 @@ def plan_flash_attention(
     dtype=jnp.float32,
     *,
     backend: Optional[str] = None,
+    op_name: str = "flash_attention",
 ) -> List[Candidate]:
     """Candidates for the Pallas flash-attention kernel (§4.3 workload).
 
@@ -173,7 +175,7 @@ def plan_flash_attention(
                 continue
             kv_rereads = max(1, sq // bq)
             mem = float(b * h * (2 * sq * d + 2 * skv * d * kv_rereads) * item)
-            sched = Schedule("flash_attention", "kernel",
+            sched = Schedule(op_name, "kernel",
                              (("bq", bq), ("bkv", bkv)))
             out.append(_mk(sched, flops, mem, backend=backend, compute_penalty=penalty))
 
@@ -195,6 +197,7 @@ def plan_mha_blocked(
     dtype=jnp.float32,
     *,
     backend: Optional[str] = None,
+    op_name: str = "mha_blocked",
 ) -> List[Candidate]:
     """Chunk-size candidates for the blocked online-softmax attention
     (``models.attention._gqa_blocked`` — same math as the Pallas kernel,
@@ -218,7 +221,7 @@ def plan_mha_blocked(
         base, terms = roofline.schedule_time(flops=flops, mem_bytes=mem, backend=backend)
         cost = base + (s // chunk) * MHA_CHUNK_OVERHEAD_S
         out.append(Candidate(
-            Schedule("mha_blocked", "xla", (("chunk", chunk),)),
+            Schedule(op_name, "xla", (("chunk", chunk),)),
             cost, tuple(sorted(terms.items())),
         ))
     out.sort(key=lambda c: (c.cost_s, c.schedule.describe()))
@@ -235,6 +238,7 @@ def plan_moe_gemm(
     dtype=jnp.float32,
     *,
     backend: Optional[str] = None,
+    op_name: str = "moe_gemm",
 ) -> List[Candidate]:
     """Candidates for the per-expert batched GEMM [E,C,d]·[E,d,f]."""
     backend = backend or _backend()
@@ -243,7 +247,7 @@ def plan_moe_gemm(
     penalty = _kernel_penalty(backend)
 
     out: List[Candidate] = [
-        _mk(Schedule("moe_gemm", "xla"),
+        _mk(Schedule(op_name, "xla"),
             flops, float(e * (c * d + d * f + c * f) * item), backend=backend)
     ]
     for td in candidate_tilings((c, f), dtype, mxu=True):
@@ -262,7 +266,7 @@ def plan_moe_gemm(
             w_reads = d * f * max(1, c // bc)
             mem = float(e * (x_reads + w_reads + c * f) * item)
             cp = penalty if td.mxu_aligned else penalty * 4.0
-            sched = Schedule("moe_gemm", "kernel",
+            sched = Schedule(op_name, "kernel",
                              (("bc", bc), ("bf", bf), ("bd", bd)))
             out.append(_mk(sched, flops, mem, backend=backend, compute_penalty=cp))
 
@@ -280,6 +284,7 @@ def plan_collective_matmul(
     dtype=jnp.float32,
     *,
     backend: Optional[str] = None,
+    op_name: str = "collective_matmul",
 ) -> List[Candidate]:
     """Rank the two §4.2 schedules for the K-sharded GEMM over ``p``
     devices: the baseline (full local GEMM, then reduce-scatter) pays
@@ -300,7 +305,7 @@ def plan_collective_matmul(
     # unfused: compute + communicate, serialized
     seq = base_terms["compute"] + base_terms["memory"] + comm_terms["collective"]
     out.append(Candidate(
-        Schedule("collective_matmul", "psum_scatter"), seq,
+        Schedule(op_name, "psum_scatter"), seq,
         tuple(sorted({**base_terms, "collective": comm_terms["collective"]}.items())),
     ))
     if p > 1 and m % p == 0:
@@ -309,8 +314,53 @@ def plan_collective_matmul(
         ring = max(base_terms["compute"] + base_terms["memory"],
                    comm_terms["collective"]) + chunk_compute
         out.append(Candidate(
-            Schedule("collective_matmul", "ring"), ring,
+            Schedule(op_name, "ring"), ring,
             tuple(sorted({**base_terms, "collective": comm_terms["collective"]}.items())),
+        ))
+    out.sort(key=lambda c: (c.cost_s, c.schedule.describe()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm: row-block candidates (memory-bound fusion)
+# ---------------------------------------------------------------------------
+
+
+def plan_rmsnorm(
+    rows: int, d: int,
+    dtype=jnp.float32,
+    *,
+    backend: Optional[str] = None,
+    op_name: str = "rmsnorm",
+) -> List[Candidate]:
+    """Candidates for the fused row-blocked RMSNorm. The op is
+    memory-bound (one read + one write of x); candidates differ only in
+    grid-dispatch overhead, so larger row blocks rank first. Rows are
+    padded to the block by the kernel, so any VREG-aligned block is
+    admissible — validation only checks the (block, d) tile itself."""
+    backend = backend or _backend()
+    item = _itemsize(dtype)
+    flops = 4.0 * rows * d
+    mem = float((2 * rows * d + d) * item)
+    penalty = _kernel_penalty(backend)
+
+    out: List[Candidate] = [
+        _mk(Schedule(op_name, "xla"), flops, mem, backend=backend)
+    ]
+    seen = set()
+    for br in (1024, 512, 256, 128, 64):
+        br = min(br, rows)
+        if br <= 0 or br in seen:
+            continue
+        seen.add(br)
+        padded = -(-rows // br) * br
+        try:
+            derive_tiling((padded, d), (br, d), dtype)
+        except Exception:
+            continue
+        out.append(_mk(
+            Schedule(op_name, "kernel", (("brows", br),)),
+            flops, mem, backend=backend, compute_penalty=penalty,
         ))
     out.sort(key=lambda c: (c.cost_s, c.schedule.describe()))
     return out
@@ -333,30 +383,56 @@ def plan(
 ) -> List[Candidate]:
     """Enumerate + rank schedules for ``op`` on operands of ``shapes``.
 
+    ``op`` is a legacy bare name (``"matmul"``) or an ``axe.program``
+    stage key (``"matmul/tile"``): the part before the ``/`` selects
+    the planning family, and every emitted ``Schedule`` carries the
+    full key, so the one planner covers both in-kernel block choice and
+    cross-device schedule choice for program stages.
+
     ``impl`` filters the candidate list (e.g. ``"kernel"`` when the
     caller has already committed to a Pallas launch and only needs block
     sizes). Raises ValueError for unknown ops.
     """
+    base = op.split("/", 1)[0]
     dtype = jnp.dtype(dtypes[0]) if dtypes else jnp.float32
-    if op == "matmul":
+    if base == "matmul":
         (m, k), (_k2, n) = shapes[0], shapes[1]
-        cands = plan_matmul(m, k, n, dtype, backend=backend, use_hlo=use_hlo)
-    elif op == "flash_attention":
+        cands = plan_matmul(m, k, n, dtype, backend=backend, use_hlo=use_hlo,
+                            op_name=op)
+    elif base == "flash_attention":
         b, h, sq, d = shapes[0]
         skv = shapes[1][2]
-        cands = plan_flash_attention(b, h, sq, skv, d, dtype, backend=backend)
-    elif op == "mha_blocked":
+        cands = plan_flash_attention(b, h, sq, skv, d, dtype, backend=backend,
+                                     op_name=op)
+    elif base == "mha_blocked":
         b, s, h, d_ = shapes[0]
-        cands = plan_mha_blocked(b, s, h, d_, dtype, backend=backend)
-    elif op == "moe_gemm":
+        cands = plan_mha_blocked(b, s, h, d_, dtype, backend=backend, op_name=op)
+    elif base == "moe_gemm":
         (e, c, d_), (_e2, _d2, f) = shapes[0], shapes[1]
-        cands = plan_moe_gemm(e, c, d_, f, dtype, backend=backend)
-    elif op == "collective_matmul":
+        cands = plan_moe_gemm(e, c, d_, f, dtype, backend=backend, op_name=op)
+    elif base == "rmsnorm":
+        x_shape = shapes[0]
+        rows = 1
+        for s_ in x_shape[:-1]:
+            rows *= int(s_)
+        cands = plan_rmsnorm(rows, int(x_shape[-1]), dtype, backend=backend,
+                             op_name=op)
+    elif base == "collective_matmul":
         (m, k_local), (_kl, n) = shapes[0], shapes[1]
         p = shapes[2][0] if len(shapes) > 2 else 1
-        cands = plan_collective_matmul(m, k_local, n, p, dtype, backend=backend)
+        cands = plan_collective_matmul(m, k_local, n, p, dtype, backend=backend,
+                                       op_name=op)
     else:
-        raise ValueError(f"planner does not know op {op!r}")
+        # a stage of a user-defined program: no planning family yet, but
+        # its declared default (registered at stage declaration) is a
+        # valid single-candidate plan — dispatch, forcing, caching, and
+        # autotune measurement all work; ranking needs a plan_* family
+        from repro.tune.schedule import STAGE_DEFAULTS
+
+        default = STAGE_DEFAULTS.get(op)
+        if default is None:
+            raise ValueError(f"planner does not know op {op!r}")
+        cands = [Candidate(default, 0.0, ())]
     if impl is not None:
         cands = [c for c in cands if c.schedule.impl == impl]
     return cands[:top_k] if top_k else cands

@@ -11,7 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
-#: implementations a schedule may name, per op
+#: implementations a schedule may name, per op (legacy bare-op names;
+#: ``axe.program`` stages register their ``program/stage`` keys below)
 IMPLS = {
     "matmul": ("kernel", "xla"),
     "flash_attention": ("kernel",),
@@ -19,6 +20,45 @@ IMPLS = {
     "mha_blocked": ("xla",),
     "collective_matmul": ("ring", "psum_scatter"),
 }
+
+#: ``program_name/stage_name`` → allowed impls, populated by
+#: ``repro.axe.program`` when a tunable stage is registered. Kept
+#: separate from IMPLS so the legacy table stays read-only.
+STAGE_IMPLS: Dict[str, Tuple[str, ...]] = {}
+
+#: ``program_name/stage_name`` → the stage's declared default schedule
+#: (first variant + declared block defaults) — what ``get_schedule``
+#: returns under ``REPRO_TUNE_DISABLE=1`` and as the last resort.
+STAGE_DEFAULTS: Dict[str, "Schedule"] = {}
+
+
+def allowed_impls(op: str) -> Optional[Tuple[str, ...]]:
+    """Valid impls for ``op`` (legacy name or program/stage key); None
+    when the op is unknown (validation is skipped for unknown ops so
+    cache files survive renames)."""
+    return IMPLS.get(op) or STAGE_IMPLS.get(op)
+
+
+def register_stage_op(
+    op: str,
+    impls: Sequence[str],
+    default_blocks: Sequence[Tuple[str, int]] = (),
+) -> None:
+    """Register a tunable ``program/stage`` schedule key: its impl
+    variants and its default schedule. Called by ``repro.axe.program``
+    at stage-declaration time; idempotent."""
+    impls = tuple(impls)
+    if not impls:
+        raise ValueError(f"stage op {op!r} registered with no impls")
+    STAGE_IMPLS[op] = impls
+    STAGE_DEFAULTS[op] = Schedule(op, impls[0], tuple(default_blocks))
+
+
+def default_schedule(op: str) -> Optional["Schedule"]:
+    """The declared default for ``op`` — stage registry for program
+    keys, None for unregistered ops (legacy defaults live in
+    ``repro.tune.DEFAULT_SCHEDULES``)."""
+    return STAGE_DEFAULTS.get(op)
 
 
 class InvalidImplError(ValueError):
@@ -42,7 +82,7 @@ class Schedule:
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "blocks", tuple(sorted(self.blocks)))
-        allowed = IMPLS.get(self.op)
+        allowed = allowed_impls(self.op)
         if allowed is not None and self.impl not in allowed:
             raise InvalidImplError(
                 f"impl {self.impl!r} invalid for op {self.op!r} (allowed {allowed})")

@@ -431,7 +431,8 @@ def test_sharding_shims_lower_from_axespec():
         }
     }
     specs = rules.param_specs(params, space)
-    pspecs = shim.param_pspecs(params, mesh_shape)
+    with pytest.warns(DeprecationWarning, match="param_pspecs is deprecated"):
+        pspecs = shim.param_pspecs(params, mesh_shape)
     import jax
 
     flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, AxeSpec))

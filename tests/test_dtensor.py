@@ -11,11 +11,10 @@ from repro.core import (
     DTensorSpec,
     It,
     Layout,
-    layout_of_pspec,
     layouts_equal,
-    pspec_of_layout,
     scope,
 )
+from repro.axe.lower import layout_of_pspec, pspec_of_layout
 from repro.core import collective as coll
 from repro.core.blockspec import TilingError, derive_blockspec, derive_tiling, pick_tile, vreg_atom
 from repro.core.scopes import Scope, current_scope

@@ -1,10 +1,11 @@
-"""Per-kernel correctness sweeps: Pallas (interpret mode) vs jnp oracle."""
+"""Per-kernel correctness sweeps: the axe.program Pallas path
+(interpret mode) vs the jnp oracles."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import programs, ref
 
 
 def _rand(key, shape, dtype):
@@ -34,7 +35,8 @@ def _tol(dtype):
 def test_matmul_matches_ref(dtype, m, k, n, bm, bn, bk):
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     a, b = _rand(k1, (m, k), dtype), _rand(k2, (k, n), dtype)
-    got = ops.matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
+    got = programs.matmul(a, b, stage="tile", impl="kernel",
+                          blocks={"bm": bm, "bn": bn, "bk": bk})
     want = ref.matmul_ref(a, b)
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
@@ -56,7 +58,8 @@ def test_flash_attention_matches_ref(dtype, causal, b, h, sq, skv, d):
     q = _rand(ks[0], (b, h, sq, d), dtype)
     k = _rand(ks[1], (b, h, skv, d), dtype)
     v = _rand(ks[2], (b, h, skv, d), dtype)
-    got = ops.flash_attention(q, k, v, causal=causal, block_q=128, block_kv=128)
+    got = programs.flash_attention(q, k, v, causal=causal,
+                                   blocks={"bq": 128, "bkv": 128})
     want = ref.attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
@@ -68,7 +71,7 @@ def test_flash_attention_sliding_window():
     q = _rand(ks[0], (1, 2, 256, 64), jnp.float32)
     k = _rand(ks[1], (1, 2, 256, 64), jnp.float32)
     v = _rand(ks[2], (1, 2, 256, 64), jnp.float32)
-    got = ops.flash_attention(q, k, v, causal=True, window=64)
+    got = programs.flash_attention(q, k, v, causal=True, window=64)
     want = ref.attention_ref(q, k, v, causal=True, window=64)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
@@ -79,7 +82,7 @@ def test_flash_attention_decode_alignment():
     q = _rand(ks[0], (1, 1, 128, 64), jnp.float32)
     k = _rand(ks[1], (1, 1, 384, 64), jnp.float32)
     v = _rand(ks[2], (1, 1, 384, 64), jnp.float32)
-    got = ops.flash_attention(q, k, v, causal=True)
+    got = programs.flash_attention(q, k, v, causal=True)
     want = ref.attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
@@ -97,7 +100,7 @@ def test_moe_gemm_matches_ref(dtype, e, c, d, f):
     k1, k2 = jax.random.split(jax.random.PRNGKey(4))
     x = _rand(k1, (e, c, d), dtype)
     w = _rand(k2, (e, d, f), dtype)
-    got = ops.moe_gemm(x, w)
+    got = programs.moe_gemm(x, w, stage="expert_gemm", impl="kernel")
     want = ref.moe_gemm_ref(x, w)
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
@@ -114,7 +117,7 @@ def test_rmsnorm_matches_ref(dtype, shape):
     k1, k2 = jax.random.split(jax.random.PRNGKey(5))
     x = _rand(k1, shape, dtype)
     w = _rand(k2, shape[-1:], dtype)
-    got = ops.rmsnorm(x, w)
+    got = programs.rmsnorm(x, w, stage="rows", impl="kernel")
     want = ref.rmsnorm_ref(x, w)
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
@@ -122,21 +125,23 @@ def test_rmsnorm_matches_ref(dtype, shape):
 
 
 # ---------------------------------------------------------------------------
-# scope-dispatched matmul (core.ops)
+# scope-dispatched matmul (the program dispatch table)
 # ---------------------------------------------------------------------------
 
-def test_ops_matmul_dispatch():
-    from repro.core import ops as cops
+def test_program_matmul_scope_dispatch():
     from repro.core.scopes import Scope, scope
 
     k1, k2 = jax.random.split(jax.random.PRNGKey(6))
     a, b = _rand(k1, (256, 256), jnp.float32), _rand(k2, (256, 256), jnp.float32)
     want = ref.matmul_ref(a, b)
-    with scope(Scope.DEVICE):
-        got = cops.matmul(a, b, block_m=128, block_n=128, block_k=128)
+    with scope(Scope.DEVICE):  # DEVICE -> the Pallas tile stage
+        got = programs.matmul(a, b, blocks={"bm": 128, "bn": 128, "bk": 128})
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
-    got_mesh = cops.matmul(a, b)  # MESH scope -> XLA dot
+    got_mesh = programs.matmul(a, b)  # MESH scope -> the dot stage (XLA)
     np.testing.assert_allclose(got_mesh, want, rtol=2e-5, atol=2e-5)
+    with scope(Scope.BLOCK):  # BLOCK scope -> functional dot on tiles
+        got_blk = programs.matmul(a, b)
+    np.testing.assert_allclose(got_blk, want, rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,140 @@
+"""core.scopes: the execution-scope hierarchy the kernel DSL validates
+against — ordering laws, illegal-nesting errors, and thread safety of
+the scope stack (each thread gets its own stack)."""
+import threading
+
+import pytest
+
+from repro.core.scopes import (
+    Scope,
+    block_scope,
+    current_scope,
+    device_scope,
+    grid_scope,
+    mesh_scope,
+    scope,
+)
+
+ORDER = [Scope.MESH, Scope.DEVICE, Scope.GRID, Scope.BLOCK]
+
+
+def test_scope_ordering_laws():
+    for i, s in enumerate(ORDER):
+        assert s.rank == i
+        for t in ORDER:
+            assert s.finer_than(t) == (s.rank > t.rank)
+            assert s.coarser_than(t) == (s.rank < t.rank)
+            assert t.can_enter(s) == (t.rank >= s.rank)
+        # reflexivity: same scope can always be re-entered
+        assert s.can_enter(s)
+
+
+def test_default_scope_is_mesh():
+    assert current_scope() == Scope.MESH
+
+
+def test_legal_nesting_and_unwinding():
+    with mesh_scope():
+        with device_scope():
+            with grid_scope():
+                with block_scope():
+                    assert current_scope() == Scope.BLOCK
+                assert current_scope() == Scope.GRID
+            assert current_scope() == Scope.DEVICE
+        assert current_scope() == Scope.MESH
+    assert current_scope() == Scope.MESH
+    # skipping levels inward is legal (MESH -> BLOCK)
+    with block_scope():
+        assert current_scope() == Scope.BLOCK
+
+
+@pytest.mark.parametrize(
+    "outer,inner",
+    [
+        (Scope.BLOCK, Scope.GRID),
+        (Scope.BLOCK, Scope.DEVICE),
+        (Scope.BLOCK, Scope.MESH),
+        (Scope.GRID, Scope.DEVICE),
+        (Scope.GRID, Scope.MESH),
+        (Scope.DEVICE, Scope.MESH),
+    ],
+)
+def test_illegal_outward_nesting_raises(outer, inner):
+    with scope(outer):
+        with pytest.raises(ValueError, match="cannot open"):
+            with scope(inner):
+                pass
+        # the failed enter must not corrupt the stack
+        assert current_scope() == outer
+    assert current_scope() == Scope.MESH
+
+
+def test_scope_accepts_string_names():
+    with scope("device"):
+        assert current_scope() == Scope.DEVICE
+        with scope("block"):
+            assert current_scope() == Scope.BLOCK
+
+
+def test_stack_unwinds_on_exception():
+    with pytest.raises(RuntimeError):
+        with scope(Scope.GRID):
+            raise RuntimeError("boom")
+    assert current_scope() == Scope.MESH
+
+
+def test_scope_stack_is_thread_local():
+    """Each thread sees its own stack: a thread parked inside BLOCK
+    scope must not leak into threads concurrently reading MESH."""
+    n = 8
+    barrier = threading.Barrier(n + 1)
+    release = threading.Event()
+    observed = {}
+    errors = []
+
+    def worker(i):
+        try:
+            target = ORDER[i % len(ORDER)]
+            with scope(target):
+                barrier.wait(timeout=10)   # every thread is now inside
+                release.wait(timeout=10)   # ...simultaneously
+                observed[i] = current_scope()
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append((i, e))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    barrier.wait(timeout=10)
+    # main thread's stack is untouched while workers sit in their scopes
+    assert current_scope() == Scope.MESH
+    release.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    assert observed == {i: ORDER[i % len(ORDER)] for i in range(n)}
+    assert current_scope() == Scope.MESH
+
+
+def test_concurrent_push_pop_no_corruption():
+    """Hammer push/pop from many threads; every thread must unwind to
+    MESH with no cross-thread interference."""
+    errors = []
+
+    def worker(seed):
+        try:
+            for _ in range(200):
+                with scope(Scope.DEVICE):
+                    with scope(Scope.GRID):
+                        with scope(Scope.BLOCK):
+                            assert current_scope() == Scope.BLOCK
+                assert current_scope() == Scope.MESH
+        except Exception as e:  # pragma: no cover
+            errors.append((seed, e))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors

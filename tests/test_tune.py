@@ -251,22 +251,23 @@ def test_candidate_blocks_largest_aligned_divisor():
     assert candidate_blocks(13, minimum=8) == ()        # truly untileable
 
 
-def test_kernel_wrapper_resolves_schedule_per_call(tmp_cache):
-    # resolution happens outside the jit wrapper, so a measurement
-    # recorded after the first call takes effect on the next one
-    from repro.kernels import ops as kops
+def test_program_resolves_schedule_per_call(tmp_cache):
+    # stage schedules resolve outside the cached jit launcher, so a
+    # measurement recorded after the first call takes effect on the next
+    from repro.kernels import programs
 
     a = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
     b = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
-    first = kops.matmul(a, b)  # planner-resolved blocks
-    measured = Schedule("matmul", "kernel", (("bm", 128), ("bn", 128), ("bk", 128)))
-    key = schedule_key("matmul", (a.shape, b.shape), (a.dtype, b.dtype),
+    first = programs.matmul(a, b, stage="tile", impl="kernel")
+    measured = Schedule("matmul/tile", "kernel",
+                        (("bm", 128), ("bn", 128), ("bk", 128)))
+    key = schedule_key("matmul/tile", (a.shape, b.shape), (a.dtype, b.dtype),
                        "dense", jax.default_backend())
     tmp_cache.put(key, measured, us=1.0, source="measured")
-    second = kops.matmul(a, b)  # must pick up the measured blocks
+    second = programs.matmul(a, b, stage="tile", impl="kernel")
     np.testing.assert_allclose(first, a @ b, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(second, a @ b, rtol=2e-4, atol=2e-4)
-    assert tune.get_schedule("matmul", shapes=(a.shape, b.shape),
+    assert tune.get_schedule("matmul/tile", shapes=(a.shape, b.shape),
                              dtypes=(a.dtype, b.dtype), impl="kernel") == measured
 
 
@@ -286,8 +287,8 @@ def test_autotune_flash_unmeasurable_returns_planner_pick(tmp_cache):
 # ---------------------------------------------------------------------------
 
 def test_tuned_dispatch_never_raises_tiling_error(tmp_cache):
-    from repro.core import ops as cops
     from repro.core.scopes import Scope, scope
+    from repro.kernels import programs
 
     key = jax.random.PRNGKey(0)
     # aligned, odd, sub-atom, and prime shapes
@@ -295,7 +296,7 @@ def test_tuned_dispatch_never_raises_tiling_error(tmp_cache):
         a = jax.random.normal(jax.random.fold_in(key, m), (m, k), jnp.float32)
         b = jax.random.normal(jax.random.fold_in(key, n), (k, n), jnp.float32)
         with scope(Scope.DEVICE):
-            got = cops.matmul(a, b)  # must not raise TilingError
+            got = programs.matmul(a, b)  # must not raise TilingError
         np.testing.assert_allclose(
             got, a @ b, rtol=2e-4, atol=2e-4,
         )
@@ -310,8 +311,9 @@ def test_autotune_matmul_populates_and_hits_cache(tmp_cache):
     rep2 = tune.autotune_matmul(a, b)
     assert rep2.cached
     assert rep2.schedule == rep.schedule
-    # dispatch now resolves to the measured winner
-    s = tune.get_schedule("matmul", shapes=(a.shape, b.shape), dtypes=(a.dtype, b.dtype))
+    # dispatch now resolves to the measured winner under the stage key
+    s = tune.get_schedule("matmul/tile", shapes=(a.shape, b.shape),
+                          dtypes=(a.dtype, b.dtype))
     assert s == rep.schedule
 
 
