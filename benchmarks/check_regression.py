@@ -1,0 +1,97 @@
+"""Kernel benchmark regression gate for the scheduled CI bench job.
+
+Compares a freshly measured ``BENCH_kernels.json`` (written by the
+``--program`` modes of bench_gemm / bench_mha via
+``benchmarks.common.write_bench_json``) against the committed baseline
+and fails when any row regresses more than ``--threshold`` (default
+20%). Rows present in only one file are reported but never fail the
+gate — new benchmarks should not need a baseline edit to land, and a
+renamed row should fail loudly in review, not here.
+
+Usage:
+    python benchmarks/check_regression.py \
+        --baseline BENCH_kernels.json --current bench_out/BENCH_kernels.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def find_regressions(
+    baseline: Dict, current: Dict, threshold: float = 0.20
+) -> Tuple[List[str], List[str]]:
+    """(regressions, notes) comparing two BENCH_kernels.json payloads.
+
+    A row regresses when ``current_us > baseline_us * (1 + threshold)``.
+    Notes cover rows/sections missing on either side and improvements.
+    """
+    regressions: List[str] = []
+    notes: List[str] = []
+    base_sections = baseline.get("sections", {})
+    cur_sections = current.get("sections", {})
+    for section in sorted(set(base_sections) | set(cur_sections)):
+        b_rows = base_sections.get(section, {}).get("rows", {})
+        c_rows = cur_sections.get(section, {}).get("rows", {})
+        if not b_rows:
+            notes.append(f"{section}: new section (no baseline)")
+        if not c_rows:
+            notes.append(f"{section}: missing from current run")
+        for name in sorted(set(b_rows) | set(c_rows)):
+            if name not in b_rows:
+                notes.append(f"{section}/{name}: new row (no baseline)")
+                continue
+            if name not in c_rows:
+                notes.append(f"{section}/{name}: missing from current run")
+                continue
+            b_us = float(b_rows[name]["us"])
+            c_us = float(c_rows[name]["us"])
+            if b_us <= 0:
+                continue
+            ratio = c_us / b_us
+            if ratio > 1.0 + threshold:
+                regressions.append(
+                    f"{section}/{name}: {b_us:.1f} -> {c_us:.1f} us "
+                    f"(+{100 * (ratio - 1):.1f}% > +{100 * threshold:.0f}% budget)"
+                )
+            elif ratio < 1.0 - threshold:
+                notes.append(
+                    f"{section}/{name}: improved {b_us:.1f} -> {c_us:.1f} us "
+                    f"({100 * (1 - ratio):.1f}% faster)"
+                )
+    return regressions, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_kernels.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--current", required=True,
+                    help="freshly measured JSON to gate")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed slowdown fraction (0.20 = +20%%)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    regressions, notes = find_regressions(baseline, current, args.threshold)
+    for n in notes:
+        print(f"note: {n}")
+    if regressions:
+        print(f"\n{len(regressions)} kernel regression(s) past "
+              f"+{100 * args.threshold:.0f}%:")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    print(f"\nno regressions past +{100 * args.threshold:.0f}% "
+          f"(baseline {args.baseline}, current {args.current})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,10 +46,20 @@ from repro.axe.propagate import (
     propagate_matmul,
     redistribute,
 )
+from repro.axe.graphs import GraphSpec, TensorMeta, decoder_layer_graph, model_graph
+from repro.axe.solve import (
+    Decision,
+    SolveError,
+    SolveResult,
+    enumerate_specs,
+    solve,
+)
 
 __all__ = [
     "AxeSpec",
     "BlockLowering",
+    "Decision",
+    "GraphSpec",
     "LayoutPlan",
     "OpNode",
     "PROGRAMS",
@@ -59,14 +69,21 @@ __all__ = [
     "ProgramError",
     "PropagationError",
     "Redistribution",
+    "SolveError",
+    "SolveResult",
     "SpecError",
     "Stage",
     "StageContext",
     "StageError",
+    "TensorMeta",
     "block_lowering",
+    "decoder_layer_graph",
+    "enumerate_specs",
     "get_program",
     "kernel",
+    "model_graph",
     "program",
+    "solve",
     "from_pspec",
     "from_sharding",
     "layout_of_pspec",

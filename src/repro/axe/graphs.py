@@ -1,22 +1,241 @@
-"""Representative op graphs for layout propagation.
+"""Representative op graphs for layout propagation and layout search.
 
 ``decoder_layer_graph`` builds the op graph of one decoder layer for a
-model-zoo config — norm → QKV projection → attention → output
-projection (+ residual) → norm → FFN (dense) or MoE dispatch + expert
-GEMMs — seeded with the AxeSpec placements the rule engine
-(``repro.axe.rules``) would choose. Propagating it
-(``repro.axe.propagate.propagate``) yields the per-op redistribution
-plan and communication bytes that ``launch.dryrun --layout-plan``
-reports without touching any device.
+model-zoo config; ``model_graph`` builds the whole-model graph — embed →
+N decoder layers → lm_head — with family variants: dense / MoE
+(dispatch + expert GEMMs + combine), SSM and hybrid mixers
+(Mamba2/Jamba), and the encoder–decoder stack with cross-attention
+(Whisper). Reshape boundaries are *in-graph* ``reshape`` nodes, so a
+sharding a reshape cannot carry is paid for as an AllGather in the plan
+rather than silently dropped.
+
+Every graph is a :class:`GraphSpec`: the node list, per-input tensor
+metadata (shape / dtype / role / the rule engine's seeded preference
+list), and the physical space. ``seeded_env()`` resolves the preference
+lists through ``rules.pick_spec`` — that is the baseline plan the layout
+solver (``repro.axe.solve``) has to beat; the solver itself enumerates
+placements from the spec algebra instead of the preference lists.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Dict, List, Tuple
 
 from repro.axe import rules
 from repro.axe.propagate import OpNode
 from repro.axe.spec import AxeSpec, PhysicalSpace
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorMeta:
+    """One graph input: logical shape + dtype + the seeded preference
+    list (``rules`` syntax) the baseline plan resolves it with."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+    role: str                      # "activation" | "param"
+    prefs: Tuple[Tuple, ...] = ()
+
+
+@dataclasses.dataclass
+class GraphSpec:
+    """An op graph plus everything needed to seed or solve its layout."""
+
+    nodes: List[OpNode]
+    inputs: Dict[str, TensorMeta]
+    space: PhysicalSpace
+
+    def seeded_env(self) -> Dict[str, AxeSpec]:
+        """The rule-engine baseline: first admissible preference per
+        input (replication when nothing in the list is admissible)."""
+        env: Dict[str, AxeSpec] = {}
+        for m in self.inputs.values():
+            if m.prefs:
+                env[m.name] = rules.pick_spec(m.shape, m.prefs, self.space, m.dtype)
+            else:
+                env[m.name] = AxeSpec.replicated(m.shape, self.space, m.dtype)
+        return env
+
+    def outputs(self) -> Tuple[str, ...]:
+        """Tensors produced but never consumed (the graph results)."""
+        consumed = {i for n in self.nodes for i in n.inputs}
+        return tuple(n.out for n in self.nodes if n.out not in consumed)
+
+
+class _Builder:
+    """Accumulates nodes + input metadata while building one graph."""
+
+    def __init__(self, space: PhysicalSpace, dtype: str):
+        self.space = space
+        self.dtype = dtype
+        self.nodes: List[OpNode] = []
+        self.inputs: Dict[str, TensorMeta] = {}
+
+    def inp(self, name: str, shape, role: str, prefs=(), dtype=None) -> str:
+        self.inputs[name] = TensorMeta(
+            name, tuple(int(s) for s in shape), dtype or self.dtype, role,
+            tuple(tuple(p) for p in prefs),
+        )
+        return name
+
+    def op(self, name: str, kind: str, ins, out: str, attrs=()) -> str:
+        self.nodes.append(OpNode(name, kind, tuple(ins), out, tuple(attrs)))
+        return out
+
+    def reshape(self, name: str, src: str, shape, carry) -> str:
+        return self.op(
+            name, "reshape", (src,), name,
+            attrs=(("shape", tuple(int(s) for s in shape)),
+                   ("carry", tuple(tuple(c) for c in carry))),
+        )
+
+    def spec(self) -> GraphSpec:
+        return GraphSpec(self.nodes, self.inputs, self.space)
+
+
+# ---------------------------------------------------------------------------
+# per-layer builders
+# ---------------------------------------------------------------------------
+
+
+def _attention_block(
+    b: _Builder, cfg, batch: int, seq: int, p: str, x_in: str,
+    *, kv_from: str = None, kv_tokens: int = None, kv_seq: int = None,
+) -> str:
+    """norm → fused QKV projection → attention → output projection →
+    residual. ``kv_from`` switches to cross-attention: K/V project from
+    that tensor (the encoder output) instead of the normed input."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    t = batch * seq
+    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n")
+    if kv_from is None:
+        wqkv = b.inp(f"{p}wqkv", (d, (h + 2 * kv) * hd), "param",
+                     [(None, "model"), (None, None)])
+        qkv = b.op(f"{p}qkv_proj", "matmul", (x_n, wqkv), f"{p}qkv")
+        q = b.reshape(f"{p}q", qkv, (batch, h, seq, hd), ((0, 0), (1, 1)))
+        k = b.reshape(f"{p}k", qkv, (batch, kv, seq, hd), ((0, 0), (1, 1)))
+        v = b.reshape(f"{p}v", qkv, (batch, kv, seq, hd), ((0, 0), (1, 1)))
+    else:
+        # cross-attention weights get non-colliding base names (cwq/cwkv)
+        # so PlanRules never mistakes them for the self-attention QKV
+        kv_s = kv_seq if kv_seq is not None else (kv_tokens // batch)
+        wq = b.inp(f"{p}cwq", (d, h * hd), "param",
+                   [(None, "model"), (None, None)])
+        wkv = b.inp(f"{p}cwkv", (d, 2 * kv * hd), "param",
+                    [(None, "model"), (None, None)])
+        qf = b.op(f"{p}q_proj", "matmul", (x_n, wq), f"{p}qf")
+        kvf = b.op(f"{p}kv_proj", "matmul", (kv_from, wkv), f"{p}kvf")
+        q = b.reshape(f"{p}q", qf, (batch, h, seq, hd), ((0, 0), (1, 1)))
+        k = b.reshape(f"{p}k", kvf, (batch, kv, kv_s, hd), ((0, 0), (1, 1)))
+        v = b.reshape(f"{p}v", kvf, (batch, kv, kv_s, hd), ((0, 0), (1, 1)))
+    attn = b.op(f"{p}attention", "attention", (q, k, v), f"{p}attn_out")
+    flat = b.reshape(f"{p}attn_flat", attn, (t, h * hd), ((0, 0), (1, 1)))
+    wo = b.inp(f"{p}cwo" if kv_from is not None else f"{p}wo",
+               (h * hd, d), "param", [("model", None), (None, None)])
+    o = b.op(f"{p}wo_proj", "matmul", (flat, wo), f"{p}attn_o")
+    return b.op(f"{p}attn_residual", "elementwise", (o, x_in), f"{p}x1")
+
+
+def _ssm_block(b: _Builder, cfg, t: int, p: str, x_in: str) -> str:
+    """norm → (x/z/B/C/dt projections) → SSD mix → gate → out proj →
+    residual; the Mamba2 mixer as layout ops."""
+    d = cfg.d_model
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n")
+    wx = b.inp(f"{p}wx", (d, di), "param", [(None, "model"), (None, None)])
+    wz = b.inp(f"{p}wz", (d, di), "param", [(None, "model"), (None, None)])
+    wB = b.inp(f"{p}wB", (d, n), "param", [(None, None)])
+    wC = b.inp(f"{p}wC", (d, n), "param", [(None, None)])
+    wdt = b.inp(f"{p}wdt", (d, h), "param", [(None, "model"), (None, None)])
+    xz = b.op(f"{p}x_proj", "matmul", (x_n, wx), f"{p}xz")
+    zz = b.op(f"{p}z_proj", "matmul", (x_n, wz), f"{p}zz")
+    bb = b.op(f"{p}b_proj", "matmul", (x_n, wB), f"{p}bb")
+    cc = b.op(f"{p}c_proj", "matmul", (x_n, wC), f"{p}cc")
+    dt = b.op(f"{p}dt_proj", "matmul", (x_n, wdt), f"{p}dt")
+    y = b.op(f"{p}ssm_mix", "ssm_mix", (xz, bb, cc, dt), f"{p}y")
+    g = b.op(f"{p}gate", "elementwise", (y, zz), f"{p}g")
+    wo = b.inp(f"{p}ssm_wo", (di, d), "param", [("model", None), (None, None)])
+    o = b.op(f"{p}out_proj", "matmul", (g, wo), f"{p}ssm_o")
+    return b.op(f"{p}ssm_residual", "elementwise", (o, x_in), f"{p}x1")
+
+
+def _ffn_block(b: _Builder, cfg, t: int, p: str, x_in: str, res: str) -> str:
+    """norm → dense FFN or MoE dispatch/expert-GEMMs/combine → residual."""
+    d = cfg.d_model
+    x2 = b.op(f"{p}norm_ffn", "norm", (x_in,), f"{p}x2")
+    if cfg.is_moe:
+        e, f_e = cfg.num_experts, cfg.moe_d_ff
+        cap = max(1, math.ceil(t * cfg.experts_per_tok * cfg.capacity_factor / e))
+        moe_wi = b.inp(f"{p}moe_wi", (e, d, f_e), "param",
+                       [("model", None, None), (None, None, "model"),
+                        (None, None, None)])
+        moe_wo = b.inp(f"{p}moe_wo", (e, f_e, d), "param",
+                       [("model", None, None), (None, "model", None),
+                        (None, None, None)])
+        xe = b.op(f"{p}moe_dispatch", "moe_dispatch", (x2,), f"{p}xe",
+                  attrs=(("experts", e), ("capacity", cap)))
+        he = b.op(f"{p}moe_ffn_in", "matmul", (xe, moe_wi), f"{p}he")
+        oe = b.op(f"{p}moe_ffn_out", "matmul", (he, moe_wo), f"{p}oe")
+        out = b.op(f"{p}moe_combine", "moe_combine", (oe,), f"{p}moe_out",
+                   attrs=(("tokens", t),))
+        return b.op(f"{p}ffn_residual", "elementwise", (out, res), f"{p}x_out")
+    wi = b.inp(f"{p}wi", (d, cfg.d_ff), "param", [(None, "model"), (None, None)])
+    wo2 = b.inp(f"{p}wo2", (cfg.d_ff, d), "param", [("model", None), (None, None)])
+    hh = b.op(f"{p}ffn_in", "matmul", (x2, wi), f"{p}ffn_h")
+    oo = b.op(f"{p}ffn_out", "matmul", (hh, wo2), f"{p}ffn_o")
+    return b.op(f"{p}ffn_residual", "elementwise", (oo, res), f"{p}x_out")
+
+
+def _mixer_kind(cfg, i: int) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        per = max(cfg.attn_period, 1)
+        return "attn" if i % per == per - 1 else "ssm"
+    return "attn"
+
+
+def _decoder_layer(
+    b: _Builder, cfg, batch: int, seq: int, p: str, x_in: str,
+    *, layer_index: int = 0, enc_out: str = None, enc_tokens: int = None,
+    enc_seq: int = None,
+) -> str:
+    """One decoder layer; returns the layer output tensor name."""
+    t = batch * seq
+    if _mixer_kind(cfg, layer_index) == "ssm":
+        x1 = _ssm_block(b, cfg, t, p, x_in)
+    else:
+        x1 = _attention_block(b, cfg, batch, seq, p, x_in)
+        if enc_out is not None:
+            # encoder-decoder: cross-attention sub-block after self-attn
+            x1 = _attention_block(
+                b, cfg, batch, seq, f"{p}cross.", x1,
+                kv_from=enc_out, kv_tokens=enc_tokens, kv_seq=enc_seq,
+            )
+    if not (cfg.is_moe or cfg.d_ff):
+        return x1  # pure SSM block (mamba2): mixer only
+    return _ffn_block(b, cfg, t, p, x1, x1)
+
+
+# ---------------------------------------------------------------------------
+# public graph builders
+# ---------------------------------------------------------------------------
+
+
+def layer_graph_spec(
+    cfg, batch: int, seq: int, space: PhysicalSpace, dtype: str = "bfloat16",
+) -> GraphSpec:
+    """One decoder layer as a :class:`GraphSpec` with a free activation
+    input ``x`` — the single-layer graph ``dryrun --layout-plan`` and
+    the propagation tests use."""
+    b = _Builder(space, dtype)
+    dp = rules.dp_entry(space)
+    b.inp("x", (batch * seq, cfg.d_model), "activation",
+          [(dp, None), (None, None)])
+    _decoder_layer(b, cfg, batch, seq, "", "x")
+    return b.spec()
 
 
 def decoder_layer_graph(
@@ -26,90 +245,61 @@ def decoder_layer_graph(
     space: PhysicalSpace,
     dtype: str = "bfloat16",
 ) -> Tuple[List[OpNode], Dict[str, AxeSpec]]:
-    """One decoder layer as (nodes, input specs) for ``propagate``.
+    """One decoder layer as (nodes, seeded input specs) for
+    ``propagate`` — the historical entry point, now a view over
+    :func:`layer_graph_spec`. Reshape boundaries are in-graph nodes, so
+    placements the new extents do not admit (GQA kv heads, non-dividing
+    head counts) cost an AllGather in the plan instead of being dropped
+    silently."""
+    gs = layer_graph_spec(cfg, batch, seq, space, dtype)
+    return gs.nodes, gs.seeded_env()
 
-    Activations are rank-2 [tokens, d] (tokens = batch·seq); q/k/v are
-    rank-4 [B, H, S, hd]. Placements are preference lists resolved by
-    the same Axe-admissibility rule as params/batches, so non-dividing
-    head counts (starcoder2, whisper) degrade exactly like the real
-    sharding rules do.
-    """
-    mesh_shape = space.mesh_shape
-    dp_entry = rules._dp_entry(space)
-    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+def model_graph(
+    cfg,
+    batch: int,
+    seq: int,
+    space: PhysicalSpace,
+    dtype: str = "bfloat16",
+    *,
+    layers: int = 2,
+) -> GraphSpec:
+    """The whole-model op graph: embed → ``layers`` decoder layers →
+    final norm → lm_head, with the family variants (MoE, SSM/hybrid
+    mixers, encoder–decoder cross-attention). ``layers`` caps the
+    decoder depth (layout plans repeat per layer; two layers exercise
+    every cross-layer boundary)."""
+    b = _Builder(space, dtype)
+    dp = rules.dp_entry(space)
+    d, v = cfg.d_model, cfg.vocab_size
     t = batch * seq
 
-    def pick(shape, prefs):
-        return rules.pick_spec(shape, prefs, space, dtype)
+    tokens = b.inp("tokens", (t,), "activation", [(dp,), (None,)], dtype="int32")
+    embed = b.inp("embed", (v, d), "param", list(rules.PARAM_RULES["embed"]))
+    x = b.op("embed_lookup", "embed", (tokens, embed), "x0")
 
-    def reshape_seed(name, src: AxeSpec, shape, placement):
-        """Seed a spec across a reshape boundary (propagation models ops,
-        not reshapes): carry the named dims' placements over from the
-        propagated ``src`` spec, dropping any the new dim extents no
-        longer admit."""
-        pl = {}
-        for i, axes in placement.items():
-            ext = math.prod(mesh_shape.get(a, 1) for a in axes)
-            if axes and shape[i] % ext == 0:
-                pl[i] = axes
-        # a reshape is value-preserving: pending partial sums carry over
-        env[name] = AxeSpec.sharded(shape, space, pl, src.dtype, partial=src.partial)
+    enc_out = None
+    enc_t = enc_s = None
+    if cfg.family == "encdec":
+        enc_s = cfg.encoder_seq
+        enc_t = batch * enc_s
+        frames = b.inp("frames", (enc_t, d), "activation",
+                       [(dp, None), (None, None)])
+        e_x = frames
+        for i in range(min(cfg.encoder_layers, layers)):
+            p = f"E{i}."
+            e_x1 = _attention_block(b, cfg, batch, enc_s, p, e_x)
+            e_x = _ffn_block(b, cfg, enc_t, p, e_x1, e_x1)
+        enc_out = b.op("enc_norm", "norm", (e_x,), "enc_out")
 
-    env: Dict[str, AxeSpec] = {}
-    env["x"] = pick((t, d), [(dp_entry, None), (None, None)])
-    env["wqkv"] = pick((d, (h + 2 * kv) * hd), [(None, "model"), (None, None)])
-    env["wo"] = pick((h * hd, d), [("model", None), (None, None)])
+    n_layers = min(cfg.num_layers, layers)
+    for i in range(n_layers):
+        x = _decoder_layer(
+            b, cfg, batch, seq, f"L{i}.", x,
+            layer_index=i, enc_out=enc_out, enc_tokens=enc_t, enc_seq=enc_s,
+        )
 
-    # Propagate the projection stage, then seed the rank-4 q/k/v views
-    # from its *propagated* output placement (the [T, D'] -> [B, H, S,
-    # hd] reshape keeps the token axes on B and the projection axes on
-    # H, when the new extents admit them — GQA kv heads may not).
-    from repro.axe.propagate import propagate as _propagate
-
-    stage1 = [
-        OpNode("norm_in", "norm", ("x",), "x_n"),
-        OpNode("qkv_proj", "matmul", ("x_n", "wqkv"), "qkv"),
-    ]
-    qkv = _propagate(stage1, env).env["qkv"]
-    p_qkv = qkv.placement()
-    reshape_seed("q", qkv, (batch, h, seq, hd), {0: p_qkv[0], 1: p_qkv[1]})
-    reshape_seed("k", qkv, (batch, kv, seq, hd), {0: p_qkv[0], 1: p_qkv[1]})
-    env["v"] = env["k"]
-
-    stage2 = [OpNode("attention", "attention", ("q", "k", "v"), "attn_out")]
-    attn_out = _propagate(stage2, env).env["attn_out"]
-    p_attn = attn_out.placement()
-    # [B, H, S, hd] -> [T, H*hd]: tokens keep B's axes, the flattened
-    # feature dim keeps the head axes (when H*hd still admits them)
-    reshape_seed("attn_flat", attn_out, (t, h * hd),
-                 {0: p_attn[0], 1: p_attn[1]})
-
-    nodes: List[OpNode] = stage1 + stage2 + [
-        OpNode("wo_proj", "matmul", ("attn_flat", "wo"), "attn_o"),
-        OpNode("attn_residual", "elementwise", ("attn_o", "x"), "x1"),
-        OpNode("norm_ffn", "norm", ("x1",), "x2"),
-    ]
-
-    if cfg.is_moe:
-        e = cfg.num_experts
-        f_e = cfg.moe_d_ff
-        cap = max(1, math.ceil(t * cfg.experts_per_tok * cfg.capacity_factor / e))
-        env["moe_wi"] = pick((e, d, f_e),
-                             [("model", None, None), (None, None, "model"), (None, None, None)])
-        env["moe_wo"] = pick((e, f_e, d),
-                             [("model", None, None), (None, "model", None), (None, None, None)])
-        nodes += [
-            OpNode("moe_dispatch", "moe_dispatch", ("x2",), "xe",
-                   attrs=(("experts", e), ("capacity", cap))),
-            OpNode("moe_ffn_in", "matmul", ("xe", "moe_wi"), "he"),
-            OpNode("moe_ffn_out", "matmul", ("he", "moe_wo"), "oe"),
-        ]
-    elif cfg.d_ff:
-        env["wi"] = pick((d, cfg.d_ff), [(None, "model"), (None, None)])
-        env["wo2"] = pick((cfg.d_ff, d), [("model", None), (None, None)])
-        nodes += [
-            OpNode("ffn_in", "matmul", ("x2", "wi"), "ffn_h"),
-            OpNode("ffn_out", "matmul", ("ffn_h", "wo2"), "ffn_o"),
-            OpNode("ffn_residual", "elementwise", ("ffn_o", "x1"), "x_out"),
-        ]
-    return nodes, env
+    x_f = b.op("final_norm", "norm", (x,), "x_f")
+    lm_head = b.inp("lm_head", (d, v), "param", list(rules.PARAM_RULES["lm_head"]))
+    b.op("lm_head_proj", "matmul", (x_f, lm_head), "logits")
+    return b.spec()

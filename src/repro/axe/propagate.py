@@ -39,7 +39,8 @@ class OpNode:
     """One node of the layout graph: ``out = kind(*inputs)``."""
 
     name: str
-    kind: str                     # matmul | attention | moe_dispatch | norm | elementwise
+    kind: str                     # matmul | attention | moe_dispatch | moe_combine |
+    #                               norm | elementwise | reshape | embed | ssm_mix
     inputs: Tuple[str, ...]
     out: str
     attrs: Tuple[Tuple[str, object], ...] = ()
@@ -316,12 +317,150 @@ def rule_elementwise(node: OpNode, *xs: AxeSpec):
     return out, tuple(redists)
 
 
+def rule_reshape(node: OpNode, x: AxeSpec):
+    """A value-preserving reshape boundary. ``attrs['shape']`` is the new
+    logical shape; ``attrs['carry']`` maps source dims to destination
+    dims whose placements carry over. Mesh axes the new dim extents do
+    not admit — and axes on source dims with no carry target — must be
+    *gathered first*: unlike the old ``reshape_seed`` free-drop, the
+    plan charges that AllGather, so a solver cannot hide communication
+    behind a reshape. Pending partial sums carry through unresolved."""
+    new_shape = tuple(int(s) for s in (node.attr("shape") or ()))
+    carry = tuple(node.attr("carry") or ())
+    mesh_shape = x.space.mesh_shape
+    px = x.placement()
+
+    out_pl: Dict[int, Tuple[str, ...]] = {}
+    keep: Dict[int, Tuple[str, ...]] = {}
+    for s_dim, d_dim in carry:
+        axes = px[s_dim]
+        if not axes:
+            continue
+        ext = math.prod(mesh_shape[a] for a in axes)
+        if new_shape[d_dim] % ext == 0:
+            out_pl[d_dim] = axes
+            keep[s_dim] = axes
+    redists = []
+    want = x.with_placement(keep, x.partial)
+    if tuple(keep.get(i, ()) for i in range(len(px))) != px:
+        # dropped axes gather before the reshape; partials stay pending
+        # (a reshape is value-preserving), so plan on partial-free specs
+        r = redistribute(x.with_partial(()), want.with_partial(()), node.inputs[0])
+        redists.append(Redistribution(node.inputs[0], x, want, r.steps, r.comm_bytes))
+    out = AxeSpec.sharded(new_shape, x.space, out_pl, x.dtype, partial=x.partial)
+    return out, tuple(redists)
+
+
+def rule_embed(node: OpNode, tok: AxeSpec, table: AxeSpec):
+    """Token embedding: ``tokens [T] × table [V, d] → x [T, d]``. The
+    token dim keeps the token placement; the feature dim takes the
+    table's (minus conflicts). A vocab-sharded table makes the gather a
+    one-hot partial matmul, so its axes surface as ``partial`` on the
+    output — the same Fig. 8 deferred-reduction story as matmul K."""
+    pt = tok.placement()
+    pv = table.placement()
+    t_axes = pt[0]
+    # a vocab axis that also shards the tokens would have to be both a
+    # partial axis and a placement axis of the output — gather it instead
+    v_axes = _filter_axes(pv[0], set(t_axes))
+    taken = set(t_axes) | set(v_axes)
+    d_axes = _filter_axes(pv[1], taken)
+    want_pl: Dict[int, Tuple[str, ...]] = {}
+    if v_axes:
+        want_pl[0] = v_axes
+    if d_axes:
+        want_pl[1] = d_axes
+    want_table = table.with_placement(want_pl)
+    redists = []
+    if not table.equivalent(want_table):
+        redists.append(redistribute(table, want_table, node.inputs[1]))
+    out = AxeSpec.sharded(
+        (tok.shape[0], table.shape[1]), table.space,
+        {i: a for i, a in ((0, t_axes), (1, d_axes)) if a},
+        table.dtype, partial=tuple(sorted(v_axes)),
+    )
+    return out, tuple(redists)
+
+
+def rule_moe_combine(node: OpNode, xe: AxeSpec):
+    """Inverse of ``moe_dispatch``: ``[E, C, d] → [T, d]`` un-routing
+    tokens to their source devices. Expert axes AllToAll back onto the
+    token dim when it divides (else AllGather); pending partial sums are
+    resolved first (the combine applies router weights — nonlinear in
+    the layout sense)."""
+    from repro.core.collective import AllGather, AllToAll, plan_comm_bytes
+
+    t = int(node.attr("tokens"))
+    mesh_shape = xe.space.mesh_shape
+    pre = ()
+    if xe.partial:
+        resolved = xe.with_placement(
+            {i: p for i, p in enumerate(xe.placement()) if p}
+        )
+        pre = (redistribute(xe, resolved, node.inputs[0]),)
+        xe = resolved
+    pxe = xe.placement()
+    expert_axes = pxe[0]
+    d_axes = pxe[2]
+    steps = []
+    out_t_axes = []
+    for a in expert_axes:
+        if t % math.prod(mesh_shape[x] for x in (out_t_axes + [a])) == 0:
+            steps.append(AllToAll(a, 0, 0))
+            out_t_axes.append(a)
+        else:
+            steps.append(AllGather(a, 0))
+    out = AxeSpec.sharded(
+        (t, xe.shape[2]), xe.space,
+        {i: a for i, a in ((0, tuple(out_t_axes)), (1, d_axes)) if a},
+        xe.dtype,
+    )
+    bytes_ = plan_comm_bytes(tuple(steps), xe.to_dtensor(), mesh_shape, _itemsize(xe.dtype))
+    redists = pre + (
+        (Redistribution(node.inputs[0], xe, out, tuple(steps), bytes_),) if steps else ()
+    )
+    return out, redists
+
+
+def rule_ssm_mix(node: OpNode, x: AxeSpec, b: AxeSpec, c: AxeSpec, dt: AxeSpec):
+    """The SSD state-space mixer ``(x [T, di], B [T, N], C [T, N],
+    dt [T, H]) → y [T, di]``. The recurrence is nonlinear in the layout
+    sense (decay gating), so pending partials resolve first; B/C/dt
+    align their token dim to x's and must be locally complete on their
+    feature dim (every head consumes the full state vectors)."""
+    mesh_shape = x.space.mesh_shape
+    px = x.placement()
+    redists = []
+    if x.partial:
+        resolved = x.with_placement({i: e for i, e in enumerate(px) if e})
+        redists.append(redistribute(x, resolved, node.inputs[0]))
+        x = resolved
+    t_axes = px[0]
+    for name, op in zip(node.inputs[1:], (b, c, dt)):
+        want_pl: Dict[int, Tuple[str, ...]] = {}
+        if t_axes:
+            ext = math.prod(mesh_shape[a] for a in t_axes)
+            if op.shape[0] % ext == 0:
+                want_pl[0] = t_axes
+        want = op.with_placement(want_pl)
+        if op.partial or not op.equivalent(want):
+            redists.append(redistribute(op, want, name))
+    out = AxeSpec.sharded(
+        x.shape, x.space, {i: e for i, e in enumerate(px) if e}, x.dtype
+    )
+    return out, tuple(redists)
+
+
 _RULES = {
     "matmul": rule_matmul,
     "attention": rule_attention,
     "moe_dispatch": rule_moe_dispatch,
+    "moe_combine": rule_moe_combine,
     "norm": rule_norm,
     "elementwise": rule_elementwise,
+    "reshape": rule_reshape,
+    "embed": rule_embed,
+    "ssm_mix": rule_ssm_mix,
 }
 
 

@@ -192,14 +192,27 @@ def param_specs(
     *,
     fsdp: bool = False,
     fsdp_axes: Sequence[str] = ("data",),
+    plan: Optional["PlanRules"] = None,
 ) -> Any:
-    """Pytree of AxeSpecs for a model param tree."""
+    """Pytree of AxeSpecs for a model param tree.
+
+    ``plan`` (a :func:`from_plan` resolver) overrides the preference
+    tables with solved placements: leaves whose path maps to a tensor
+    the layout solver assigned take the solved placement, everything
+    else falls back to the rules."""
     import jax
+
+    if plan is not None and not isinstance(plan, PlanRules):
+        plan = from_plan(plan)
 
     def assign(path, leaf):
         ps = path_str(path)
-        rule = rule_for(ps)
         dtype = _dtype_str(leaf)
+        if plan is not None:
+            solved = plan.spec_for(ps, leaf.shape, space, dtype)
+            if solved is not None:
+                return fsdp_extend(solved, axes=fsdp_axes) if fsdp else solved
+        rule = rule_for(ps)
         if rule is None or leaf.ndim == 0:
             spec = AxeSpec.replicated(leaf.shape, space, dtype)
         else:
@@ -263,16 +276,26 @@ def opt_specs(p_specs: Any, *, zero1: bool = True) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def _dp_entry(space: PhysicalSpace) -> PSpecEntry:
+def dp_entry(space: Union[PhysicalSpace, Mapping[str, int]]) -> PSpecEntry:
+    """The preference-list entry sharding one dim over every
+    data-parallel axis of ``space``: a tuple on multi-pod meshes, a bare
+    axis name on single-pod ones, ``None`` when the space has no DP axes
+    at all. This is the entry ``batch_specs`` / ``cache_specs`` (and the
+    op-graph builders in ``repro.axe.graphs``) put first in their
+    preference lists."""
     dp = dp_axes(space)
     return dp if len(dp) > 1 else (dp[0] if dp else None)
 
 
+#: deprecated private alias (pre-solver callers reached into this)
+_dp_entry = dp_entry
+
+
 def batch_specs(batch: Mapping[str, Any], space: PhysicalSpace) -> Dict[str, AxeSpec]:
-    dp_entry = _dp_entry(space)
+    dp = dp_entry(space)
     out = {}
     for k, v in batch.items():
-        out[k] = pick_spec(v.shape, [(dp_entry,), (None,)], space, _dtype_str(v))
+        out[k] = pick_spec(v.shape, [(dp,), (None,)], space, _dtype_str(v))
     return out
 
 
@@ -282,7 +305,7 @@ def cache_specs(cache: Any, space: PhysicalSpace) -> Any:
     sequence dim over `data` (long-context decode); heads over `model`."""
     import jax
 
-    dp_entry = _dp_entry(space)
+    dp = dp_entry(space)
 
     def assign(path, leaf):
         ps = path_str(path)
@@ -293,24 +316,24 @@ def cache_specs(cache: Any, space: PhysicalSpace) -> Any:
             # sequence sharding (long-context / non-dividing KV heads).
             lead = leaf.ndim - 4
             prefs = [
-                ((None,) * lead) + (dp_entry, None, "model", None),
-                ((None,) * lead) + (dp_entry, "model", None, None),
+                ((None,) * lead) + (dp, None, "model", None),
+                ((None,) * lead) + (dp, "model", None, None),
                 ((None,) * lead) + (None, ("data", "model"), None, None),
                 ((None,) * lead) + (None, "data", None, None),
-                ((None,) * lead) + (dp_entry, None, None, None),
+                ((None,) * lead) + (dp, None, None, None),
             ]
             return pick_spec(shape, prefs, space, dtype)
         if ps.endswith("ssm") and leaf.ndim >= 4:
             # [..., B, H, N, P]
             lead = leaf.ndim - 4
             prefs = [
-                ((None,) * lead) + (dp_entry, "model", None, None),
+                ((None,) * lead) + (dp, "model", None, None),
                 ((None,) * lead) + (None, "model", None, None),
             ]
             return pick_spec(shape, prefs, space, dtype)
         if ps.endswith("conv") and leaf.ndim >= 3:
             lead = leaf.ndim - 3
-            prefs = [((None,) * lead) + (dp_entry, None, None)]
+            prefs = [((None,) * lead) + (dp, None, None)]
             return pick_spec(shape, prefs, space, dtype)
         return AxeSpec.replicated(shape, space, dtype)
 
@@ -344,3 +367,141 @@ def sharding_tree(specs: Any, mesh) -> Any:
         specs,
         is_leaf=lambda x: isinstance(x, AxeSpec),
     )
+
+
+# ---------------------------------------------------------------------------
+# consuming solved layout plans (repro.axe.solve)
+# ---------------------------------------------------------------------------
+
+#: graph input tensor (base name, per repro.axe.graphs) → the param-rule
+#: names it covers as (param_name, param_rank, graph-dim → param-dim
+#: placement carry map). E.g. the fused QKV projection weight
+#: ``wqkv [d, (H+2KV)·hd]`` solves one placement whose feature axes land
+#: on the head dim (dim 1) of the separate rank-3 ``wq [d, H, hd]`` /
+#: ``wk``/``wv [d, KV, hd]`` param leaves.
+GRAPH_PARAM_TARGETS: Dict[
+    str, Tuple[Tuple[str, int, Tuple[Tuple[int, int], ...]], ...]
+] = {
+    "embed": (("embed", 2, ((0, 0), (1, 1))),),
+    "lm_head": (("lm_head", 2, ((0, 0), (1, 1))),),
+    "wqkv": (
+        ("wq", 3, ((0, 0), (1, 1))),
+        ("wk", 3, ((0, 0), (1, 1))),
+        ("wv", 3, ((0, 0), (1, 1))),
+    ),
+    "wo": (("attn.wo", 3, ((0, 0), (1, 2))),),
+    "wi": (
+        ("wi", 2, ((0, 0), (1, 1))),
+        ("wg", 2, ((0, 0), (1, 1))),
+        ("wu", 2, ((0, 0), (1, 1))),
+    ),
+    "wo2": (("mlp.wo", 2, ((0, 0), (1, 1))),),
+    "moe_wi": (
+        ("moe.wg", 3, ((0, 0), (1, 1), (2, 2))),
+        ("moe.wu", 3, ((0, 0), (1, 1), (2, 2))),
+    ),
+    "moe_wo": (("moe.wo", 3, ((0, 0), (1, 1), (2, 2))),),
+    "wx": (("wx", 2, ((0, 0), (1, 1))),),
+    "wz": (("wz", 2, ((0, 0), (1, 1))),),
+    "wB": (("wB", 2, ((0, 0), (1, 1))),),
+    "wC": (("wC", 2, ((0, 0), (1, 1))),),
+    "wdt": (("wdt", 2, ((0, 0), (1, 1))),),
+    "ssm_wo": (("ssm.wo", 2, ((0, 0), (1, 1))),),
+}
+
+
+class PlanRules:
+    """A solved-plan resolver for :func:`param_specs`.
+
+    Holds the solver's input assignment keyed by *base* tensor name
+    (layer prefixes like ``L0.`` stripped; the first layer's choice
+    wins — stacked/scanned param leaves carry one placement for every
+    layer) and translates it onto param-tree leaves via
+    :data:`GRAPH_PARAM_TARGETS`. Axes the leaf's dim extents do not
+    admit are dropped per-dim, exactly like the preference tables."""
+
+    def __init__(self, specs: Mapping[str, AxeSpec]):
+        self.specs: Dict[str, AxeSpec] = {}
+        self._by_param: Dict[str, Tuple[str, int, Tuple[Tuple[int, int], ...]]] = {}
+        for name in sorted(specs):
+            base = name.rsplit(".", 1)[-1]
+            if base in GRAPH_PARAM_TARGETS and base not in self.specs:
+                self.specs[base] = specs[name]
+        for base, targets in GRAPH_PARAM_TARGETS.items():
+            if base not in self.specs:
+                continue
+            for param_name, param_rank, dim_map in targets:
+                self._by_param.setdefault(param_name, (base, param_rank, dim_map))
+
+    def spec_for(
+        self,
+        path_string: str,
+        shape: Sequence[int],
+        space: PhysicalSpace,
+        dtype: str = "float32",
+    ) -> Optional[AxeSpec]:
+        """Solved AxeSpec for one param leaf, or None (fall back to the
+        rule tables). Resolution mirrors :func:`rule_for`: the leaf name
+        is context-qualified (``attn.wo`` vs ``mlp.wo``) by the path."""
+        segs = path_string.split(".")
+        name = segs[-1]
+        ctx = None
+        for s in segs[:-1]:
+            if s in _CTX_ALIASES:
+                ctx = _CTX_ALIASES[s]
+        entry = None
+        if ctx:
+            entry = self._by_param.get(f"{ctx}.{name}")
+        if entry is None and name != "wo":  # wo is always context-qualified
+            entry = self._by_param.get(name)
+        if entry is None:
+            return None
+        base, param_rank, dim_map = entry
+        solved = self.specs[base]
+        if solved.space != space:
+            return None
+        try:
+            solved_pl = solved.placement()
+        except SpecError:
+            return None
+        ndim = len(tuple(shape))
+        lead = ndim - param_rank
+        if lead < 0:
+            return None
+        mesh_shape = space.mesh_shape
+        placement: Dict[int, Tuple[str, ...]] = {}
+        for gdim, pdim in dim_map:
+            axes = solved_pl[gdim] if gdim < len(solved_pl) else ()
+            if not axes:
+                continue
+            ext = math.prod(mesh_shape[a] for a in axes)
+            if shape[lead + pdim] % ext == 0:
+                placement[lead + pdim] = axes
+        try:
+            return AxeSpec.sharded(shape, space, placement, dtype)
+        except SpecError:
+            return None
+
+
+def from_plan(plan: Any) -> PlanRules:
+    """Build the :class:`PlanRules` resolver from a solved layout.
+
+    Accepts a :class:`~repro.axe.solve.SolveResult`, a
+    :class:`~repro.axe.propagate.LayoutPlan`, or a plain
+    ``name → AxeSpec`` mapping (e.g. a solver assignment). This is the
+    path by which ``launch/train.py --solve`` and
+    ``ServeEngine(layout_plan=...)`` consume solver output instead of
+    the hand-written preference tables."""
+    if isinstance(plan, PlanRules):
+        return plan
+    env = getattr(plan, "assignment", None)
+    if env is None:
+        env = getattr(plan, "env", None)
+    if env is None and isinstance(plan, Mapping):
+        env = plan
+    if env is None:
+        raise TypeError(
+            f"from_plan wants a SolveResult, LayoutPlan, or name->AxeSpec "
+            f"mapping, got {type(plan).__name__}"
+        )
+    return PlanRules(env)

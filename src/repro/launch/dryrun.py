@@ -73,6 +73,64 @@ def layout_plan_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose: bo
     return record
 
 
+def solve_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    layers: int = 2,
+    beam: int = 4,
+    verbose: bool = True,
+    trace: bool = False,
+):
+    """Solve the whole-model layout for one cell — deviceless, like
+    ``--layout-plan``, but the compiler *chooses* the placements: beam
+    search over algebra-enumerated candidates (``repro.axe.solve``)
+    against the rule-seeded baseline. Reports solved vs seeded comm
+    bytes and the per-op decision trace, plus the planner schedule each
+    solved op keys (``tune.planner.schedule_from_specs``)."""
+    from repro.axe.graphs import model_graph
+    from repro.axe.solve import SolveError, solve
+    from repro.axe.spec import PhysicalSpace
+    from repro.tune import planner as tune_planner
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    space = PhysicalSpace.from_mesh_shape(_mesh_shape(multi_pod))
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "kind": shape.kind, "batch": shape.batch, "seq": shape.seq,
+        "layers": layers, "beam": beam,
+    }
+    try:
+        gs = model_graph(cfg, shape.batch, shape.seq, space, layers=layers)
+        res = solve(gs, beam=beam, backend="tpu")
+    except Exception as e:  # record an error row; never abort a sweep
+        record.update(status="error", error=f"{type(e).__name__}: {e}")
+        if not isinstance(e, SolveError):
+            record["traceback"] = traceback.format_exc()[-2000:]
+        return record
+    record["solve"] = res.to_dict()
+    # the tune-planner schedule each solved op dispatches to, keyed on
+    # the solved specs' canonical layout signature
+    schedules = {}
+    for e in res.plan.entries:
+        in_specs = [res.plan.env[i] for i in e.op.inputs]
+        sp = tune_planner.plan_from_specs(e.op.kind, in_specs, backend="tpu")
+        if sp is not None and sp.schedule is not None:
+            schedules[e.op.name] = {
+                "op": sp.op,
+                "layout_sig_len": len(sp.layout_sig),
+                "schedule": sp.schedule.describe(),
+            }
+    record["schedules"] = schedules
+    record["status"] = "ok"
+    if verbose:
+        print(res.describe(trace=trace))
+    return record
+
+
 def lower_cell(
     arch: str,
     shape_name: str,
@@ -253,6 +311,18 @@ def main():
     ap.add_argument("--remat-policy", default="full", choices=["full", "dots", "none"])
     ap.add_argument("--layout-plan", action="store_true",
                     help="report the propagated AxeSpec layout plan only (no lowering, no devices)")
+    ap.add_argument("--solve", action="store_true",
+                    help="solve the whole-model layout (beam search over the "
+                         "spec algebra) instead of seeding it; deviceless")
+    ap.add_argument("--solve-compare", action="store_true",
+                    help="solve and report solved vs rule-seeded comm bytes; "
+                         "sweeps every model-zoo config when --arch is omitted; "
+                         "exits nonzero if any solved plan out-spends its seed")
+    ap.add_argument("--solve-trace", action="store_true",
+                    help="with --solve: print the per-op decision trace")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="decoder depth of the solved model graph")
+    ap.add_argument("--beam", type=int, default=4, help="layout solver beam width")
     args = ap.parse_args()
 
     cells = []
@@ -261,13 +331,47 @@ def main():
             for shape in SHAPES:
                 for mesh in ("single", "multi"):
                     cells.append((arch, shape, mesh))
+    elif (args.solve or args.solve_compare) and not args.arch:
+        # the solver acceptance sweep: every model-zoo config
+        for arch in ARCH_IDS:
+            cells.append((arch, args.shape or "train_4k", args.mesh))
     else:
         assert args.arch and args.shape
         cells.append((args.arch, args.shape, args.mesh))
 
     out_f = open(args.out, "a") if args.out else None
     failures = 0
+    improved = 0
     for arch, shape, mesh in cells:
+        if args.solve or args.solve_compare:
+            rec = solve_cell(
+                arch, shape, mesh == "multi",
+                layers=args.layers, beam=args.beam,
+                verbose=args.solve and not args.solve_compare,
+                trace=args.solve_trace,
+            )
+            line = json.dumps(rec)
+            if rec["status"] != "ok":
+                failures += 1
+                print(line)
+            else:
+                s = rec["solve"]
+                solved, seeded = s["comm_bytes"], s["seeded_comm_bytes"]
+                if solved > seeded:
+                    failures += 1
+                if solved < seeded:
+                    improved += 1
+                print(f"SOLVE {arch} {shape} {mesh} "
+                      f"seeded={seeded / 2**20:.1f} MiB/dev "
+                      f"solved={solved / 2**20:.1f} MiB/dev "
+                      f"({100 * (1 - solved / seeded) if seeded else 0:+.1f}% saved) "
+                      f"J={1e3 * s['seeded_objective_s']:.2f}->"
+                      f"{1e3 * s['objective_s']:.2f} ms "
+                      f"{'OK' if solved <= seeded else 'WORSE'}")
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+            continue
         if args.layout_plan:
             rec = layout_plan_cell(arch, shape, mesh == "multi")
             line = json.dumps(rec)
@@ -317,6 +421,9 @@ def main():
             out_f.flush()
     if out_f:
         out_f.close()
+    if args.solve_compare and len(cells) > 1 and improved == 0:
+        print("SOLVE-COMPARE: no config strictly improved over its seeded plan")
+        failures += 1
     sys.exit(1 if failures else 0)
 
 

@@ -13,13 +13,15 @@ import argparse
 
 import jax
 
+from repro.axe import rules as axe_rules
+from repro.axe.spec import PhysicalSpace
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCH_IDS, get_config, smoke_variant
 from repro.data.pipeline import SyntheticLMData
 from repro.models.model_zoo import build_model
 from repro.optim.adamw import AdamW
 from repro.optim.schedule import warmup_cosine
-from repro.train import act_sharding, sharding as rules
+from repro.train import act_sharding
 from repro.train.train_loop import Trainer, init_state, make_train_step
 
 
@@ -37,6 +39,10 @@ def main():
     ap.add_argument("--mesh-data", type=int, default=0, help="0 = all local devices")
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--solve", action="store_true",
+                    help="solve param placements with the layout solver "
+                         "(repro.axe.solve) instead of the seeded rule tables")
+    ap.add_argument("--solve-beam", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -50,7 +56,8 @@ def main():
     from repro import compat
 
     mesh = compat.make_mesh((data_deg, args.mesh_model), ("data", "model"))
-    mesh_shape = rules.mesh_shape_of(mesh)
+    mesh_shape = axe_rules.mesh_shape_of(mesh)
+    space = PhysicalSpace.from_mesh_shape(mesh_shape)
     act_sharding.set_mesh(mesh if n_dev > 1 else None)
 
     api = build_model(cfg)
@@ -58,15 +65,28 @@ def main():
     opt = AdamW(learning_rate=warmup_cosine(args.lr, 20, args.steps))
     state = init_state(params, opt)
 
-    p_pspecs = rules.param_pspecs(params, mesh_shape, fsdp=n_dev > 1)
+    plan = None
+    if args.solve:
+        from repro.axe.graphs import model_graph
+        from repro.axe.solve import solve
+
+        gs = model_graph(cfg, args.global_batch, args.seq, space, layers=2)
+        res = solve(gs, beam=args.solve_beam, backend="tpu")
+        plan = axe_rules.from_plan(res)
+        print(f"layout solver: comm {res.seeded_comm_bytes / 2**20:.1f} -> "
+              f"{res.comm_bytes / 2**20:.1f} MiB/dev "
+              f"({100 * (res.comm_improvement or 0):.1f}% saved, "
+              f"beam={res.beam}, {res.explored} states)")
+
+    p_specs = axe_rules.param_specs(params, space, fsdp=n_dev > 1, plan=plan)
     state_sh = None
     if n_dev > 1:
         from repro.optim.adamw import AdamWState
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        o_pspecs = rules.opt_pspecs(params, p_pspecs, mesh_shape)
-        p_sh = rules.shardings_of(p_pspecs, mesh)
-        o_sh = rules.shardings_of(o_pspecs, mesh)
+        o_specs = axe_rules.opt_specs(p_specs)
+        p_sh = axe_rules.sharding_tree(p_specs, mesh)
+        o_sh = axe_rules.sharding_tree(o_specs, mesh)
         scalar = NamedSharding(mesh, P())
         state_sh = type(state)(p_sh, AdamWState(o_sh, o_sh, scalar), scalar)
         state = jax.device_put(state, state_sh)

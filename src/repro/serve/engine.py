@@ -29,7 +29,13 @@ class ServeEngine:
     through ``repro.axe.lower.to_named_sharding`` — the same propagated
     layout plan the trainer and dry-run use, never a hand-written
     PartitionSpec table. ``mesh=None`` (tests, single host) keeps the
-    unsharded behavior."""
+    unsharded behavior.
+
+    ``layout_plan`` goes one step further: a solved layout
+    (``repro.axe.solve.SolveResult``, a ``LayoutPlan``, or a plain
+    name→AxeSpec assignment) consumed through ``rules.from_plan`` —
+    param leaves the solver assigned take the *solved* placement and
+    only the rest fall back to the rule tables."""
 
     api: Any                 # ModelAPI
     batch_size: int
@@ -39,6 +45,7 @@ class ServeEngine:
     schedule_cache: Optional[str] = None
     force_schedule: Optional[Union[str, Mapping[str, str]]] = None
     mesh: Optional[Any] = None       # jax.sharding.Mesh
+    layout_plan: Optional[Any] = None  # SolveResult | LayoutPlan | {name: AxeSpec}
 
     def __post_init__(self):
         from repro import tune
@@ -59,7 +66,11 @@ class ServeEngine:
     def _place_params(self, params):
         from repro.axe import rules as axe_rules
 
-        specs = axe_rules.param_specs(params, self._space())
+        plan = (
+            axe_rules.from_plan(self.layout_plan)
+            if self.layout_plan is not None else None
+        )
+        specs = axe_rules.param_specs(params, self._space(), plan=plan)
         shardings = axe_rules.sharding_tree(specs, self.mesh)
         return jax.device_put(params, shardings)
 

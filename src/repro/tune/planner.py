@@ -443,3 +443,90 @@ def best_schedule(op: str, **kwargs) -> Optional[Schedule]:
     kernel-only request on an un-tileable shape)."""
     cands = plan(op, **kwargs)
     return cands[0].schedule if cands else None
+
+
+# ---------------------------------------------------------------------------
+# planning keyed on solved AxeSpecs (repro.axe.solve output)
+# ---------------------------------------------------------------------------
+
+#: layout-graph op kind → the planning family its local problem maps to
+_SPEC_FAMILIES = {
+    "matmul": "matmul",
+    "attention": "flash_attention",
+    "norm": "rmsnorm",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecPlan:
+    """Ranked schedules for the per-device problem one solved layout
+    induces, plus the exact ``get_schedule`` key that retrieves a tuned
+    winner for it from the cache."""
+
+    op: str
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    layout_sig: str
+    candidates: Tuple[Candidate, ...]
+
+    @property
+    def schedule(self) -> Optional[Schedule]:
+        return self.candidates[0].schedule if self.candidates else None
+
+
+def plan_from_specs(
+    kind: str,
+    in_specs: Sequence,
+    *,
+    backend: Optional[str] = None,
+    top_k: Optional[int] = None,
+) -> Optional[SpecPlan]:
+    """Plan schedules for the *local* (per-device) problem a solved
+    layout assignment leaves one op with.
+
+    ``in_specs`` are the operand AxeSpecs the layout solver (or the
+    propagation pass) settled on; their ``local_shape()`` is the problem
+    the kernel actually runs, and their canonical signatures become the
+    schedule-cache layout key — so a schedule tuned for a solved layout
+    is keyed by that layout, not by the global shapes. Returns None for
+    op kinds with no planning family (elementwise, reshape, ...)."""
+    family = _SPEC_FAMILIES.get(kind)
+    if family is None:
+        return None
+    from repro.tune.schedule import layout_signature
+
+    locals_ = [tuple(s.local_shape()) for s in in_specs]
+    dtypes = tuple(s.dtype for s in in_specs)
+    if kind == "matmul" and len(locals_[1]) == 3:
+        family = "moe_gemm"          # grouped per-expert GEMM
+    if kind == "matmul" and len(locals_[0]) > 2 and family == "matmul":
+        # flatten leading batch dims into M for the 2D tiled kernel
+        m = 1
+        for d in locals_[0][:-1]:
+            m *= d
+        locals_ = [(m, locals_[0][-1])] + locals_[1:]
+    sig = layout_signature(*in_specs)
+    cands = plan(
+        family, shapes=locals_, dtypes=dtypes, backend=backend, top_k=top_k
+    )
+    return SpecPlan(family, tuple(locals_), dtypes, sig, tuple(cands))
+
+
+def schedule_from_specs(
+    kind: str,
+    in_specs: Sequence,
+    *,
+    backend: Optional[str] = None,
+) -> Optional[Schedule]:
+    """The dispatch-ready schedule for one solved-layout op: resolves
+    through ``tune.get_schedule`` (forced → cached → planned), keyed on
+    the solved specs' canonical layout signature."""
+    sp = plan_from_specs(kind, in_specs, backend=backend)
+    if sp is None:
+        return None
+    from repro import tune
+
+    return tune.get_schedule(
+        sp.op, shapes=sp.shapes, dtypes=sp.dtypes,
+        layout_sig=sp.layout_sig, backend=backend,
+    )

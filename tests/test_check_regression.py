@@ -1,0 +1,75 @@
+"""benchmarks/check_regression.py: the nightly kernel regression gate."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.check_regression import find_regressions  # noqa: E402
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _payload(**rows_by_section):
+    return {
+        "version": 1,
+        "sections": {
+            sec: {"backend": "cpu",
+                  "rows": {k: {"us": v, "derived": ""} for k, v in rows.items()}}
+            for sec, rows in rows_by_section.items()
+        },
+    }
+
+
+def test_no_regression_within_threshold():
+    base = _payload(gemm={"gemm.kernel": 100.0})
+    cur = _payload(gemm={"gemm.kernel": 115.0})
+    regs, _ = find_regressions(base, cur, 0.20)
+    assert regs == []
+
+
+def test_regression_past_threshold_detected():
+    base = _payload(gemm={"gemm.kernel": 100.0}, mha={"mha.kernel": 50.0})
+    cur = _payload(gemm={"gemm.kernel": 121.0}, mha={"mha.kernel": 50.0})
+    regs, _ = find_regressions(base, cur, 0.20)
+    assert len(regs) == 1 and "gemm.kernel" in regs[0]
+
+
+def test_missing_and_new_rows_are_notes_not_failures():
+    base = _payload(gemm={"gemm.kernel": 100.0, "gemm.gone": 10.0})
+    cur = _payload(gemm={"gemm.kernel": 100.0, "gemm.new": 5.0})
+    regs, notes = find_regressions(base, cur, 0.20)
+    assert regs == []
+    assert any("gemm.gone" in n and "missing" in n for n in notes)
+    assert any("gemm.new" in n and "new row" in n for n in notes)
+
+
+def test_improvements_are_noted():
+    base = _payload(gemm={"gemm.kernel": 100.0})
+    cur = _payload(gemm={"gemm.kernel": 50.0})
+    regs, notes = find_regressions(base, cur, 0.20)
+    assert regs == []
+    assert any("improved" in n for n in notes)
+
+
+def test_cli_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    cur_ok = tmp_path / "ok.json"
+    cur_bad = tmp_path / "bad.json"
+    base.write_text(json.dumps(_payload(gemm={"gemm.kernel": 100.0})))
+    cur_ok.write_text(json.dumps(_payload(gemm={"gemm.kernel": 105.0})))
+    cur_bad.write_text(json.dumps(_payload(gemm={"gemm.kernel": 200.0})))
+    cmd = [sys.executable, str(REPO / "benchmarks" / "check_regression.py"),
+           "--baseline", str(base)]
+    ok = subprocess.run(cmd + ["--current", str(cur_ok)], capture_output=True)
+    bad = subprocess.run(cmd + ["--current", str(cur_bad)], capture_output=True)
+    assert ok.returncode == 0, ok.stdout
+    assert bad.returncode == 1
+    assert b"REGRESSION" in bad.stdout
+
+
+def test_gate_accepts_committed_baseline_against_itself():
+    baseline = json.loads((REPO / "BENCH_kernels.json").read_text())
+    regs, _ = find_regressions(baseline, baseline, 0.20)
+    assert regs == []

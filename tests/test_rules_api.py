@@ -1,0 +1,164 @@
+"""Public rules API: dp_entry / pick_spec (promoted from the private
+helpers the graph builders used to reach into) and the from_plan path
+that lets train/ and serve/ consume solved layouts."""
+import jax
+import jax.numpy as jnp
+
+from repro.axe import rules
+from repro.axe.spec import AxeSpec, PhysicalSpace
+
+SPACE = PhysicalSpace.from_mesh_shape({"data": 4, "model": 4})
+POD_SPACE = PhysicalSpace.from_mesh_shape({"pod": 2, "data": 4, "model": 4})
+TP_ONLY = PhysicalSpace.from_mesh_shape({"model": 4})
+
+
+# ---------------------------------------------------------------------------
+# dp_entry / pick_spec: the promoted public helpers
+# ---------------------------------------------------------------------------
+
+
+def test_dp_entry_single_pod():
+    assert rules.dp_entry(SPACE) == "data"
+
+
+def test_dp_entry_multi_pod_is_tuple():
+    assert rules.dp_entry(POD_SPACE) == ("pod", "data")
+
+
+def test_dp_entry_no_dp_axes():
+    assert rules.dp_entry(TP_ONLY) is None
+
+
+def test_dp_entry_accepts_mesh_shape_mapping():
+    assert rules.dp_entry({"data": 4, "model": 4}) == "data"
+
+
+def test_private_alias_still_works():
+    assert rules._dp_entry is rules.dp_entry
+
+
+def test_pick_spec_first_admissible_preference_wins():
+    spec = rules.pick_spec(
+        (64, 128), [(None, "model"), (None, None)], SPACE, "float32"
+    )
+    assert spec.placement() == ((), ("model",))
+
+
+def test_pick_spec_falls_through_inadmissible():
+    # 6 % 4 != 0: head-sharding rejected, row-parallel fallback wins
+    spec = rules.pick_spec(
+        (64, 6), [(None, "model"), ("model", None)], SPACE, "float32"
+    )
+    assert spec.placement() == (("model",), ())
+
+
+def test_pick_spec_final_fallback_is_replication():
+    spec = rules.pick_spec((3, 5), [("model", "data")], SPACE, "float32")
+    assert spec.placement() == ((), ())
+
+
+def test_graphs_use_public_api_only():
+    import inspect
+
+    from repro.axe import graphs
+
+    src = inspect.getsource(graphs)
+    assert "_dp_entry" not in src
+    assert "rules.dp_entry" in src
+
+
+# ---------------------------------------------------------------------------
+# from_plan: solved placements onto param trees
+# ---------------------------------------------------------------------------
+
+
+def _solved_assignment():
+    # a solver-style assignment: fused QKV column-parallel, attn out
+    # row-parallel, embed feature-sharded (layer prefixes included)
+    return {
+        "L0.wqkv": AxeSpec.sharded((64, 96), SPACE, {1: ("model",)}),
+        "L0.wo": AxeSpec.sharded((32, 64), SPACE, {0: ("model",)}),
+        "L1.wqkv": AxeSpec.sharded((64, 96), SPACE, {}),  # L0 wins
+        "embed": AxeSpec.sharded((512, 64), SPACE, {1: ("model",)}),
+        "L0.wi": AxeSpec.sharded((64, 256), SPACE, {1: ("model",)}),
+        "L0.wo2": AxeSpec.sharded((256, 64), SPACE, {0: ("model",)}),
+    }
+
+
+def test_from_plan_translates_fused_qkv_to_param_leaves():
+    plan = rules.from_plan(_solved_assignment())
+    # wq [d, H, hd]: the fused dim-1 axes land on the head dim
+    spec = plan.spec_for("blocks.attn.wq", (64, 8, 4), SPACE)
+    assert spec is not None
+    assert spec.placement() == ((), ("model",), ())
+    # wo [H, hd, d]: graph dim 1 (d_model) lands on param dim 2
+    spec = plan.spec_for("blocks.attn.wo", (8, 4, 64), SPACE)
+    assert spec.placement() == (("model",), (), ())
+
+
+def test_from_plan_handles_stacked_leading_dims():
+    plan = rules.from_plan(_solved_assignment())
+    # scanned blocks stack a leading layer dim; it stays unsharded
+    spec = plan.spec_for("blocks.attn.wq", (12, 64, 8, 4), SPACE)
+    assert spec.placement() == ((), (), ("model",), ())
+
+
+def test_from_plan_drops_inadmissible_axes_per_dim():
+    plan = rules.from_plan(_solved_assignment())
+    # 6 kv heads % 4 != 0: the carried axis is dropped, not an error
+    spec = plan.spec_for("blocks.attn.wk", (64, 6, 4), SPACE)
+    assert spec is not None
+    assert spec.placement() == ((), (), ())
+
+
+def test_from_plan_unknown_leaf_falls_back_to_rules():
+    plan = rules.from_plan(_solved_assignment())
+    assert plan.spec_for("blocks.attn.q_norm", (4,), SPACE) is None
+
+
+def test_param_specs_consumes_plan():
+    params = {
+        "embed": jnp.zeros((512, 64)),
+        "blocks": {
+            "attn": {
+                "wq": jnp.zeros((64, 8, 4)),
+                "wo": jnp.zeros((8, 4, 64)),
+            },
+            "mlp": {"wi": jnp.zeros((64, 256)), "wo": jnp.zeros((256, 64))},
+        },
+    }
+    space = SPACE
+    solved = rules.param_specs(params, space, plan=_solved_assignment())
+    seeded = rules.param_specs(params, space)
+    assert solved["embed"].placement() == ((), ("model",))
+    # the seeded embed rule prefers vocab-sharding; the plan overrode it
+    assert seeded["embed"].placement() == (("model",), ())
+    assert solved["blocks"]["attn"]["wq"].placement() == ((), ("model",), ())
+    assert solved["blocks"]["mlp"]["wo"].placement() == (("model",), ())
+    # leaves the plan does not cover still come from the tables
+    leaves = jax.tree_util.tree_leaves(
+        solved, is_leaf=lambda x: isinstance(x, AxeSpec)
+    )
+    assert all(isinstance(s, AxeSpec) for s in leaves)
+
+
+def test_from_plan_accepts_solve_result():
+    from repro.axe.graphs import model_graph
+    from repro.axe.solve import solve
+    from repro.configs import get_config
+
+    space = PhysicalSpace.from_mesh_shape({"data": 16, "model": 16})
+    cfg = get_config("qwen3-4b")
+    res = solve(model_graph(cfg, 8, 512, space, layers=2), beam=2)
+    plan = rules.from_plan(res)
+    assert plan.specs  # solver input assignment reached the resolver
+    spec = plan.spec_for("blocks.attn.wq", (2560 // 1, 32, 128), space)
+    # either a solved placement or a clean fallback — never an error
+    assert spec is None or isinstance(spec, AxeSpec)
+
+
+def test_from_plan_rejects_garbage():
+    import pytest
+
+    with pytest.raises(TypeError):
+        rules.from_plan(42)
