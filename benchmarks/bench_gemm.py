@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import pathlib
 import sys
-import warnings
 
 if __package__ in (None, ""):  # script mode: make `benchmarks.*` importable
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
@@ -96,10 +95,12 @@ def run(mode: str = "default") -> list:
 
 
 def run_program_mode() -> list:
-    """DSL path vs the legacy shim path, pinned to identical schedules,
-    plus the MESH-scope dispatch at the paper shapes — the perf baseline
-    later PRs diff against (BENCH_kernels.json)."""
-    from repro.kernels import ops as legacy_ops
+    """DSL path vs the raw pinned launcher, identical schedules, plus
+    the MESH-scope dispatch at the paper shapes — the perf baseline
+    later PRs diff against (BENCH_kernels.json). (The legacy
+    ``kernels.ops`` shim this used to compare against was removed after
+    its deprecation window.)"""
+    from repro.kernels.matmul import matmul_pallas
 
     rows = []
     m, k, n = PROGRAM_SHAPE
@@ -109,18 +110,18 @@ def run_program_mode() -> list:
     us_prog = time_jitted(
         lambda a, b: programs.matmul(a, b, stage="tile", impl="kernel",
                                      blocks=PROGRAM_BLOCKS), a, b)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        us_shim = time_jitted(
-            lambda a, b: legacy_ops.matmul(a, b, **{
-                "block_m": PROGRAM_BLOCKS["bm"],
-                "block_n": PROGRAM_BLOCKS["bn"],
-                "block_k": PROGRAM_BLOCKS["bk"]}), a, b)
-    delta = (us_shim - us_prog) / us_shim * 100.0
+    us_launch = time_jitted(
+        lambda a, b: matmul_pallas(a, b,
+                                   block_m=PROGRAM_BLOCKS["bm"],
+                                   block_n=PROGRAM_BLOCKS["bn"],
+                                   block_k=PROGRAM_BLOCKS["bk"],
+                                   interpret=jax.default_backend() != "tpu"),
+        a, b)
+    delta = (us_launch - us_prog) / us_launch * 100.0
     rows.append(row("gemm.program.kernel", us_prog,
                     f"matmul/tile kernel:{PROGRAM_BLOCKS}"))
-    rows.append(row("gemm.shim.kernel", us_shim,
-                    f"legacy kernels.ops.matmul; program delta={delta:+.1f}%"))
+    rows.append(row("gemm.launcher.kernel", us_launch,
+                    f"matmul_pallas pinned blocks; program delta={delta:+.1f}%"))
 
     for name, m, k, n in SHAPES[:2]:
         k1, k2 = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(0),

@@ -1,0 +1,77 @@
+"""End-to-end compiled-forward benchmark: ``axe.compile`` executables
+over the model-zoo graphs (dense / MoE / SSM smoke configs), reporting
+wall time and tokens/s per config, merged into ``BENCH_graph.json`` for
+the nightly regression gate (``benchmarks/check_regression.py``).
+
+Usage:
+    python benchmarks/bench_graph.py [--batch 4] [--seq 64]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # script mode: make `benchmarks.*` importable
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_jitted, write_bench_json
+
+BENCH_GRAPH_JSON = "BENCH_graph.json"
+
+ARCHS = ("qwen3-4b", "qwen3-moe-235b-a22b", "mamba2-2.7b")
+
+
+def run(batch: int, seq: int) -> list:
+    from repro import axe, compat
+    from repro.configs import get_config, smoke_variant
+    from repro.models.model_zoo import build_model
+
+    n_dev = len(jax.devices())
+    model_deg = 4 if n_dev % 4 == 0 else n_dev
+    mesh = compat.make_mesh((n_dev // model_deg, model_deg), ("data", "model"))
+
+    rows = []
+    for arch in ARCHS:
+        cfg = smoke_variant(get_config(arch))
+        if cfg.is_moe:
+            cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(1), (batch * seq,), 0, cfg.vocab_size, jnp.int32
+        )
+        exe = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype)
+        inputs = axe.model_inputs(exe.graph, cfg, params)
+        us = time_jitted(exe, inputs, tokens)
+        tok_s = batch * seq / (us / 1e6)
+        rows.append(row(
+            f"graph.forward.{arch}", us,
+            f"compiled forward {batch}x{seq} tokens/s={tok_s:.0f} "
+            f"collectives={len(exe.collective_sequence())} "
+            f"comm={exe.plan.total_comm_bytes}B/dev",
+        ))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    rows = run(args.batch, args.seq)
+    path = write_bench_json(
+        "graph", rows, filename=BENCH_GRAPH_JSON,
+    )
+    for r in rows:
+        print(r)
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -73,11 +73,11 @@ def run(mode: str = "default") -> list:
 
 
 def run_program_mode() -> list:
-    """DSL path vs the legacy shim path for the flash-attention kernel
-    (interpret mode, identical blocks), appended to BENCH_kernels.json."""
-    import warnings
-
-    from repro.kernels import ops as legacy_ops
+    """DSL path vs the raw pinned launcher for the flash-attention
+    kernel (interpret mode, identical blocks), appended to
+    BENCH_kernels.json. (The legacy ``kernels.ops`` shim this used to
+    compare against was removed after its deprecation window.)"""
+    from repro.kernels.flash_attention import flash_attention_pallas
 
     rows = []
     q = jax.random.normal(jax.random.PRNGKey(7), (1, 2, 256, 64), jnp.float32)
@@ -87,16 +87,15 @@ def run_program_mode() -> list:
     us_prog = time_jitted(
         lambda q, k, v: programs.flash_attention(q, k, v, causal=True,
                                                  blocks=blocks), q, k, v)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        us_shim = time_jitted(
-            lambda q, k, v: legacy_ops.flash_attention(
-                q, k, v, causal=True, block_q=128, block_kv=128), q, k, v)
-    delta = (us_shim - us_prog) / us_shim * 100.0
+    us_launch = time_jitted(
+        lambda q, k, v: flash_attention_pallas(
+            q, k, v, causal=True, block_q=128, block_kv=128,
+            interpret=jax.default_backend() != "tpu"), q, k, v)
+    delta = (us_launch - us_prog) / us_launch * 100.0
     rows.append(row("mha.program.kernel", us_prog,
                     "flash_attention/attend kernel:bq=128,bkv=128"))
-    rows.append(row("mha.shim.kernel", us_shim,
-                    f"legacy kernels.ops.flash_attention; program delta={delta:+.1f}%"))
+    rows.append(row("mha.launcher.kernel", us_launch,
+                    f"flash_attention_pallas pinned blocks; program delta={delta:+.1f}%"))
     # the MESH-scope blocked-softmax schedule at one paper length
     s = 1024
     ks = jax.random.split(jax.random.PRNGKey(s), 3)

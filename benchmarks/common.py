@@ -30,16 +30,21 @@ def row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
 
 
-def bench_json_path() -> str:
-    return os.path.join(os.environ.get("REPRO_BENCH_DIR", "."), BENCH_KERNELS_JSON)
+def bench_json_path(filename: str = BENCH_KERNELS_JSON) -> str:
+    return os.path.join(os.environ.get("REPRO_BENCH_DIR", "."), filename)
 
 
-def write_bench_json(section: str, rows: Sequence[str], *, backend: str = "") -> str:
-    """Merge one benchmark's rows into ``BENCH_kernels.json`` (keyed by
-    section so bench_gemm and bench_mha share one baseline file later
-    PRs diff against). Rows are the ``row()`` strings; parsed here so
-    the JSON carries structured ``us``/``derived`` fields."""
-    path = bench_json_path()
+def write_bench_json(
+    section: str, rows: Sequence[str], *, backend: str = "",
+    filename: str = BENCH_KERNELS_JSON,
+) -> str:
+    """Merge one benchmark's rows into a ``BENCH_*.json`` baseline file
+    (``BENCH_kernels.json`` by default; ``bench_graph`` writes
+    ``BENCH_graph.json``), keyed by section so benchmarks share one
+    baseline file later PRs diff against. Rows are the ``row()``
+    strings; parsed here so the JSON carries structured
+    ``us``/``derived`` fields."""
+    path = bench_json_path(filename)
     try:
         with open(path) as f:
             data = json.load(f)

@@ -17,3 +17,13 @@ def warn_deprecated(
         DeprecationWarning,
         stacklevel=stacklevel,
     )
+
+
+def removed(old: str, new: str, doc: str = "docs/kernel-dsl.md") -> AttributeError:
+    """The end of a shim's deprecation window: modules whose
+    warn-and-delegate bodies were deleted keep a ``__getattr__`` that
+    raises this, so stale imports fail with the migration pointer
+    instead of an opaque AttributeError."""
+    return AttributeError(
+        f"{old} was removed after its deprecation window; use {new} (see {doc})"
+    )

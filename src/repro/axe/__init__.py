@@ -12,6 +12,9 @@ written against it (docs/kernel-dsl.md).
   as graphs of scope-tagged stages (MESH / GRID / BLOCK), schedules
   keyed ``program_name/stage_name`` through ``repro.tune``
 * ``repro.axe.stages``    — the :class:`Stage` unit + scope validation
+* ``repro.axe.compile``   — ``axe.compile``: GraphSpec + LayoutPlan →
+  a jitted :class:`Executable` whose ops bind to the kernel programs
+  and whose redistributions are real collectives (docs/compile.md)
 """
 from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
 from repro.axe.program import (
@@ -54,12 +57,27 @@ from repro.axe.solve import (
     enumerate_specs,
     solve,
 )
+from repro.axe.compile import (
+    CompileError,
+    Executable,
+    LoweredOp,
+    compile,
+    compiled_loss_fn,
+    model_executable,
+    model_inputs,
+    op_backend,
+    plan_covers,
+    register_op_backend,
+)
 
 __all__ = [
     "AxeSpec",
     "BlockLowering",
+    "CompileError",
     "Decision",
+    "Executable",
     "GraphSpec",
+    "LoweredOp",
     "LayoutPlan",
     "OpNode",
     "PROGRAMS",
@@ -77,12 +95,19 @@ __all__ = [
     "StageError",
     "TensorMeta",
     "block_lowering",
+    "compile",
+    "compiled_loss_fn",
     "decoder_layer_graph",
     "enumerate_specs",
     "get_program",
     "kernel",
+    "model_executable",
     "model_graph",
+    "model_inputs",
+    "op_backend",
+    "plan_covers",
     "program",
+    "register_op_backend",
     "solve",
     "from_pspec",
     "from_sharding",

@@ -1,0 +1,893 @@
+"""``axe.compile`` — one Executable API from GraphSpec + LayoutPlan to
+running numerics (docs/compile.md).
+
+This is the surface the repo standardizes on: ``axe.compile(graph,
+mesh, plan)`` turns a :class:`~repro.axe.graphs.GraphSpec` plus a
+solved (or given) layout into a callable, jitted, pytree-in/pytree-out
+function. The compiler:
+
+1. **solves** the layout when ``plan is None`` (``repro.axe.solve``);
+2. **binds** each graph op to a backend — the ``axe.program`` kernel
+   programs (matmul / flash_attention / moe_gemm / rmsnorm) where one
+   matches, jnp bodies otherwise — through the public
+   :data:`OP_BACKENDS` table (:func:`register_op_backend`), mirroring
+   ``propagate``'s rule registry; operand AxeSpecs ride along as
+   ``arg_specs`` so every program stage resolves its schedule under the
+   solved layout's signature (``repro.tune``);
+3. **inserts** the redistribution collectives the plan recorded
+   (``propagate.infer_redistribution``) between ops inside a single
+   ``shard_map``, so the solver's comm estimates become real transfers
+   — ``launch.dryrun --execute`` cross-checks the issued sequence
+   against the solver's :class:`~repro.axe.solve.Decision` trace.
+
+The body runs in DEVICE scope: program dispatches lower to Pallas
+launches on TPU and resolve to their XLA variants (via the planner's
+interpret-penalty ranking) on CPU — one binding, both backends.
+
+``model_inputs`` maps a reference model param pytree
+(``repro.models``) onto graph inputs + the auxiliary tensors the
+execution attrs name, and ``model_executable`` / ``compiled_loss_fn``
+are the consumer-facing constructors ``ServeEngine``,
+``launch/train.py --solve`` and ``launch/dryrun.py --execute`` build
+their forward passes from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.axe.graphs import GraphSpec
+from repro.axe.propagate import LayoutPlan, OpNode, PlanEntry
+from repro.axe.solve import SolveResult, evaluate_env, finalize_entries, solve
+from repro.axe.spec import AxeSpec
+from repro.core import collective as coll
+from repro.core.scopes import Scope, scope
+
+
+class CompileError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# the op-backend registry (mirrors propagate._RULES)
+# ---------------------------------------------------------------------------
+
+#: op kind → backend callable ``(ctx, *local_operands) -> local output``
+OP_BACKENDS: Dict[str, Callable] = {}
+
+
+def register_op_backend(kind: str, fn: Optional[Callable] = None):
+    """Register (or decorate) the execution backend for one op kind.
+
+    The backend receives an :class:`ExecCtx` (node attrs, post-
+    redistribution operand specs, auxiliary tensors, mesh helpers) and
+    the operand arrays *as device-local shards inside the executable's
+    shard_map*; it returns the local output shard matching the plan's
+    output spec."""
+
+    def deco(f: Callable) -> Callable:
+        OP_BACKENDS[kind] = f
+        return f
+
+    return deco(fn) if fn is not None else deco
+
+
+def op_backend(kind: str) -> Callable:
+    try:
+        return OP_BACKENDS[kind]
+    except KeyError:
+        raise CompileError(
+            f"no execution backend for op kind {kind!r} "
+            f"(registered: {sorted(OP_BACKENDS)}); add one with "
+            f"compile.register_op_backend"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# execution context handed to backends
+# ---------------------------------------------------------------------------
+
+
+class ExecCtx:
+    """What one op backend sees: the node, the operand specs *after*
+    the plan's redistributions, the shared auxiliary tensors, and the
+    mesh arithmetic helpers."""
+
+    def __init__(self, node: OpNode, entry: PlanEntry, in_specs, aux, side,
+                 shape_steps, mesh_shape, interpret: bool):
+        self.node = node
+        self.entry = entry
+        self.in_specs = tuple(in_specs)
+        self.out_spec: AxeSpec = entry.out_spec
+        self._aux = aux
+        self.side = side
+        #: collective steps of the plan's shape-changing redistribution
+        #: (MoE dispatch/combine own their exchange; everything else ())
+        self.shape_steps = tuple(shape_steps)
+        self.mesh_shape = dict(mesh_shape)
+        self.interpret = interpret
+
+    def attr(self, key: str, default=None):
+        return self.node.attr(key, default)
+
+    def aux(self, name: Optional[str], *, required: bool = True):
+        if name is None:
+            return None
+        arr = self._aux.get(name)
+        if arr is None and required:
+            raise CompileError(
+                f"{self.node.name}: auxiliary tensor {name!r} missing from "
+                f"the executable's params (see compile.model_inputs)"
+            )
+        return arr
+
+    def ext(self, axes: Sequence[str]) -> int:
+        return math.prod(self.mesh_shape[a] for a in axes) if axes else 1
+
+    def out_spec_dtype(self):
+        return jnp.dtype(self.out_spec.dtype)
+
+    def axis_index(self, axes: Sequence[str]):
+        """This device's combined shard index over ``axes`` (placement
+        order: first axis is major — the AxeSpec iter order)."""
+        idx = 0
+        for a in axes:
+            idx = idx * self.mesh_shape[a] + jax.lax.axis_index(a)
+        return idx
+
+
+# ---------------------------------------------------------------------------
+# default backends
+# ---------------------------------------------------------------------------
+
+
+@register_op_backend("matmul")
+def _exec_matmul(ctx: ExecCtx, a, b):
+    """2D matmuls bind to the ``matmul`` program, grouped (rank-3
+    weight) matmuls to ``moe_gemm``; a K-sharded local dot yields the
+    partial sums the out spec's ``partial`` axes announce."""
+    from repro.kernels import programs
+
+    if b.ndim == 3:
+        return programs.moe_gemm(
+            a, b, arg_specs=ctx.in_specs, interpret=ctx.interpret
+        )
+    return programs.matmul(a, b, arg_specs=ctx.in_specs, interpret=ctx.interpret)
+
+
+@register_op_backend("norm")
+def _exec_norm(ctx: ExecCtx, x):
+    from repro.kernels import programs
+
+    w = ctx.aux(ctx.attr("weight"), required=False)
+    if w is None:
+        w = jnp.ones((x.shape[-1],), x.dtype)
+    return programs.rmsnorm(x, w, arg_specs=ctx.in_specs[:1], interpret=ctx.interpret)
+
+
+@register_op_backend("elementwise")
+def _exec_elementwise(ctx: ExecCtx, *xs):
+    fn = ctx.attr("fn", "add")
+    if fn == "add":
+        out = xs[0]
+        for x in xs[1:]:
+            out = out + x
+        return out
+    if fn == "swiglu":
+        return jax.nn.silu(xs[0]) * xs[1]
+    if fn == "mul_silu":
+        return xs[0] * jax.nn.silu(xs[1])
+    if fn == "gelu":
+        return jax.nn.gelu(xs[0])
+    raise CompileError(f"{ctx.node.name}: unknown elementwise fn {fn!r}")
+
+
+@register_op_backend("embed")
+def _exec_embed(ctx: ExecCtx, tok, table):
+    """Token lookup; a vocab-sharded table answers only its own rows
+    (zeros elsewhere), producing the partial sums the spec declares."""
+    v_axes = ctx.in_specs[1].placement()[0]
+    if not v_axes:
+        return table[tok]
+    v_local = table.shape[0]
+    start = ctx.axis_index(v_axes) * v_local
+    idx = tok - start
+    valid = (idx >= 0) & (idx < v_local)
+    safe = jnp.clip(idx, 0, v_local - 1)
+    return jnp.where(valid[:, None], table[safe], jnp.zeros((), table.dtype))
+
+
+@register_op_backend("reshape")
+def _exec_reshape(ctx: ExecCtx, x):
+    """Value-preserving boundaries. ``select`` attrs mark the model
+    boundaries with real math: q/k/v head split (+ qk-norm + rope, per
+    the reference models) and the head merge before the output
+    projection; plain reshapes map locally."""
+    sel = ctx.attr("select")
+    out_local = ctx.out_spec.local_shape()
+    if sel in ("q", "k", "v"):
+        from repro.models.common import rmsnorm, rope
+
+        b_l, n_l, s, hd = out_local
+        y = x.reshape(b_l, s, n_l, hd)
+        w = ctx.aux(ctx.attr("norm_weight"), required=False)
+        if w is not None:
+            y = rmsnorm(y, w)
+        theta = ctx.attr("rope_theta")
+        if theta:
+            y = rope(y, jnp.arange(s)[None, :], theta)
+        return y.transpose(0, 2, 1, 3)
+    if sel == "merge_heads":
+        t_l, nhd_l = out_local
+        return x.transpose(0, 2, 1, 3).reshape(t_l, nhd_l)
+    return x.reshape(out_local)
+
+
+@register_op_backend("attention")
+def _exec_attention(ctx: ExecCtx, q, k, v):
+    """Binds to the ``flash_attention`` program; GQA kv heads broadcast
+    locally (aligned to this device's query-head chunk when only the
+    query heads are sharded)."""
+    q_spec, k_spec = ctx.in_specs[0], ctx.in_specs[1]
+    if q_spec.placement()[2]:
+        raise CompileError(
+            f"{ctx.node.name}: sharded query sequence is not executable "
+            f"(causal masking needs local positions); got {q_spec!r}"
+        )
+    h_axes = q_spec.placement()[1]
+    kv_axes = k_spec.placement()[1]
+    g = q_spec.shape[1] // k_spec.shape[1]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+        if h_axes and not kv_axes:
+            start = ctx.axis_index(h_axes) * q.shape[1]
+            k = jax.lax.dynamic_slice_in_dim(k, start, q.shape[1], axis=1)
+            v = jax.lax.dynamic_slice_in_dim(v, start, q.shape[1], axis=1)
+        elif h_axes and kv_axes != h_axes:
+            raise CompileError(
+                f"{ctx.node.name}: query/kv head shardings disagree "
+                f"({h_axes} vs {kv_axes})"
+            )
+    # the trainable wrapper runs the flash program forward and a
+    # recompute backward, so compiled executables stay differentiable
+    # (compiled_loss_fn / launch.train --solve)
+    from repro.kernels.flash_attention import flash_attention_trainable
+
+    return flash_attention_trainable(
+        q, k, v,
+        bool(ctx.attr("causal", True)),
+        ctx.attr("window"),
+        None,
+        ctx.interpret,
+    )
+
+
+@register_op_backend("moe_dispatch")
+def _exec_moe_dispatch(ctx: ExecCtx, x):
+    """Capacity routing on this device's token shard, then the plan's
+    expert-axis exchange: AllToAll steps swap capacity buffers with the
+    other token shards on the axis (classic expert parallelism);
+    DynamicSlice steps keep only this device's expert chunk."""
+    from repro.models import moe as moe_mod
+
+    e = int(ctx.attr("experts"))
+    c = int(ctx.attr("capacity"))
+    k = int(ctx.attr("experts_per_tok", 1))
+    router = ctx.aux(ctx.attr("router"))
+    t_axes = ctx.in_specs[0].placement()[0]
+    c_src = c // ctx.ext(t_axes)
+    buf, meta = moe_mod.local_dispatch(
+        x, router, num_experts=e, experts_per_tok=k, capacity=c_src
+    )
+    for step in ctx.shape_steps:
+        if isinstance(step, coll.AllToAll):
+            buf = jax.lax.all_to_all(
+                buf, step.axis, split_axis=0, concat_axis=1, tiled=True
+            )
+        elif isinstance(step, coll.DynamicSlice):
+            p = ctx.mesh_shape[step.axis]
+            chunk = buf.shape[0] // p
+            buf = jax.lax.dynamic_slice_in_dim(
+                buf, jax.lax.axis_index(step.axis) * chunk, chunk, axis=0
+            )
+        else:  # pragma: no cover - the rule only emits the two above
+            raise CompileError(f"{ctx.node.name}: unexpected dispatch step {step}")
+    ctx.side[ctx.node.out] = {
+        "meta": meta, "tokens": x.shape[0], "d": x.shape[1],
+    }
+    return buf
+
+
+@register_op_backend("moe_combine")
+def _exec_moe_combine(ctx: ExecCtx, oe):
+    """Unwinds the dispatch exchange (reverse step order), then combines
+    this device's own tokens with the routing metadata the dispatch
+    backend stashed."""
+    from repro.models import moe as moe_mod
+
+    side = ctx.side.get(ctx.attr("dispatch"))
+    if side is None:
+        raise CompileError(
+            f"{ctx.node.name}: no dispatch state — moe_combine is only "
+            f"executable in a graph whose 'dispatch' attr names the "
+            f"matching moe_dispatch node"
+        )
+    for step in reversed(ctx.shape_steps):
+        if isinstance(step, coll.AllToAll):
+            oe = jax.lax.all_to_all(
+                oe, step.axis, split_axis=1, concat_axis=0, tiled=True
+            )
+        elif isinstance(step, coll.AllGather):
+            oe = jax.lax.all_gather(oe, step.axis, axis=step.dim, tiled=True)
+        else:  # pragma: no cover
+            raise CompileError(f"{ctx.node.name}: unexpected combine step {step}")
+    y = moe_mod.local_combine(oe, side["meta"], side["tokens"], side["d"])
+    return y.astype(ctx.out_spec_dtype())
+
+
+@register_op_backend("ssm_mix")
+def _exec_ssm_mix(ctx: ExecCtx, xz, bb, cc, dt_raw):
+    """The Mamba2 SSD mixer, reusing the reference ``models.ssm`` math
+    (causal conv → silu → chunked SSD scan → D skip). The inner dim may
+    be head-sharded: this device computes its head chunk, slicing the
+    replicated auxiliaries (conv filter, dt bias, A, D) to match."""
+    from repro.models import ssm as ssm_mod
+
+    seq = int(ctx.attr("seq"))
+    hd = int(ctx.attr("head_dim"))
+    di = int(ctx.attr("d_inner"))
+    n = int(ctx.attr("state"))
+    t_l, di_l = xz.shape
+    b_l = t_l // seq
+    h_l = di_l // hd
+
+    conv_w = ctx.aux(ctx.attr("conv_w"))
+    dt_bias = ctx.aux(ctx.attr("dt_bias"))
+    a_log = ctx.aux(ctx.attr("A_log"))
+    d_skip = ctx.aux(ctx.attr("D"))
+    di_axes = ctx.in_specs[0].placement()[1]
+    if di_axes:
+        idx = ctx.axis_index(di_axes)
+        conv_x = jax.lax.dynamic_slice_in_dim(
+            conv_w[:, :di], idx * di_l, di_l, axis=1
+        )
+        dt_bias = jax.lax.dynamic_slice_in_dim(dt_bias, idx * h_l, h_l, axis=0)
+        a_log = jax.lax.dynamic_slice_in_dim(a_log, idx * h_l, h_l, axis=0)
+        d_skip = jax.lax.dynamic_slice_in_dim(d_skip, idx * h_l, h_l, axis=0)
+    else:
+        conv_x = conv_w[:, :di]
+    w_cat = jnp.concatenate(
+        [conv_x, conv_w[:, di: di + n], conv_w[:, di + n:]], axis=-1
+    )
+
+    u = jnp.concatenate([xz, bb, cc], axis=-1).reshape(b_l, seq, -1)
+    u = jax.nn.silu(ssm_mod._causal_conv(u, w_cat))
+    xs = u[..., :di_l].reshape(b_l, seq, h_l, hd)
+    bs = u[..., di_l: di_l + n]
+    cs = u[..., di_l + n:]
+    dt3 = dt_raw.reshape(b_l, seq, -1).astype(jnp.float32)
+    if di_axes:
+        dt3 = jax.lax.dynamic_slice_in_dim(dt3, idx * h_l, h_l, axis=2)
+    dt = jax.nn.softplus(dt3 + dt_bias)
+    a_neg = -jnp.exp(a_log)
+    y, _ = ssm_mod.ssd_scan(xs, dt, a_neg, bs, cs)
+    y = y + xs.astype(jnp.float32) * d_skip[:, None]
+    return y.reshape(t_l, di_l).astype(ctx.out_spec_dtype())
+
+
+# ---------------------------------------------------------------------------
+# the Executable
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredOp:
+    """One row of the executable's deterministic lowering trace."""
+
+    op: str
+    kind: str
+    backend: str
+    out_spec: str
+    collectives: Tuple[Tuple[str, Tuple[str, ...]], ...]  # (operand, steps)
+    comm_bytes: int
+    schedule: Optional[str] = None
+
+    def describe(self) -> str:
+        cols = "; ".join(f"{o}:{'+'.join(s)}" for o, s in self.collectives)
+        sched = f"  sched={self.schedule}" if self.schedule else ""
+        comm = f"  comm={self.comm_bytes}B" if self.comm_bytes else ""
+        return f"{self.op} [{self.kind} -> {self.backend}]{sched}{comm}" + (
+            f"  [{cols}]" if cols else ""
+        )
+
+
+def _backend_name(node: OpNode, in_specs: Sequence[AxeSpec] = ()) -> str:
+    if node.kind == "matmul":
+        grouped = len(in_specs) > 1 and len(in_specs[1].shape) == 3
+        return "program:moe_gemm" if grouped else "program:matmul"
+    if node.kind == "attention":
+        return "program:flash_attention"
+    if node.kind == "norm":
+        return "program:rmsnorm"
+    if node.kind == "finalize":
+        return "collective"
+    return f"jnp:{node.kind}"
+
+
+#: attr keys whose values name auxiliary (replicated) input tensors
+_AUX_ATTRS = ("weight", "norm_weight", "router", "dt_bias", "A_log", "D", "conv_w")
+
+
+class Executable:
+    """A compiled graph: callable pytree-in/pytree-out jitted function.
+
+    ``exe(params, *activations)`` — ``params`` maps graph input names
+    (role ``param``) and auxiliary names to arrays; activations are
+    positional, in graph declaration order. Introspection surfaces:
+    :attr:`lowering_trace` (deterministic per plan),
+    :meth:`collective_sequence` (the redistribution steps the body
+    issues, for the dryrun cross-check), and :attr:`plan`.
+    """
+
+    def __init__(self, graph: GraphSpec, mesh, plan: LayoutPlan,
+                 assignment: Mapping[str, AxeSpec], *,
+                 interpret: Optional[bool] = None,
+                 solve_result: Optional[SolveResult] = None):
+        self.graph = graph
+        self.mesh = mesh
+        self.plan = plan
+        self.assignment = dict(assignment)
+        self.solve_result = solve_result
+        self.interpret = (
+            jax.default_backend() != "tpu" if interpret is None else bool(interpret)
+        )
+        if mesh is not None:
+            mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if mesh_shape != graph.space.mesh_shape:
+                raise CompileError(
+                    f"mesh {mesh_shape} does not match the graph space "
+                    f"{graph.space.mesh_shape}"
+                )
+
+        self.activation_names = tuple(
+            m.name for m in graph.inputs.values() if m.role == "activation"
+        )
+        self.param_names = tuple(
+            m.name for m in graph.inputs.values() if m.role != "activation"
+        )
+        aux: List[str] = []
+        for node in graph.nodes:
+            for key in _AUX_ATTRS:
+                name = node.attr(key)
+                if name is not None and name not in aux:
+                    aux.append(name)
+        self.aux_names: Tuple[str, ...] = tuple(aux)
+        self.outputs = graph.outputs()
+
+        # output specs: the finalize entries' resolved specs win
+        self._out_specs: Dict[str, AxeSpec] = {
+            name: plan.env[name] for name in self.outputs
+        }
+        for e in plan.entries:
+            if e.op.kind == "finalize":
+                self._out_specs[e.op.out] = e.out_spec
+
+        self.lowering_trace: Tuple[LoweredOp, ...] = tuple(
+            self._lower_entry(e) for e in plan.entries
+        )
+        self._issued: List[Tuple[str, str, Tuple[str, ...]]] = []
+        self._jitted = None
+
+    # -- introspection ---------------------------------------------------
+    def _lower_entry(self, entry: PlanEntry) -> LoweredOp:
+        from repro.tune import planner as tune_planner
+
+        node = entry.op
+        sched = None
+        in_specs: Tuple[AxeSpec, ...] = ()
+        if node.kind != "finalize":
+            # plan schedules from the POST-redistribution specs — the
+            # local problem + layout signature the program dispatch
+            # actually resolves under at trace time
+            in_specs = entry.input_specs(self.plan.env)
+            sp = tune_planner.plan_from_specs(node.kind, in_specs, backend=None)
+            if sp is not None and sp.schedule is not None:
+                sched = f"{sp.op}={sp.schedule.describe()}"
+        return LoweredOp(
+            op=node.name,
+            kind=node.kind,
+            backend=_backend_name(node, in_specs),
+            out_spec=entry.out_spec.signature(),
+            collectives=tuple(
+                (r.operand, tuple(type(s).__name__ for s in r.steps))
+                for r in entry.redistributions if r.steps
+            ),
+            comm_bytes=entry.comm_bytes,
+            schedule=sched,
+        )
+
+    def collective_sequence(self) -> Tuple[Tuple[str, str, Tuple[str, ...]], ...]:
+        """Every redistribution the body issues, in execution order:
+        ``(op, operand, step type names)``."""
+        return tuple(
+            (row.op, operand, steps)
+            for row in self.lowering_trace
+            for operand, steps in row.collectives
+        )
+
+    @property
+    def observed_collectives(self):
+        """The collectives the traced body actually issued (populated on
+        first call; the dryrun ``--execute`` cross-check compares this
+        against :meth:`collective_sequence` and the Decision trace)."""
+        return tuple(self._issued)
+
+    def input_spec(self, name: str) -> AxeSpec:
+        return self.plan.env[name]
+
+    def describe(self) -> str:
+        lines = [
+            f"executable over {self.graph.space.signature()}: "
+            f"{len(self.plan.entries)} ops, "
+            f"{self.plan.total_comm_bytes} comm B/dev"
+        ]
+        lines += ["  " + row.describe() for row in self.lowering_trace]
+        return "\n".join(lines)
+
+    # -- execution -------------------------------------------------------
+    def _ordered_inputs(self, params: Mapping[str, Any], acts: Sequence[Any]):
+        if len(acts) != len(self.activation_names):
+            raise CompileError(
+                f"expected {len(self.activation_names)} activation inputs "
+                f"{self.activation_names}, got {len(acts)}"
+            )
+        arrays = list(acts)
+        for name in self.param_names:
+            if name not in params:
+                raise CompileError(
+                    f"graph input {name!r} missing from params (have "
+                    f"{sorted(params)[:8]}...)"
+                )
+            arrays.append(params[name])
+        for name in self.aux_names:
+            if name not in params:
+                raise CompileError(f"auxiliary tensor {name!r} missing from params")
+            arrays.append(params[name])
+        for name, arr in zip(self.activation_names + self.param_names, arrays):
+            want = self.graph.inputs[name].shape
+            if tuple(arr.shape) != want:
+                raise CompileError(
+                    f"input {name!r}: expected shape {want}, got {tuple(arr.shape)}"
+                )
+        return arrays
+
+    def _body(self, *arrays):
+        names = self.activation_names + self.param_names
+        env: Dict[str, Any] = dict(zip(names, arrays[: len(names)]))
+        aux = dict(zip(self.aux_names, arrays[len(names):]))
+        self._issued.clear()
+        side: Dict[str, Any] = {}
+        mesh_shape = self.graph.space.mesh_shape
+
+        with scope(Scope.DEVICE):
+            for entry in self.plan.entries:
+                node = entry.op
+                if node.kind == "finalize":
+                    x = env[node.out]
+                    for r in entry.redistributions:
+                        x = coll.apply_plan(x, r.steps)
+                        self._issued.append(
+                            (node.name, r.operand,
+                             tuple(type(s).__name__ for s in r.steps))
+                        )
+                    env[node.out] = x
+                    continue
+                ins, in_specs, shape_steps = [], [], ()
+                for nm in node.inputs:
+                    x, spec = env[nm], self.plan.env[nm]
+                    for r in entry.redistributions:
+                        if r.operand != nm:
+                            continue
+                        if r.dst.shape == r.src.shape:
+                            x = coll.apply_plan(x, r.steps)
+                            spec = r.dst
+                        else:
+                            # shape-changing exchange: the op backend
+                            # owns these steps (MoE dispatch/combine)
+                            shape_steps = r.steps
+                        if r.steps:
+                            self._issued.append(
+                                (node.name, nm,
+                                 tuple(type(s).__name__ for s in r.steps))
+                            )
+                    ins.append(x)
+                    in_specs.append(spec)
+                ctx = ExecCtx(node, entry, in_specs, aux, side, shape_steps,
+                              mesh_shape, self.interpret)
+                out = op_backend(node.kind)(ctx, *ins)
+                want = entry.out_spec.local_shape()
+                if tuple(out.shape) != tuple(want):
+                    raise CompileError(
+                        f"{node.name} [{node.kind}]: backend produced local "
+                        f"shape {tuple(out.shape)}, plan says {tuple(want)}"
+                    )
+                env[node.out] = out
+        outs = tuple(env[o] for o in self.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    def _sharded_fn(self):
+        from repro import compat
+        from repro.axe import lower as axe_lower
+
+        names = self.activation_names + self.param_names
+        if self.mesh is None:
+            sharded = any(
+                any(self.plan.env[n].placement()) for n in names
+            ) or any(r.steps for e in self.plan.entries for r in e.redistributions)
+            if sharded:
+                raise CompileError(
+                    "this plan shards tensors / issues collectives: "
+                    "pass a concrete mesh to axe.compile"
+                )
+            return self._body
+        in_pspecs = tuple(
+            axe_lower.to_pspec(self.plan.env[n]) for n in names
+        ) + tuple(jax.sharding.PartitionSpec() for _ in self.aux_names)
+        outs = tuple(axe_lower.to_pspec(self._out_specs[o]) for o in self.outputs)
+        return compat.shard_map(
+            self._body, mesh=self.mesh, in_specs=in_pspecs,
+            out_specs=outs[0] if len(outs) == 1 else outs, check_vma=False,
+        )
+
+    def apply(self, params: Mapping[str, Any], *activations):
+        """Run un-jitted (trace-transparent: use this inside an outer
+        ``jax.jit`` / ``value_and_grad``, e.g. a train step)."""
+        return self._sharded_fn()(*self._ordered_inputs(params, activations))
+
+    def __call__(self, params: Mapping[str, Any], *activations):
+        if self._jitted is None:
+            self._jitted = jax.jit(self._sharded_fn())
+        return self._jitted(*self._ordered_inputs(params, activations))
+
+
+# ---------------------------------------------------------------------------
+# compile()
+# ---------------------------------------------------------------------------
+
+
+def _plan_assignment(plan) -> Optional[Mapping[str, AxeSpec]]:
+    """The name → AxeSpec input assignment a plan object carries."""
+    if isinstance(plan, SolveResult):
+        return plan.assignment
+    if isinstance(plan, LayoutPlan):
+        return plan.env
+    if isinstance(plan, Mapping):
+        return plan
+    return None
+
+
+def plan_covers(graph: GraphSpec, plan) -> bool:
+    """Whether ``plan`` was produced for (a graph shaped like)
+    ``graph``: every graph input has an assigned spec with the right
+    shape over the right space. A plan solved at a different
+    batch/seq/depth does not cover and must be re-solved."""
+    env = _plan_assignment(plan)
+    if env is None:
+        return False
+    for name, meta in graph.inputs.items():
+        spec = env.get(name)
+        if spec is None or spec.shape != meta.shape or spec.space != graph.space:
+            return False
+    return True
+
+
+def compile(  # noqa: A001 - the paper-facing API name
+    graph: GraphSpec,
+    mesh=None,
+    plan=None,
+    *,
+    schedule_cache: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    beam: int = 4,
+) -> Executable:
+    """Compile ``graph`` for ``mesh`` under ``plan`` (see module doc).
+
+    ``plan`` may be a :class:`~repro.axe.solve.SolveResult`, a
+    :class:`~repro.axe.propagate.LayoutPlan`, a plain ``name → AxeSpec``
+    input assignment, or None — in which case the layout solver runs
+    (``beam`` forwarded). ``schedule_cache`` pins the process-wide
+    schedule cache (``repro.tune``) so program stages traced inside the
+    executable reuse autotuned schedules."""
+    if schedule_cache is not None:
+        from repro import tune
+
+        tune.use_cache(schedule_cache)
+
+    solve_result: Optional[SolveResult] = None
+    if plan is None:
+        plan = solve(graph, beam=beam)
+    if isinstance(plan, SolveResult):
+        solve_result = plan
+        layout = plan.plan
+        assignment = plan.assignment
+    elif isinstance(plan, LayoutPlan):
+        layout = plan
+        missing = [n for n in graph.inputs if n not in layout.env]
+        if missing:
+            raise CompileError(f"plan env lacks graph inputs {missing}")
+        assignment = {n: layout.env[n] for n in graph.inputs}
+        have = {e.op.name for e in layout.entries}
+        extra = [
+            e for e in finalize_entries(graph.outputs(), layout.env)
+            if e.op.name not in have
+        ]
+        if extra:
+            layout = LayoutPlan(
+                layout.space, list(layout.entries) + extra, dict(layout.env)
+            )
+    elif isinstance(plan, Mapping):
+        assignment = dict(plan)
+        layout, _, _ = evaluate_env(graph, assignment)
+    else:
+        raise CompileError(
+            f"plan must be a SolveResult, LayoutPlan, mapping, or None; "
+            f"got {type(plan).__name__}"
+        )
+    return Executable(
+        graph, mesh, layout, assignment,
+        interpret=interpret, solve_result=solve_result,
+    )
+
+
+# ---------------------------------------------------------------------------
+# model binding: reference param pytrees -> graph inputs (+ aux)
+# ---------------------------------------------------------------------------
+
+#: families whose reference params map onto executable model graphs
+SUPPORTED_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def _period(cfg) -> int:
+    if cfg.local_global_ratio:
+        return cfg.local_global_ratio + 1
+    if cfg.attn_period:
+        return cfg.attn_period
+    return 1
+
+
+def _graph_layers(graph: GraphSpec) -> List[int]:
+    seen = set()
+    for node in graph.nodes:
+        if node.name.startswith("L") and "." in node.name:
+            head = node.name[1:].split(".", 1)[0]
+            if head.isdigit():
+                seen.add(int(head))
+    return sorted(seen)
+
+
+def model_inputs(graph: GraphSpec, cfg, params) -> Dict[str, Any]:
+    """Map a reference model param pytree (``models.transformer``
+    layout: scanned super-blocks) onto the graph's input tensors and
+    auxiliary names, reshaping per-head projections onto the graph's
+    2-D views (``wq [d, H, hd] → [d, H·hd]`` — head-major columns, so a
+    solved column sharding is a head sharding of the model leaf)."""
+    if cfg.family not in SUPPORTED_FAMILIES:
+        raise CompileError(
+            f"family {cfg.family!r} has no model binding "
+            f"(supported: {SUPPORTED_FAMILIES})"
+        )
+    d = cfg.d_model
+    per = _period(cfg)
+    out: Dict[str, Any] = {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "lm_head": params["embed"].T if cfg.tie_embeddings else params["lm_head"],
+    }
+    for i in _graph_layers(graph):
+        sup, slot = i // per, i % per
+        lp = jax.tree.map(lambda a: a[sup], params["blocks"][f"l{slot}"])
+        p = f"L{i}."
+        out[f"{p}norm1"] = lp["norm1"]
+        if "attn" in lp:
+            ap = lp["attn"]
+            h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            out[f"{p}wq"] = ap["wq"].reshape(d, h * hd)
+            out[f"{p}wk"] = ap["wk"].reshape(d, kv * hd)
+            out[f"{p}wv"] = ap["wv"].reshape(d, kv * hd)
+            out[f"{p}wo"] = ap["wo"].reshape(h * hd, d)
+            if cfg.qk_norm:
+                out[f"{p}q_norm"] = ap["q_norm"]
+                out[f"{p}k_norm"] = ap["k_norm"]
+        if "ssm" in lp:
+            sp = lp["ssm"]
+            for name in ("wx", "wz", "wB", "wC", "wdt",
+                         "dt_bias", "A_log", "D", "conv_w", "gate_norm"):
+                out[f"{p}{name}"] = sp[name]
+            out[f"{p}ssm_wo"] = sp["wo"]
+        if "norm2" in lp:
+            out[f"{p}norm2"] = lp["norm2"]
+        if "mlp" in lp:
+            mp = lp["mlp"]
+            if cfg.mlp_type == "swiglu":
+                out[f"{p}wg"] = mp["wg"]
+                out[f"{p}wu"] = mp["wu"]
+            else:
+                out[f"{p}wi"] = mp["wi"]
+            out[f"{p}wo2"] = mp["wo"]
+        if "moe" in lp:
+            mo = lp["moe"]
+            out[f"{p}router"] = mo["router"]
+            out[f"{p}moe_wg"] = mo["wg"]
+            out[f"{p}moe_wu"] = mo["wu"]
+            out[f"{p}moe_wo"] = mo["wo"]
+    return out
+
+
+def model_executable(
+    cfg,
+    mesh,
+    batch: int,
+    seq: int,
+    *,
+    plan=None,
+    layers: Optional[int] = None,
+    schedule_cache: Optional[str] = None,
+    beam: int = 4,
+    dtype: Optional[str] = None,
+) -> Executable:
+    """The consumer-facing constructor: build the model-zoo graph for
+    ``cfg`` at (batch, seq) and compile it. ``layers=None`` compiles the
+    full depth (what training/serving needs); pass a small cap for
+    layout studies. A ``plan`` solved for a *different* graph shape
+    (other batch/seq/depth — e.g. a layout-study solve handed to a
+    serving engine) does not cover this graph: it is dropped with a
+    warning and the layout is re-solved."""
+    import warnings
+
+    from repro.axe.graphs import model_graph
+    from repro.axe.spec import PhysicalSpace
+
+    if mesh is not None:
+        space = PhysicalSpace.from_mesh_shape(
+            dict(zip(mesh.axis_names, mesh.devices.shape))
+        )
+    else:
+        space = PhysicalSpace(())
+    gs = model_graph(
+        cfg, batch, seq, space,
+        dtype=dtype or cfg.dtype,
+        layers=cfg.num_layers if layers is None else layers,
+    )
+    if plan is not None and not plan_covers(gs, plan):
+        warnings.warn(
+            f"layout plan does not cover the {cfg.name} graph at "
+            f"batch={batch}, seq={seq} (different shape/depth/space): "
+            f"re-solving",
+            UserWarning, stacklevel=2,
+        )
+        plan = None
+    return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam)
+
+
+def compiled_loss_fn(exe: Executable, cfg) -> Callable:
+    """Cross-entropy LM loss over the compiled forward — the function
+    ``launch/train.py --solve`` hands to ``make_train_step`` instead of
+    the bespoke module wiring. Differentiates through the executable's
+    shard_map (collectives transpose to their duals)."""
+    from repro.models.common import cross_entropy_loss
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        inputs = model_inputs(exe.graph, cfg, params)
+        logits = exe.apply(inputs, tokens.reshape(-1))
+        return cross_entropy_loss(
+            logits.reshape(b, s, logits.shape[-1]), batch["labels"]
+        )
+
+    return loss_fn

@@ -1,4 +1,5 @@
-"""Representative op graphs for layout propagation and layout search.
+"""Representative op graphs for layout propagation, layout search, and
+compiled execution.
 
 ``decoder_layer_graph`` builds the op graph of one decoder layer for a
 model-zoo config; ``model_graph`` builds the whole-model graph — embed →
@@ -15,11 +16,22 @@ list), and the physical space. ``seeded_env()`` resolves the preference
 lists through ``rules.pick_spec`` — that is the baseline plan the layout
 solver (``repro.axe.solve``) has to beat; the solver itself enumerates
 placements from the spec algebra instead of the preference lists.
+
+Since ``axe.compile`` these graphs are *executable*: every node carries
+the execution attrs its backend needs (norm weights, rope/qk-norm/mask
+parameters on the q/k/v boundary nodes, router + capacity metadata on
+the MoE nodes, the SSD mixer's auxiliary tensors) referencing small
+replicated auxiliary parameters by name. Projections are split exactly
+as the reference models keep them (``wq``/``wk``/``wv``, the SwiGLU
+``wg``/``wu`` pair, per-expert ``moe_wg``/``moe_wu``) so a solved
+placement of a graph weight is directly a placement of the model leaf
+and the local shards line up with head/feature boundaries. The
+propagation rules ignore attrs they do not read, so the layout
+semantics stay those of the plain op kinds.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Tuple
 
 from repro.axe import rules
@@ -84,15 +96,35 @@ class _Builder:
         self.nodes.append(OpNode(name, kind, tuple(ins), out, tuple(attrs)))
         return out
 
-    def reshape(self, name: str, src: str, shape, carry) -> str:
+    def reshape(self, name: str, src: str, shape, carry, extra=()) -> str:
         return self.op(
             name, "reshape", (src,), name,
             attrs=(("shape", tuple(int(s) for s in shape)),
-                   ("carry", tuple(tuple(c) for c in carry))),
+                   ("carry", tuple(tuple(c) for c in carry)))
+            + tuple(extra),
         )
 
     def spec(self) -> GraphSpec:
         return GraphSpec(self.nodes, self.inputs, self.space)
+
+
+def capacity(tokens: int, cfg) -> int:
+    """Per-expert MoE capacity — the jax-free twin of
+    ``repro.models.moe.capacity`` (parity asserted in tests) so graph
+    metadata matches what the reference models and the compiled
+    executor actually allocate."""
+    c = int(tokens * cfg.experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _layer_window(cfg, i: int):
+    """Per-layer sliding window, mirroring ``models.transformer``:
+    local/global families window the first ``ratio`` layers of each
+    period; otherwise the config window applies uniformly."""
+    if cfg.local_global_ratio:
+        per = cfg.local_global_ratio + 1
+        return cfg.sliding_window if (i % per) < cfg.local_global_ratio else None
+    return cfg.sliding_window
 
 
 # ---------------------------------------------------------------------------
@@ -102,48 +134,68 @@ class _Builder:
 
 def _attention_block(
     b: _Builder, cfg, batch: int, seq: int, p: str, x_in: str,
-    *, kv_from: str = None, kv_tokens: int = None, kv_seq: int = None,
+    *, layer_index: int = 0, causal: bool = True,
+    kv_from: str = None, kv_tokens: int = None, kv_seq: int = None,
 ) -> str:
-    """norm → fused QKV projection → attention → output projection →
+    """norm → q/k/v projections → attention → output projection →
     residual. ``kv_from`` switches to cross-attention: K/V project from
     that tensor (the encoder output) instead of the normed input."""
     d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     t = batch * seq
-    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n")
-    if kv_from is None:
-        wqkv = b.inp(f"{p}wqkv", (d, (h + 2 * kv) * hd), "param",
-                     [(None, "model"), (None, None)])
-        qkv = b.op(f"{p}qkv_proj", "matmul", (x_n, wqkv), f"{p}qkv")
-        q = b.reshape(f"{p}q", qkv, (batch, h, seq, hd), ((0, 0), (1, 1)))
-        k = b.reshape(f"{p}k", qkv, (batch, kv, seq, hd), ((0, 0), (1, 1)))
-        v = b.reshape(f"{p}v", qkv, (batch, kv, seq, hd), ((0, 0), (1, 1)))
-    else:
-        # cross-attention weights get non-colliding base names (cwq/cwkv)
-        # so PlanRules never mistakes them for the self-attention QKV
-        kv_s = kv_seq if kv_seq is not None else (kv_tokens // batch)
-        wq = b.inp(f"{p}cwq", (d, h * hd), "param",
-                   [(None, "model"), (None, None)])
-        wkv = b.inp(f"{p}cwkv", (d, 2 * kv * hd), "param",
-                    [(None, "model"), (None, None)])
-        qf = b.op(f"{p}q_proj", "matmul", (x_n, wq), f"{p}qf")
-        kvf = b.op(f"{p}kv_proj", "matmul", (kv_from, wkv), f"{p}kvf")
-        q = b.reshape(f"{p}q", qf, (batch, h, seq, hd), ((0, 0), (1, 1)))
-        k = b.reshape(f"{p}k", kvf, (batch, kv, kv_s, hd), ((0, 0), (1, 1)))
-        v = b.reshape(f"{p}v", kvf, (batch, kv, kv_s, hd), ((0, 0), (1, 1)))
-    attn = b.op(f"{p}attention", "attention", (q, k, v), f"{p}attn_out")
-    flat = b.reshape(f"{p}attn_flat", attn, (t, h * hd), ((0, 0), (1, 1)))
-    wo = b.inp(f"{p}cwo" if kv_from is not None else f"{p}wo",
+    cross = kv_from is not None
+    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n",
+               attrs=(("weight", f"{p}norm1"),))
+    # cross-attention weights get non-colliding base names (cwq/cwk/...)
+    # so PlanRules never mistakes them for the self-attention projections
+    wq = b.inp(f"{p}cwq" if cross else f"{p}wq", (d, h * hd), "param",
+               [(None, "model"), (None, None)])
+    wk = b.inp(f"{p}cwk" if cross else f"{p}wk", (d, kv * hd), "param",
+               [(None, "model"), (None, None)])
+    wv = b.inp(f"{p}cwv" if cross else f"{p}wv", (d, kv * hd), "param",
+               [(None, "model"), (None, None)])
+    kv_src = kv_from if cross else x_n
+    kv_s = seq if not cross else (
+        kv_seq if kv_seq is not None else (kv_tokens // batch)
+    )
+    qf = b.op(f"{p}q_proj", "matmul", (x_n, wq), f"{p}qf")
+    kf = b.op(f"{p}k_proj", "matmul", (kv_src, wk), f"{p}kf")
+    vf = b.op(f"{p}v_proj", "matmul", (kv_src, wv), f"{p}vf")
+    # the reference models rope + qk-norm at this boundary (never for
+    # cross-attention), so the select nodes carry those execution attrs
+    rope = None if cross else cfg.rope_theta
+    qk = (not cross) and cfg.qk_norm
+
+    def sel(role, heads, extra=()):
+        # only q and k are rotary-embedded; v passes through
+        theta = rope if role in ("q", "k") else None
+        return (("select", role), ("heads", heads), ("head_dim", hd),
+                ("batch", batch), ("rope_theta", theta)) + tuple(extra)
+
+    q = b.reshape(f"{p}q", qf, (batch, h, seq, hd), ((0, 0), (1, 1)),
+                  extra=sel("q", h, (("norm_weight", f"{p}q_norm" if qk else None),)))
+    k = b.reshape(f"{p}k", kf, (batch, kv, kv_s, hd), ((0, 0), (1, 1)),
+                  extra=sel("k", kv, (("norm_weight", f"{p}k_norm" if qk else None),)))
+    v = b.reshape(f"{p}v", vf, (batch, kv, kv_s, hd), ((0, 0), (1, 1)),
+                  extra=sel("v", kv))
+    attn = b.op(f"{p}attention", "attention", (q, k, v), f"{p}attn_out",
+                attrs=(("causal", causal and not cross),
+                       ("window", None if cross else _layer_window(cfg, layer_index))))
+    flat = b.reshape(f"{p}attn_flat", attn, (t, h * hd), ((0, 0), (1, 1)),
+                     extra=(("select", "merge_heads"), ("batch", batch)))
+    wo = b.inp(f"{p}cwo" if cross else f"{p}wo",
                (h * hd, d), "param", [("model", None), (None, None)])
     o = b.op(f"{p}wo_proj", "matmul", (flat, wo), f"{p}attn_o")
-    return b.op(f"{p}attn_residual", "elementwise", (o, x_in), f"{p}x1")
+    return b.op(f"{p}attn_residual", "elementwise", (o, x_in), f"{p}x1",
+                attrs=(("fn", "add"),))
 
 
-def _ssm_block(b: _Builder, cfg, t: int, p: str, x_in: str) -> str:
-    """norm → (x/z/B/C/dt projections) → SSD mix → gate → out proj →
-    residual; the Mamba2 mixer as layout ops."""
+def _ssm_block(b: _Builder, cfg, batch: int, seq: int, p: str, x_in: str) -> str:
+    """norm → (x/z/B/C/dt projections) → SSD mix → gate → gated norm →
+    out proj → residual; the Mamba2 mixer as layout ops."""
     d = cfg.d_model
     di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
-    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n")
+    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n",
+               attrs=(("weight", f"{p}norm1"),))
     wx = b.inp(f"{p}wx", (d, di), "param", [(None, "model"), (None, None)])
     wz = b.inp(f"{p}wz", (d, di), "param", [(None, "model"), (None, None)])
     wB = b.inp(f"{p}wB", (d, n), "param", [(None, None)])
@@ -154,38 +206,75 @@ def _ssm_block(b: _Builder, cfg, t: int, p: str, x_in: str) -> str:
     bb = b.op(f"{p}b_proj", "matmul", (x_n, wB), f"{p}bb")
     cc = b.op(f"{p}c_proj", "matmul", (x_n, wC), f"{p}cc")
     dt = b.op(f"{p}dt_proj", "matmul", (x_n, wdt), f"{p}dt")
-    y = b.op(f"{p}ssm_mix", "ssm_mix", (xz, bb, cc, dt), f"{p}y")
-    g = b.op(f"{p}gate", "elementwise", (y, zz), f"{p}g")
+    y = b.op(f"{p}ssm_mix", "ssm_mix", (xz, bb, cc, dt), f"{p}y",
+             attrs=(("batch", batch), ("seq", seq),
+                    ("heads", h), ("head_dim", cfg.ssm_headdim),
+                    ("state", n), ("d_inner", di),
+                    ("dt_bias", f"{p}dt_bias"), ("A_log", f"{p}A_log"),
+                    ("D", f"{p}D"), ("conv_w", f"{p}conv_w")))
+    g = b.op(f"{p}gate", "elementwise", (y, zz), f"{p}g",
+             attrs=(("fn", "mul_silu"),))
+    gn = b.op(f"{p}gate_norm", "norm", (g,), f"{p}gn",
+              attrs=(("weight", f"{p}gate_norm"),))
     wo = b.inp(f"{p}ssm_wo", (di, d), "param", [("model", None), (None, None)])
-    o = b.op(f"{p}out_proj", "matmul", (g, wo), f"{p}ssm_o")
-    return b.op(f"{p}ssm_residual", "elementwise", (o, x_in), f"{p}x1")
+    o = b.op(f"{p}out_proj", "matmul", (gn, wo), f"{p}ssm_o")
+    return b.op(f"{p}ssm_residual", "elementwise", (o, x_in), f"{p}x1",
+                attrs=(("fn", "add"),))
 
 
 def _ffn_block(b: _Builder, cfg, t: int, p: str, x_in: str, res: str) -> str:
-    """norm → dense FFN or MoE dispatch/expert-GEMMs/combine → residual."""
+    """norm → dense FFN or MoE dispatch/expert-GEMMs/combine → residual.
+
+    The FFN keeps the reference models' structure — a SwiGLU gate pair
+    (``wg``/``wu``) or a single GELU projection, per ``cfg.mlp_type`` —
+    so the plan accounts for both GEMMs and the compiled executor
+    reproduces the exact activation math."""
     d = cfg.d_model
-    x2 = b.op(f"{p}norm_ffn", "norm", (x_in,), f"{p}x2")
+    x2 = b.op(f"{p}norm_ffn", "norm", (x_in,), f"{p}x2",
+              attrs=(("weight", f"{p}norm2"),))
     if cfg.is_moe:
         e, f_e = cfg.num_experts, cfg.moe_d_ff
-        cap = max(1, math.ceil(t * cfg.experts_per_tok * cfg.capacity_factor / e))
-        moe_wi = b.inp(f"{p}moe_wi", (e, d, f_e), "param",
+        cap = capacity(t, cfg)
+        moe_wg = b.inp(f"{p}moe_wg", (e, d, f_e), "param",
+                       [("model", None, None), (None, None, "model"),
+                        (None, None, None)])
+        moe_wu = b.inp(f"{p}moe_wu", (e, d, f_e), "param",
                        [("model", None, None), (None, None, "model"),
                         (None, None, None)])
         moe_wo = b.inp(f"{p}moe_wo", (e, f_e, d), "param",
                        [("model", None, None), (None, "model", None),
                         (None, None, None)])
         xe = b.op(f"{p}moe_dispatch", "moe_dispatch", (x2,), f"{p}xe",
-                  attrs=(("experts", e), ("capacity", cap)))
-        he = b.op(f"{p}moe_ffn_in", "matmul", (xe, moe_wi), f"{p}he")
-        oe = b.op(f"{p}moe_ffn_out", "matmul", (he, moe_wo), f"{p}oe")
+                  attrs=(("experts", e), ("capacity", cap),
+                         ("experts_per_tok", cfg.experts_per_tok),
+                         ("router", f"{p}router")))
+        hg = b.op(f"{p}moe_ffn_g", "matmul", (xe, moe_wg), f"{p}hg")
+        hu = b.op(f"{p}moe_ffn_u", "matmul", (xe, moe_wu), f"{p}hu")
+        ha = b.op(f"{p}moe_act", "elementwise", (hg, hu), f"{p}ha",
+                  attrs=(("fn", "swiglu"),))
+        oe = b.op(f"{p}moe_ffn_out", "matmul", (ha, moe_wo), f"{p}oe")
         out = b.op(f"{p}moe_combine", "moe_combine", (oe,), f"{p}moe_out",
-                   attrs=(("tokens", t),))
-        return b.op(f"{p}ffn_residual", "elementwise", (out, res), f"{p}x_out")
-    wi = b.inp(f"{p}wi", (d, cfg.d_ff), "param", [(None, "model"), (None, None)])
+                   attrs=(("tokens", t), ("dispatch", f"{p}xe"),
+                          ("dispatch_input", f"{p}x2"),
+                          ("experts", e), ("capacity", cap)))
+        return b.op(f"{p}ffn_residual", "elementwise", (out, res), f"{p}x_out",
+                    attrs=(("fn", "add"),))
+    if cfg.mlp_type == "swiglu":
+        wg = b.inp(f"{p}wg", (d, cfg.d_ff), "param", [(None, "model"), (None, None)])
+        wu = b.inp(f"{p}wu", (d, cfg.d_ff), "param", [(None, "model"), (None, None)])
+        hg = b.op(f"{p}ffn_g", "matmul", (x2, wg), f"{p}hgd")
+        hu = b.op(f"{p}ffn_u", "matmul", (x2, wu), f"{p}hud")
+        hh = b.op(f"{p}ffn_act", "elementwise", (hg, hu), f"{p}ffn_h",
+                  attrs=(("fn", "swiglu"),))
+    else:
+        wi = b.inp(f"{p}wi", (d, cfg.d_ff), "param", [(None, "model"), (None, None)])
+        h0 = b.op(f"{p}ffn_in", "matmul", (x2, wi), f"{p}ffn_h0")
+        hh = b.op(f"{p}ffn_act", "elementwise", (h0,), f"{p}ffn_h",
+                  attrs=(("fn", "gelu"),))
     wo2 = b.inp(f"{p}wo2", (cfg.d_ff, d), "param", [("model", None), (None, None)])
-    hh = b.op(f"{p}ffn_in", "matmul", (x2, wi), f"{p}ffn_h")
     oo = b.op(f"{p}ffn_out", "matmul", (hh, wo2), f"{p}ffn_o")
-    return b.op(f"{p}ffn_residual", "elementwise", (oo, res), f"{p}x_out")
+    return b.op(f"{p}ffn_residual", "elementwise", (oo, res), f"{p}x_out",
+                attrs=(("fn", "add"),))
 
 
 def _mixer_kind(cfg, i: int) -> str:
@@ -205,9 +294,10 @@ def _decoder_layer(
     """One decoder layer; returns the layer output tensor name."""
     t = batch * seq
     if _mixer_kind(cfg, layer_index) == "ssm":
-        x1 = _ssm_block(b, cfg, t, p, x_in)
+        x1 = _ssm_block(b, cfg, batch, seq, p, x_in)
     else:
-        x1 = _attention_block(b, cfg, batch, seq, p, x_in)
+        x1 = _attention_block(b, cfg, batch, seq, p, x_in,
+                              layer_index=layer_index)
         if enc_out is not None:
             # encoder-decoder: cross-attention sub-block after self-attn
             x1 = _attention_block(
@@ -288,9 +378,10 @@ def model_graph(
         e_x = frames
         for i in range(min(cfg.encoder_layers, layers)):
             p = f"E{i}."
-            e_x1 = _attention_block(b, cfg, batch, enc_s, p, e_x)
+            e_x1 = _attention_block(b, cfg, batch, enc_s, p, e_x, causal=False)
             e_x = _ffn_block(b, cfg, enc_t, p, e_x1, e_x1)
-        enc_out = b.op("enc_norm", "norm", (e_x,), "enc_out")
+        enc_out = b.op("enc_norm", "norm", (e_x,), "enc_out",
+                       attrs=(("weight", "enc_norm"),))
 
     n_layers = min(cfg.num_layers, layers)
     for i in range(n_layers):
@@ -299,7 +390,8 @@ def model_graph(
             layer_index=i, enc_out=enc_out, enc_tokens=enc_t, enc_seq=enc_s,
         )
 
-    x_f = b.op("final_norm", "norm", (x,), "x_f")
+    x_f = b.op("final_norm", "norm", (x,), "x_f",
+               attrs=(("weight", "final_norm"),))
     lm_head = b.inp("lm_head", (d, v), "param", list(rules.PARAM_RULES["lm_head"]))
     b.op("lm_head_proj", "matmul", (x_f, lm_head), "logits")
     return b.spec()

@@ -75,6 +75,21 @@ class PlanEntry:
     def comm_bytes(self) -> int:
         return sum(r.comm_bytes for r in self.redistributions)
 
+    def input_specs(self, env: Mapping[str, AxeSpec]) -> Tuple[AxeSpec, ...]:
+        """The operand specs as the op actually sees them: the plan
+        env's, with this entry's shape-preserving redistributions
+        applied (shape-changing exchanges — MoE dispatch/combine — are
+        part of the op itself). This is what schedule planning and the
+        execution backends must key on."""
+        out = []
+        for nm in self.op.inputs:
+            spec = env[nm]
+            for r in self.redistributions:
+                if r.operand == nm and r.dst.shape == r.src.shape:
+                    spec = r.dst
+            out.append(spec)
+        return tuple(out)
+
     def to_dict(self) -> Dict:
         return {
             "op": self.op.name,
@@ -238,42 +253,71 @@ def rule_attention(node: OpNode, q: AxeSpec, k: AxeSpec, v: AxeSpec):
     return out, tuple(redists)
 
 
-def rule_moe_dispatch(node: OpNode, x: AxeSpec):
-    """Capacity routing [T, d] → [E, C, d] with expert parallelism: the
-    expert dim shards over the axes named by ``attrs['expert_axes']``
-    (default: the 'model' axis when it divides E). Tokens cross devices,
-    so the plan records an AllToAll over each expert axis."""
-    from repro.core.collective import AllToAll, plan_comm_bytes
-
-    e = int(node.attr("experts"))
-    c = int(node.attr("capacity"))
-    expert_axes = tuple(node.attr("expert_axes") or ())
-    mesh_shape = x.space.mesh_shape
-    pre = ()
-    if x.partial:
-        # routing decisions need the true values: resolve pending
-        # partial sums before dispatching tokens
-        resolved = x.with_placement(
-            {i: p for i, p in enumerate(x.placement()) if p}
-        )
-        pre = (redistribute(x, resolved, node.inputs[0]),)
-        x = resolved
+def _dispatch_expert_axes(e: int, expert_axes, mesh_shape) -> Tuple[str, ...]:
+    """The mesh axes the expert dim shards over: the attr list filtered
+    by divisibility, defaulting to 'model' when it divides E."""
+    expert_axes = tuple(expert_axes or ())
     if not expert_axes and "model" in mesh_shape and e % mesh_shape["model"] == 0:
         expert_axes = ("model",)
-    expert_axes = tuple(
+    return tuple(
         a for a in expert_axes if a in mesh_shape and e % mesh_shape[a] == 0
     )
 
-    px = x.placement()
-    taken = set(expert_axes)
-    d_axes = _filter_axes(px[-1], taken)
+
+def _dispatch_token_axes(
+    x: AxeSpec, c: int, mesh_shape
+) -> Tuple[str, ...]:
+    """The token axes a dispatch can keep: prefix-filtered so the
+    per-shard capacity contribution ``c / ext`` stays integral. Axes
+    past the filter must gather before routing."""
+    kept = []
+    ext = 1
+    for a in x.placement()[0]:
+        if c % (ext * mesh_shape[a]) == 0:
+            kept.append(a)
+            ext *= mesh_shape[a]
+    return tuple(kept)
+
+
+def rule_moe_dispatch(node: OpNode, x: AxeSpec):
+    """Capacity routing [T, d] → [E, C, d] with expert parallelism: the
+    expert dim shards over the axes named by ``attrs['expert_axes']``
+    (default: the 'model' axis when it divides E).
+
+    Executable semantics (``axe.compile``): each token shard routes its
+    own tokens into per-expert capacity slots, so the capacity dim
+    carries the token axes. An expert axis the tokens are *also*
+    sharded over exchanges buffers (AllToAll — the classic EP
+    dispatch); an expert axis the tokens are replicated over just keeps
+    its own expert slice (DynamicSlice, no wire traffic). Routing reads
+    the full feature vector, so a feature-dim sharding gathers first —
+    as does a token axis whose shard capacity would not stay integral."""
+    from repro.core.collective import AllToAll, DynamicSlice, plan_comm_bytes
+
+    e = int(node.attr("experts"))
+    c = int(node.attr("capacity"))
+    mesh_shape = x.space.mesh_shape
+    expert_axes = _dispatch_expert_axes(e, node.attr("expert_axes"), mesh_shape)
+    redists = []
+    # routing decisions need true values on the full feature dim:
+    # resolve pending partial sums and gather feature/e xcess token axes
+    t_axes = _dispatch_token_axes(x, c, mesh_shape)
+    want = x.with_placement({0: t_axes} if t_axes else {})
+    if x.partial or not x.equivalent(want):
+        redists.append(redistribute(x, want, node.inputs[0]))
+        x = want
+
+    cap_axes = tuple(a for a in t_axes if a not in expert_axes)
     out = AxeSpec.sharded(
         (e, c, x.shape[-1]), x.space,
-        {0: expert_axes, 2: d_axes}, x.dtype,
+        {0: expert_axes, 1: cap_axes}, x.dtype,
     )
-    steps = tuple(AllToAll(a, 0, 0) for a in expert_axes)
+    steps = tuple(
+        AllToAll(a, 0, 0) if a in t_axes else DynamicSlice(a, 0)
+        for a in expert_axes
+    )
     bytes_ = plan_comm_bytes(steps, out.to_dtensor(), mesh_shape, _itemsize(x.dtype))
-    redists = pre + (
+    redists = tuple(redists) + (
         (Redistribution(node.inputs[0], x, out, steps, bytes_),) if steps else ()
     )
     return out, redists
@@ -382,12 +426,21 @@ def rule_embed(node: OpNode, tok: AxeSpec, table: AxeSpec):
     return out, tuple(redists)
 
 
-def rule_moe_combine(node: OpNode, xe: AxeSpec):
+def rule_moe_combine(node: OpNode, xe: AxeSpec, env=None):
     """Inverse of ``moe_dispatch``: ``[E, C, d] → [T, d]`` un-routing
-    tokens to their source devices. Expert axes AllToAll back onto the
-    token dim when it divides (else AllGather); pending partial sums are
-    resolved first (the combine applies router weights — nonlinear in
-    the layout sense)."""
+    tokens to their source devices; pending partial sums are resolved
+    first (the combine applies router weights — nonlinear in the layout
+    sense).
+
+    When the node names its dispatch (``attrs['dispatch_input']``, set
+    by the graph builders) and ``env`` is available, the combine is the
+    exact round trip: expert axes the tokens were sharded over AllToAll
+    back (reversing the EP dispatch exchange); expert axes the tokens
+    were replicated over AllGather their expert chunks so every token
+    owner can sum its routed outputs. Hand-built single nodes (no
+    dispatch context) fall back to the historical divisibility rule:
+    AllToAll expert axes onto the token dim when it divides, AllGather
+    otherwise."""
     from repro.core.collective import AllGather, AllToAll, plan_comm_bytes
 
     t = int(node.attr("tokens"))
@@ -402,14 +455,45 @@ def rule_moe_combine(node: OpNode, xe: AxeSpec):
     pxe = xe.placement()
     expert_axes = pxe[0]
     d_axes = pxe[2]
+
+    disp_in = node.attr("dispatch_input")
+    disp_t_axes = None
+    if disp_in is not None and env is not None and disp_in in env:
+        c = int(node.attr("capacity") or xe.shape[1])
+        disp_t_axes = _dispatch_token_axes(env[disp_in], c, mesh_shape)
+
     steps = []
-    out_t_axes = []
-    for a in expert_axes:
-        if t % math.prod(mesh_shape[x] for x in (out_t_axes + [a])) == 0:
-            steps.append(AllToAll(a, 0, 0))
+    out_t_axes: List[str] = []
+    ext = 1
+
+    def admit(a: str) -> bool:
+        """Cumulative token-dim divisibility: every axis the output
+        placement commits to must have a matching step, and vice versa."""
+        nonlocal ext
+        if t % (ext * mesh_shape[a]) == 0:
+            ext *= mesh_shape[a]
             out_t_axes.append(a)
-        else:
-            steps.append(AllGather(a, 0))
+            return True
+        return False
+
+    if disp_t_axes is not None:
+        # the exact dispatch round trip: tokens return to their
+        # pre-dispatch sharding (those axes divided t by construction)
+        for a in disp_t_axes:
+            admit(a)
+        for a in expert_axes:
+            steps.append(AllToAll(a, 0, 0) if a in disp_t_axes else AllGather(a, 0))
+    else:
+        # capacity axes return to the token dim when it admits them;
+        # otherwise the capacity dim gathers first
+        for a in pxe[1]:
+            if not admit(a):
+                steps.append(AllGather(a, 1))
+        for a in expert_axes:
+            if admit(a):
+                steps.append(AllToAll(a, 0, 0))
+            else:
+                steps.append(AllGather(a, 0))
     out = AxeSpec.sharded(
         (t, xe.shape[2]), xe.space,
         {i: a for i, a in ((0, tuple(out_t_axes)), (1, d_axes)) if a},
@@ -422,6 +506,9 @@ def rule_moe_combine(node: OpNode, xe: AxeSpec):
     return out, redists
 
 
+rule_moe_combine._wants_env = True
+
+
 def rule_ssm_mix(node: OpNode, x: AxeSpec, b: AxeSpec, c: AxeSpec, dt: AxeSpec):
     """The SSD state-space mixer ``(x [T, di], B [T, N], C [T, N],
     dt [T, H]) → y [T, di]``. The recurrence is nonlinear in the layout
@@ -431,11 +518,25 @@ def rule_ssm_mix(node: OpNode, x: AxeSpec, b: AxeSpec, c: AxeSpec, dt: AxeSpec):
     mesh_shape = x.space.mesh_shape
     px = x.placement()
     redists = []
-    if x.partial:
-        resolved = x.with_placement({i: e for i, e in enumerate(px) if e})
-        redists.append(redistribute(x, resolved, node.inputs[0]))
-        x = resolved
+    # the recurrence scans within sequences: a token sharding that
+    # splits mid-sequence (batch % extent != 0) must gather first
+    batch = node.attr("batch")
     t_axes = px[0]
+    if batch is not None:
+        kept = []
+        ext = 1
+        for a in t_axes:
+            if int(batch) % (ext * mesh_shape[a]) == 0:
+                kept.append(a)
+                ext *= mesh_shape[a]
+        t_axes = tuple(kept)
+    want_x = x.with_placement(
+        {i: e for i, e in enumerate((t_axes,) + px[1:]) if e}
+    )
+    if x.partial or not x.equivalent(want_x):
+        redists.append(redistribute(x, want_x, node.inputs[0]))
+        x = want_x
+    px = x.placement()
     for name, op in zip(node.inputs[1:], (b, c, dt)):
         want_pl: Dict[int, Tuple[str, ...]] = {}
         if t_axes:
@@ -496,8 +597,9 @@ def propagate(
             operands = [env[i] for i in node.inputs]
         except KeyError as e:
             raise PropagationError(f"{node.name}: unknown input {e}") from e
+        kw = {"env": env} if getattr(rule, "_wants_env", False) else {}
         try:
-            out_spec, redists = rule(node, *operands)
+            out_spec, redists = rule(node, *operands, **kw)
         except SpecError as e:
             raise PropagationError(f"{node.name}: {e}") from e
         env[node.out] = out_spec

@@ -18,6 +18,7 @@ heads, whisper: 20 heads).
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
@@ -375,27 +376,35 @@ def sharding_tree(specs: Any, mesh) -> Any:
 
 #: graph input tensor (base name, per repro.axe.graphs) → the param-rule
 #: names it covers as (param_name, param_rank, graph-dim → param-dim
-#: placement carry map). E.g. the fused QKV projection weight
-#: ``wqkv [d, (H+2KV)·hd]`` solves one placement whose feature axes land
-#: on the head dim (dim 1) of the separate rank-3 ``wq [d, H, hd]`` /
-#: ``wk``/``wv [d, KV, hd]`` param leaves.
+#: placement carry map). The graphs keep projections split exactly as
+#: the models do (``wq [d, H·hd]`` is the flattened, head-major view of
+#: the rank-3 ``wq [d, H, hd]`` leaf, so its feature axes land on the
+#: head dim); the fused legacy names (``wqkv``/``wi``/``moe_wi``) stay
+#: resolvable for plans produced by pre-compile graphs.
 GRAPH_PARAM_TARGETS: Dict[
     str, Tuple[Tuple[str, int, Tuple[Tuple[int, int], ...]], ...]
 ] = {
     "embed": (("embed", 2, ((0, 0), (1, 1))),),
     "lm_head": (("lm_head", 2, ((0, 0), (1, 1))),),
+    "wq": (("wq", 3, ((0, 0), (1, 1))),),
+    "wk": (("wk", 3, ((0, 0), (1, 1))),),
+    "wv": (("wv", 3, ((0, 0), (1, 1))),),
     "wqkv": (
         ("wq", 3, ((0, 0), (1, 1))),
         ("wk", 3, ((0, 0), (1, 1))),
         ("wv", 3, ((0, 0), (1, 1))),
     ),
     "wo": (("attn.wo", 3, ((0, 0), (1, 2))),),
+    "wg": (("wg", 2, ((0, 0), (1, 1))),),
+    "wu": (("wu", 2, ((0, 0), (1, 1))),),
     "wi": (
         ("wi", 2, ((0, 0), (1, 1))),
         ("wg", 2, ((0, 0), (1, 1))),
         ("wu", 2, ((0, 0), (1, 1))),
     ),
     "wo2": (("mlp.wo", 2, ((0, 0), (1, 1))),),
+    "moe_wg": (("moe.wg", 3, ((0, 0), (1, 1), (2, 2))),),
+    "moe_wu": (("moe.wu", 3, ((0, 0), (1, 1), (2, 2))),),
     "moe_wi": (
         ("moe.wg", 3, ((0, 0), (1, 1), (2, 2))),
         ("moe.wu", 3, ((0, 0), (1, 1), (2, 2))),
@@ -410,6 +419,27 @@ GRAPH_PARAM_TARGETS: Dict[
 }
 
 
+class PlanDivisibilityWarning(UserWarning):
+    """A solved placement axis could not be carried onto a param leaf
+    because the leaf's dim extent does not divide the mesh extent.
+    Structured: ``.param`` (leaf rule name), ``.dim`` (leaf dim index),
+    ``.axes`` (the dropped mesh axes), ``.spec`` (the solved AxeSpec
+    signature)."""
+
+    def __init__(self, param: str, dim: int, axes: Tuple[str, ...], spec: str,
+                 size: int, ext: int):
+        self.param, self.dim, self.axes, self.spec = param, dim, axes, spec
+        super().__init__(
+            f"from_plan: dropping solved axes {axes} from {param!r} dim {dim} "
+            f"(size {size} % mesh extent {ext} != 0; solved spec {spec})"
+        )
+
+
+#: one warning per (param, dim, axes) per process — a stacked scan tree
+#: resolves the same leaf once per layer and must not spam
+_DIV_WARNED: set = set()
+
+
 class PlanRules:
     """A solved-plan resolver for :func:`param_specs`.
 
@@ -418,7 +448,10 @@ class PlanRules:
     wins — stacked/scanned param leaves carry one placement for every
     layer) and translates it onto param-tree leaves via
     :data:`GRAPH_PARAM_TARGETS`. Axes the leaf's dim extents do not
-    admit are dropped per-dim, exactly like the preference tables."""
+    admit are dropped per-dim, exactly like the preference tables —
+    each drop raises one structured :class:`PlanDivisibilityWarning`
+    naming the leaf, the dim, and the solved spec, instead of silently
+    unsharding."""
 
     def __init__(self, specs: Mapping[str, AxeSpec]):
         self.specs: Dict[str, AxeSpec] = {}
@@ -477,6 +510,17 @@ class PlanRules:
             ext = math.prod(mesh_shape[a] for a in axes)
             if shape[lead + pdim] % ext == 0:
                 placement[lead + pdim] = axes
+            else:
+                key = (path_string, lead + pdim, axes)
+                if key not in _DIV_WARNED:
+                    _DIV_WARNED.add(key)
+                    warnings.warn(
+                        PlanDivisibilityWarning(
+                            path_string, lead + pdim, axes, solved.signature(),
+                            shape[lead + pdim], ext,
+                        ),
+                        stacklevel=2,
+                    )
         try:
             return AxeSpec.sharded(shape, space, placement, dtype)
         except SpecError:

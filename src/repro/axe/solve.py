@@ -384,9 +384,10 @@ def solve(
             for combo in itertools.product(*cand_lists) if free else ((),):
                 env = dict(st.env)
                 env.update(zip(free, combo))
+                kw = {"env": env} if getattr(rule, "_wants_env", False) else {}
                 try:
                     operands = [env[i] for i in node.inputs]
-                    out_spec, redists = rule(node, *operands)
+                    out_spec, redists = rule(node, *operands, **kw)
                 except (SpecError, PropagationError):
                     continue
                 explored += 1

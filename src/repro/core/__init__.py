@@ -21,7 +21,7 @@ from repro.core.layout import (
     tile_of,
 )
 from repro.core.axes import MESH_AXES, MEM_AXIS, AxisKind, axis_kind, is_mesh_axis
-from repro.core.dtensor import DTensorSpec, layout_of_pspec, pspec_of_layout
+from repro.core.dtensor import DTensorSpec
 from repro.core.scopes import Scope, current_scope, scope
 
 __all__ = [
@@ -29,6 +29,15 @@ __all__ = [
     "SliceError", "TileError", "canonicalize", "direct_sum", "from_shape",
     "group", "layouts_equal", "slice_layout", "strided", "tile",
     "tile_merged", "tile_of", "MESH_AXES", "MEM_AXIS", "AxisKind",
-    "axis_kind", "is_mesh_axis", "DTensorSpec", "layout_of_pspec",
-    "pspec_of_layout", "Scope", "current_scope", "scope",
+    "axis_kind", "is_mesh_axis", "DTensorSpec", "Scope", "current_scope",
+    "scope",
 ]
+
+
+def __getattr__(name: str):
+    if name in ("layout_of_pspec", "pspec_of_layout"):
+        from repro._deprecation import removed
+
+        raise removed(f"repro.core.{name}",
+                      f"repro.axe.lower.{name}", doc="docs/axespec.md")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

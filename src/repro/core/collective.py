@@ -169,8 +169,10 @@ def lower_step(x: jax.Array, step: Step) -> jax.Array:
             x, step.axis, split_axis=step.dst_dim, concat_axis=step.src_dim, tiled=True
         )
     if isinstance(step, DynamicSlice):
+        from repro import compat
+
         idx = jax.lax.axis_index(step.axis)
-        size = jax.lax.axis_size(step.axis)
+        size = compat.axis_size(step.axis)  # jax.lax.axis_size is new-jax-only
         chunk = x.shape[step.dim] // size
         return jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=step.dim)
     raise TypeError(f"unknown step {step}")

@@ -14,16 +14,17 @@ it operationally by converting both ways:
 Model code builds Axe layouts; NamedShardings handed to ``jax.jit`` are
 derived, never hand-written.
 
-Both conversions are now thin shims over the unified AxeSpec lowering
-adapter in ``repro.axe.lower`` (see docs/axespec.md); ``DTensorSpec``
-remains the distribution-layer signature type the collective layer
-(``core.collective``) plans over.
+The PR-2 conversion shims (``layout_of_pspec`` / ``pspec_of_layout``)
+reached the end of their deprecation window and were deleted — both
+live in the unified AxeSpec lowering adapter ``repro.axe.lower`` (see
+docs/axespec.md). ``DTensorSpec`` remains the distribution-layer
+signature type the collective layer (``core.collective``) plans over.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Mapping, Sequence, Tuple, Union
+from typing import Mapping, Tuple, Union
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -33,35 +34,13 @@ from repro.core.layout import Layout, layouts_equal
 PSpecEntry = Union[None, str, Tuple[str, ...]]
 
 
-def layout_of_pspec(
-    shape: Sequence[int],
-    pspec: Sequence[PSpecEntry],
-    mesh_shape: Mapping[str, int],
-) -> Layout:
-    """Deprecated re-export of ``repro.axe.lower.layout_of_pspec`` (the
-    AxeSpec inter-device adapter); warns on call."""
-    from repro._deprecation import warn_deprecated
-    from repro.axe import lower as _axe_lower
+def __getattr__(name: str):
+    if name in ("layout_of_pspec", "pspec_of_layout"):
+        from repro._deprecation import removed
 
-    warn_deprecated("repro.core.dtensor.layout_of_pspec",
-                    "repro.axe.lower.layout_of_pspec", doc="docs/axespec.md")
-    return _axe_lower.layout_of_pspec(shape, pspec, mesh_shape)
-
-
-def pspec_of_layout(
-    layout: Layout,
-    shape: Sequence[int],
-    mesh_shape: Mapping[str, int],
-) -> P:
-    """Deprecated re-export of ``repro.axe.lower.pspec_of_layout``
-    (lowered from ``AxeSpec`` via ``repro.axe.lower.to_pspec``); warns
-    on call."""
-    from repro._deprecation import warn_deprecated
-    from repro.axe import lower as _axe_lower
-
-    warn_deprecated("repro.core.dtensor.pspec_of_layout",
-                    "repro.axe.lower.pspec_of_layout", doc="docs/axespec.md")
-    return _axe_lower.pspec_of_layout(layout, shape, mesh_shape)
+        raise removed(f"repro.core.dtensor.{name}",
+                      f"repro.axe.lower.{name}", doc="docs/axespec.md")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,5 +1,5 @@
 # Pallas kernels for the compute hot-spots the paper optimizes,
 # written as axe.program stage graphs (see repro.kernels.programs —
-# the canonical entry points — and docs/kernel-dsl.md).
-# repro.kernels.ops keeps the legacy keyword-compatible wrappers as
-# deprecated shims.
+# the canonical entry points — and docs/kernel-dsl.md). The legacy
+# keyword wrappers in repro.kernels.ops were removed after their
+# deprecation window; its module __getattr__ points at the programs.

@@ -1,62 +1,26 @@
-"""Deprecated shims: the pre-DSL jit'd kernel wrappers.
+"""REMOVED: the pre-DSL jit'd kernel wrappers.
 
-Every function here is a single-expression, keyword-compatible delegate
-to the corresponding ``axe.program`` (``repro.kernels.programs``) and
-emits a ``DeprecationWarning`` on call. New code calls the programs
-directly — block sizes become per-stage schedules
-(``program_name/stage_name`` keys in ``repro.tune``), and placement
-comes from operand AxeSpecs (``arg_specs=``), so there is nothing left
-for a wrapper layer to plumb. See docs/kernel-dsl.md (migration table).
+The PR-3 keyword-compatible shims that lived here (``matmul``,
+``flash_attention``, ``moe_gemm``, ``rmsnorm`` with their ``block_*``
+keyword plumbing) reached the end of their deprecation window and were
+deleted. Call the ``axe.program`` entry points directly
+(``repro.kernels.programs``): block sizes are per-stage schedules
+(``program_name/stage_name`` keys in ``repro.tune``) and placement
+comes from operand AxeSpecs (``arg_specs=``). See docs/kernel-dsl.md
+(migration table).
 """
 from __future__ import annotations
 
-from repro._deprecation import warn_deprecated
-from repro.kernels import programs as _programs
+from repro._deprecation import removed
+
+_MIGRATIONS = {
+    "matmul": "repro.kernels.programs.matmul",
+    "flash_attention": "repro.kernels.programs.flash_attention",
+    "moe_gemm": "repro.kernels.programs.moe_gemm",
+    "rmsnorm": "repro.kernels.programs.rmsnorm",
+}
 
 
-def _deprecated(old: str, new: str) -> None:
-    warn_deprecated(f"repro.kernels.ops.{old}", new, stacklevel=4)
-
-
-def _blocks(**named):
-    return {k: v for k, v in named.items() if v is not None} or None
-
-
-def matmul(a, b, *, block_m: int | None = None, block_n: int | None = None,
-           block_k: int | None = None, a_spec=None, b_spec=None):
-    _deprecated("matmul", "repro.kernels.programs.matmul")
-    return _programs.matmul(
-        a, b, stage="tile", impl="kernel",
-        blocks=_blocks(bm=block_m, bn=block_n, bk=block_k),
-        arg_specs=(a_spec, b_spec),
-    )
-
-
-def flash_attention(
-    q, k, v, *, causal: bool = False, window=None, scale=None,
-    block_q: int | None = None, block_kv: int | None = None,
-    q_spec=None, kv_spec=None,
-):
-    _deprecated("flash_attention", "repro.kernels.programs.flash_attention")
-    return _programs.flash_attention(
-        q, k, v, causal=causal, window=window, scale=scale,
-        blocks=_blocks(bq=block_q, bkv=block_kv),
-        arg_specs=(q_spec, kv_spec),
-    )
-
-
-def moe_gemm(x, w, *, block_c: int | None = None, block_f: int | None = None,
-             block_d: int | None = None, x_spec=None, w_spec=None):
-    _deprecated("moe_gemm", "repro.kernels.programs.moe_gemm")
-    return _programs.moe_gemm(
-        x, w, stage="expert_gemm", impl="kernel",
-        blocks=_blocks(bc=block_c, bf=block_f, bd=block_d),
-        arg_specs=(x_spec, w_spec),
-    )
-
-
-def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
-    _deprecated("rmsnorm", "repro.kernels.programs.rmsnorm")
-    return _programs.rmsnorm(
-        x, w, stage="rows", impl="kernel", blocks={"brows": block_rows}, eps=eps
-    )
+def __getattr__(name: str):
+    new = _MIGRATIONS.get(name, "repro.kernels.programs")
+    raise removed(f"repro.kernels.ops.{name}", new)

@@ -1,5 +1,7 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# respect a caller-set XLA_FLAGS (the CI execute-smoke leg pins 8 host
+# devices); default to the 512-device deviceless-lowering geometry
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell
 with ShapeDtypeStruct inputs (no allocation), record memory/cost
@@ -10,9 +12,15 @@ AxeSpec layout plan (per-op output specs, redistribution collectives,
 and comm bytes from ``collective.plan_comm_bytes``) for one decoder
 layer — the full layout story with no devices at all.
 
+``--solve --execute`` goes the other way: compile the solved plan with
+``axe.compile`` on this host's devices (smoke-reduced config), run the
+numerics, and cross-check the redistribution collectives the traced
+body *issued* against the plan and the solver's Decision trace.
+
 Usage:
     python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
     python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k --layout-plan
+    python -m repro.launch.dryrun --arch qwen3-4b --solve --execute
     python -m repro.launch.dryrun --all --out results.jsonl
 """
 import argparse
@@ -116,7 +124,11 @@ def solve_cell(
     # the solved specs' canonical layout signature
     schedules = {}
     for e in res.plan.entries:
-        in_specs = [res.plan.env[i] for i in e.op.inputs]
+        if e.op.kind == "finalize":
+            continue
+        # post-redistribution specs: the local problem the backend's
+        # program stage actually resolves its schedule for
+        in_specs = e.input_specs(res.plan.env)
         sp = tune_planner.plan_from_specs(e.op.kind, in_specs, backend="tpu")
         if sp is not None and sp.schedule is not None:
             schedules[e.op.name] = {
@@ -128,6 +140,123 @@ def solve_cell(
     record["status"] = "ok"
     if verbose:
         print(res.describe(trace=trace))
+    return record
+
+
+def execute_cell(
+    arch: str,
+    *,
+    batch: int = 4,
+    seq: int = 32,
+    beam: int = 4,
+    verbose: bool = True,
+):
+    """Compile the solved plan with ``axe.compile`` and *run* it on
+    this host's devices (smoke-reduced config): checks the numerics
+    against the reference model forward and cross-checks the
+    redistribution collectives the traced body issued against the plan
+    and the solver's per-op Decision comm accounting."""
+    import dataclasses as _dc
+
+    import numpy as np
+
+    from repro.axe.compile import (
+        SUPPORTED_FAMILIES, compile as axe_compile, model_inputs,
+    )
+    from repro.axe.graphs import model_graph
+    from repro.axe.solve import solve
+    from repro.configs import smoke_variant
+    from repro.models import transformer as tf_mod
+
+    import numpy as _np
+    from jax.sharding import Mesh
+
+    cfg = smoke_variant(get_config(arch))
+    record = {"arch": arch, "mode": "execute", "batch": batch, "seq": seq}
+    if cfg.family not in SUPPORTED_FAMILIES:
+        record.update(status="skipped",
+                      reason=f"family {cfg.family} has no model binding")
+        return record
+    if cfg.is_moe:
+        # drop-free capacity: local (sharded) and global (reference)
+        # routing then agree exactly, so the numeric check is strict
+        cfg = _dc.replace(cfg, capacity_factor=float(cfg.num_experts))
+
+    # unlike the deviceless lowering modes, --execute RUNS the numerics:
+    # cap the mesh at 8 devices even when this module's default 512
+    # forced host devices are in effect
+    n_dev = min(len(jax.devices()), 8)
+    model_deg = 4 if n_dev % 4 == 0 else n_dev
+    mesh = Mesh(
+        _np.asarray(jax.devices()[:n_dev]).reshape(n_dev // model_deg, model_deg),
+        ("data", "model"),
+    )
+    space = PhysicalSpace.from_mesh_shape(axe_rules.mesh_shape_of(mesh))
+    record["mesh_shape"] = space.mesh_shape
+
+    try:
+        graph = model_graph(cfg, batch, seq, space,
+                            dtype=cfg.dtype, layers=cfg.num_layers)
+        res = solve(graph, beam=beam, backend="tpu")
+        exe = axe_compile(graph, mesh, plan=res)
+
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(1), (batch, seq), 0, cfg.vocab_size, jnp.int32
+        )
+        t0 = time.time()
+        logits = exe(model_inputs(graph, cfg, params), tokens.reshape(-1))
+        logits = np.asarray(logits).reshape(batch, seq, -1)
+        record["run_s"] = round(time.time() - t0, 2)
+        if not np.all(np.isfinite(logits)):
+            raise RuntimeError("compiled forward produced non-finite logits")
+        ref = np.asarray(
+            tf_mod.lm_forward(params, {"tokens": tokens}, cfg, remat=False)
+        )
+        record["max_abs_diff"] = float(np.max(np.abs(logits - ref)))
+        tol = 5e-4 if cfg.dtype == "float32" else 5e-2
+        if record["max_abs_diff"] > tol:
+            raise RuntimeError(
+                f"compiled logits deviate from the reference forward by "
+                f"{record['max_abs_diff']:.2e} (> {tol:.0e})"
+            )
+
+        # --- cross-check: issued collectives == planned == decisions ---
+        observed = list(exe.observed_collectives)
+        planned = list(exe.collective_sequence())
+        if observed != planned:
+            raise RuntimeError(
+                f"traced body issued {len(observed)} redistributions but the "
+                f"plan records {len(planned)}: {observed} vs {planned}"
+            )
+        decision_comm = {d.op: d.comm_bytes for d in res.trace}
+        mismatches = [
+            (e.op.name, e.comm_bytes, decision_comm[e.op.name])
+            for e in exe.plan.entries
+            if e.op.name in decision_comm
+            and e.comm_bytes != decision_comm[e.op.name]
+        ]
+        if mismatches:
+            raise RuntimeError(
+                f"plan comm disagrees with the solver Decision trace: "
+                f"{mismatches[:4]}"
+            )
+        record.update(
+            status="ok",
+            collectives=len(planned),
+            comm_bytes=exe.plan.total_comm_bytes,
+            solved_comm_bytes=res.comm_bytes,
+            seeded_comm_bytes=res.seeded_comm_bytes,
+        )
+        if verbose:
+            print(f"EXEC {arch} mesh={space.signature()} "
+                  f"max|Δ|={record['max_abs_diff']:.2e} "
+                  f"collectives={len(planned)} (issued == planned == decisions) "
+                  f"comm={exe.plan.total_comm_bytes / 2**10:.1f} KiB/dev OK")
+    except Exception as e:  # record an error row; never abort a sweep
+        record.update(status="error", error=f"{type(e).__name__}: {e}")
+        record["traceback"] = traceback.format_exc()[-2000:]
     return record
 
 
@@ -320,13 +449,25 @@ def main():
                          "exits nonzero if any solved plan out-spends its seed")
     ap.add_argument("--solve-trace", action="store_true",
                     help="with --solve: print the per-op decision trace")
+    ap.add_argument("--execute", action="store_true",
+                    help="compile the solved plan (axe.compile) and RUN it "
+                         "on this host's devices: reference-numerics check "
+                         "+ issued-vs-planned collective cross-check "
+                         "(smoke-reduced config)")
+    ap.add_argument("--exec-batch", type=int, default=4)
+    ap.add_argument("--exec-seq", type=int, default=32)
     ap.add_argument("--layers", type=int, default=2,
                     help="decoder depth of the solved model graph")
     ap.add_argument("--beam", type=int, default=4, help="layout solver beam width")
     args = ap.parse_args()
 
     cells = []
-    if args.all:
+    if args.execute:
+        # execute_cell runs one smoke-shaped cell per arch (shape/mesh
+        # are fixed by the host's devices, so sweeping them is a no-op)
+        for arch in ([args.arch] if args.arch else ARCH_IDS):
+            cells.append((arch, args.shape or "train_4k", args.mesh))
+    elif args.all:
         for arch in ARCH_IDS:
             for shape in SHAPES:
                 for mesh in ("single", "multi"):
@@ -343,6 +484,18 @@ def main():
     failures = 0
     improved = 0
     for arch, shape, mesh in cells:
+        if args.execute:
+            rec = execute_cell(
+                arch, batch=args.exec_batch, seq=args.exec_seq, beam=args.beam,
+            )
+            line = json.dumps(rec)
+            if rec["status"] == "error":
+                failures += 1
+                print(line)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+            continue
         if args.solve or args.solve_compare:
             rec = solve_cell(
                 arch, shape, mesh == "multi",

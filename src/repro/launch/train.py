@@ -40,9 +40,14 @@ def main():
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--compress-pod-grads", action="store_true")
     ap.add_argument("--solve", action="store_true",
-                    help="solve param placements with the layout solver "
-                         "(repro.axe.solve) instead of the seeded rule tables")
+                    help="solve the layout (repro.axe.solve) and run the "
+                         "forward pass through the compiled executable "
+                         "(axe.compile) instead of the module wiring")
     ap.add_argument("--solve-beam", type=int, default=4)
+    ap.add_argument("--no-compiled-forward", action="store_true",
+                    help="with --solve: keep the legacy module-wired "
+                         "forward and only consume the solved param "
+                         "placements (deprecated path)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -66,17 +71,48 @@ def main():
     state = init_state(params, opt)
 
     plan = None
+    executable = None
     if args.solve:
+        from repro.axe.compile import SUPPORTED_FAMILIES
+        from repro.axe.compile import compile as axe_compile
         from repro.axe.graphs import model_graph
         from repro.axe.solve import solve
 
-        gs = model_graph(cfg, args.global_batch, args.seq, space, layers=2)
+        compiled = not args.no_compiled_forward and cfg.family in SUPPORTED_FAMILIES
+        # one solve serves both param placement and the compiled
+        # forward: full depth when the executable consumes it, the
+        # cheap 2-layer layout study otherwise. The executable sees
+        # per-microbatch activations (make_train_step splits the global
+        # batch before the loss), so the graph is built at that size.
+        assert args.global_batch % max(args.microbatches, 1) == 0, (
+            args.global_batch, args.microbatches)
+        mb_batch = args.global_batch // max(args.microbatches, 1)
+        gs = model_graph(
+            cfg, mb_batch, args.seq, space,
+            dtype=cfg.dtype, layers=cfg.num_layers if compiled else 2,
+        )
         res = solve(gs, beam=args.solve_beam, backend="tpu")
         plan = axe_rules.from_plan(res)
         print(f"layout solver: comm {res.seeded_comm_bytes / 2**20:.1f} -> "
               f"{res.comm_bytes / 2**20:.1f} MiB/dev "
               f"({100 * (res.comm_improvement or 0):.1f}% saved, "
               f"beam={res.beam}, {res.explored} states)")
+        if not compiled:
+            import warnings
+
+            warnings.warn(
+                "training on the module-wired forward under --solve is "
+                "deprecated; the compiled executable (axe.compile) is the "
+                "supported path (docs/compile.md)",
+                DeprecationWarning, stacklevel=1,
+            )
+        else:
+            # forward pass from the compiled graph under the SAME
+            # solved plan the params are placed with: its collectives
+            # run for real, fwd and bwd
+            executable = axe_compile(gs, mesh, plan=res)
+            print(f"compiled forward: {len(executable.plan.entries)} ops, "
+                  f"{len(executable.collective_sequence())} redistributions")
 
     p_specs = axe_rules.param_specs(params, space, fsdp=n_dev > 1, plan=plan)
     state_sh = None
@@ -96,10 +132,18 @@ def main():
         frontend=cfg.frontend, num_patches=cfg.num_patches,
         encoder_seq=cfg.encoder_seq, d_model=cfg.d_model, dtype=cfg.dtype,
     )
-    step_fn = make_train_step(
-        api.loss_fn, opt, microbatches=args.microbatches,
-        compress_pod_grads=args.compress_pod_grads,
-    )
+    if executable is not None:
+        from repro.train.train_loop import make_compiled_train_step
+
+        step_fn = make_compiled_train_step(
+            executable, cfg, opt, microbatches=args.microbatches,
+            compress_pod_grads=args.compress_pod_grads,
+        )
+    else:
+        step_fn = make_train_step(
+            api.loss_fn, opt, microbatches=args.microbatches,
+            compress_pod_grads=args.compress_pod_grads,
+        )
     jit_kwargs = {}
     if state_sh is not None:
         jit_kwargs = dict(in_shardings=(state_sh, None), out_shardings=(state_sh, None))

@@ -36,14 +36,23 @@ def capacity(tokens: int, cfg) -> int:
     return max(8, -(-c // 8) * 8)
 
 
-def _local_dispatch(xf: jax.Array, router: jax.Array, cfg):
-    """Route + sort + scatter local tokens into a dense [E, C, d] buffer.
+def local_dispatch(
+    xf: jax.Array,
+    router: jax.Array,
+    *,
+    num_experts: int,
+    experts_per_tok: int,
+    capacity: int,
+):
+    """Route + sort + scatter local tokens into a dense [E, C, d] buffer
+    with an explicit per-expert capacity (``axe.compile``'s MoE backend
+    passes the plan's per-shard contribution here).
 
     Returns (buf, combine_meta) where combine_meta carries what the
     gather/combine needs. Pure local compute — no collectives.
     """
     t, d = xf.shape
-    k, e = cfg.experts_per_tok, cfg.num_experts
+    k, e = experts_per_tok, num_experts
     logits = xf.astype(jnp.float32) @ router
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, expert_idx = jax.lax.top_k(probs, k)
@@ -62,7 +71,7 @@ def _local_dispatch(xf: jax.Array, router: jax.Array, cfg):
     starts = jnp.cumsum(counts) - counts
     pos_in_expert = jnp.arange(tk) - starts[sorted_expert]
 
-    c = capacity(t, cfg)
+    c = capacity
     keep = pos_in_expert < c
     dst = jnp.where(keep, sorted_expert * c + pos_in_expert, e * c)
 
@@ -75,7 +84,17 @@ def _local_dispatch(xf: jax.Array, router: jax.Array, cfg):
     return buf, meta
 
 
-def _local_combine(out: jax.Array, meta, t: int, d: int):
+def _local_dispatch(xf: jax.Array, router: jax.Array, cfg):
+    t = xf.shape[0]
+    return local_dispatch(
+        xf, router,
+        num_experts=cfg.num_experts,
+        experts_per_tok=cfg.experts_per_tok,
+        capacity=capacity(t, cfg),
+    )
+
+
+def local_combine(out: jax.Array, meta, t: int, d: int):
     e = out.shape[0]
     c = meta["c"]
     out_flat = out.reshape(e * c, d)
@@ -89,6 +108,9 @@ def _local_combine(out: jax.Array, meta, t: int, d: int):
         gathered * meta["sorted_gate"][:, None].astype(out_flat.dtype)
     )
     return y
+
+
+_local_combine = local_combine
 
 
 def _expert_ffn(buf: jax.Array, wg, wu, wo) -> jax.Array:

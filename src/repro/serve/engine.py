@@ -4,7 +4,7 @@ tracking (continuous-batching-lite) and greedy/temperature sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Mapping, Optional, Union
+from typing import Any, Dict, List, Mapping, Optional, Union  # noqa: F401
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,16 @@ class ServeEngine:
     (``repro.axe.solve.SolveResult``, a ``LayoutPlan``, or a plain
     name→AxeSpec assignment) consumed through ``rules.from_plan`` —
     param leaves the solver assigned take the *solved* placement and
-    only the rest fall back to the rule tables."""
+    only the rest fall back to the rule tables.
+
+    The full-sequence forward pass is constructed from ``axe.compile``
+    on the model-zoo graph (:meth:`compiled_forward` / :meth:`score`):
+    one :class:`~repro.axe.compile.Executable` per (batch, seq) whose
+    ops bind to the kernel programs and whose redistributions are the
+    solved plan's collectives — the same plan ``layout_plan`` places
+    params with. Incremental decode (:meth:`generate`) keeps the
+    cache-carrying model API; that is a serving-loop concern, not a
+    graph-compilation one."""
 
     api: Any                 # ModelAPI
     batch_size: int
@@ -53,6 +62,7 @@ class ServeEngine:
         if self.schedule_cache is not None:
             tune.use_cache(self.schedule_cache)
         self.params = None
+        self._compiled: Dict[tuple, Any] = {}
         self._decode = self._scheduled(jax.jit(self.api.decode_step))
         self._prefill = self._scheduled(jax.jit(self.api.prefill))
 
@@ -96,6 +106,49 @@ class ServeEngine:
 
     def load(self, params) -> None:
         self.params = self._place_params(params) if self.mesh is not None else params
+
+    #: compiled-forward memo bound: each entry holds a solved plan and a
+    #: jitted executable, so callers should bucket sequence lengths
+    MAX_COMPILED = 8
+
+    # -- compiled full-sequence forward (axe.compile) -------------------
+    def compiled_forward(self, seq: int, *, batch: Optional[int] = None,
+                         layers: Optional[int] = None):
+        """The :class:`~repro.axe.compile.Executable` for a
+        (batch, seq) full-sequence forward of this engine's model,
+        memoized per shape (FIFO-bounded at :data:`MAX_COMPILED` — each
+        miss solves + compiles, so bucket/pad sequence lengths rather
+        than scoring arbitrary ones). Uses ``layout_plan`` when it
+        covers this shape (the same solved layout the params were
+        placed with), else solves."""
+        from repro.axe.compile import model_executable
+
+        key = (batch or self.batch_size, seq, layers)
+        exe = self._compiled.get(key)
+        if exe is None:
+            exe = model_executable(
+                self.api.cfg, self.mesh, batch or self.batch_size, seq,
+                plan=self.layout_plan, layers=layers,
+                dtype=str(self.api.cfg.dtype),
+            )
+            while len(self._compiled) >= self.MAX_COMPILED:
+                self._compiled.pop(next(iter(self._compiled)))
+            self._compiled[key] = exe
+        return exe
+
+    def score(self, tokens: jax.Array) -> jax.Array:
+        """Full-sequence logits [B, S, V] through the compiled graph —
+        the engine's forward pass as one ``axe.compile`` executable
+        (sharing ``schedule_cache`` and the solved layout)."""
+        from repro.axe.compile import model_inputs
+
+        assert self.params is not None, "call load() first"
+        b, s = tokens.shape
+        exe = self.compiled_forward(s, batch=b)
+        inputs = model_inputs(exe.graph, self.api.cfg, self.params)
+        run = self._scheduled(exe)
+        logits = run(inputs, tokens.reshape(-1))
+        return logits.reshape(b, s, -1)
 
     def generate(
         self,

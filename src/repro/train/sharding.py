@@ -1,99 +1,33 @@
-"""Deprecated re-exports: PartitionSpec views of the AxeSpec rules.
+"""REMOVED: the PartitionSpec views of the AxeSpec rules.
 
-The rule tables live in ``repro.axe.rules`` (AxeSpec placement
-preferences; PartitionSpecs are *derived* through the inter-device
-lowering adapter ``repro.axe.lower.to_pspec``). Nothing inside this
-repo imports these wrappers anymore — each one is a single deprecated
-delegate kept for external callers, and every call emits a
-``DeprecationWarning``. New code consumes ``repro.axe.rules`` directly
-and lowers only at the jit boundary. See docs/axespec.md (migration
-notes) and docs/kernel-dsl.md.
+The PR-2 warn-and-delegate shims that lived here (``param_pspecs``,
+``batch_pspecs``, ``cache_pspecs``, ``opt_pspecs``, ``pick_pspec``,
+``fsdp_extend``, ``zero1_pspec``, ``shardings_of``, ``dp_axes``,
+``mesh_shape_of``) reached the end of their deprecation window and
+were deleted. The rule tables live in ``repro.axe.rules`` (AxeSpec
+placement preferences); PartitionSpecs are *derived* through the
+inter-device lowering adapter ``repro.axe.lower.to_pspec`` /
+``rules.pspec_tree``, and only at the jit boundary. See
+docs/axespec.md (migration notes).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Mapping
+from repro._deprecation import removed
 
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro._deprecation import warn_deprecated
-from repro.axe import lower as _lower
-from repro.axe import rules as _rules
-from repro.axe.spec import PhysicalSpace
-
-
-def _deprecated(old: str, new: str) -> None:
-    warn_deprecated(f"repro.train.sharding.{old}", new, doc="docs/axespec.md", stacklevel=4)
-
-
-def _space(mesh_shape: Mapping[str, int]) -> PhysicalSpace:
-    return PhysicalSpace.from_mesh_shape(mesh_shape)
+_MIGRATIONS = {
+    "mesh_shape_of": "repro.axe.rules.mesh_shape_of",
+    "dp_axes": "repro.axe.rules.dp_axes",
+    "pick_pspec": "repro.axe.rules.pick_spec + repro.axe.lower.to_pspec",
+    "fsdp_extend": "repro.axe.rules.fsdp_extend",
+    "zero1_pspec": "repro.axe.rules.zero1_extend",
+    "param_pspecs": "repro.axe.rules.param_specs + rules.pspec_tree",
+    "opt_pspecs": "repro.axe.rules.opt_specs + rules.pspec_tree",
+    "batch_pspecs": "repro.axe.rules.batch_specs + rules.pspec_tree",
+    "cache_pspecs": "repro.axe.rules.cache_specs + rules.pspec_tree",
+    "shardings_of": "repro.axe.rules.sharding_tree",
+}
 
 
-def mesh_shape_of(mesh: Mesh) -> Dict[str, int]:
-    _deprecated("mesh_shape_of", "repro.axe.rules.mesh_shape_of")
-    return _rules.mesh_shape_of(mesh)
-
-
-def dp_axes(mesh_shape: Mapping[str, int]):
-    _deprecated("dp_axes", "repro.axe.rules.dp_axes")
-    return _rules.dp_axes(mesh_shape)
-
-
-def pick_pspec(shape, preferences, mesh_shape: Mapping[str, int]) -> P:
-    _deprecated("pick_pspec", "repro.axe.rules.pick_spec")
-    return _lower.to_pspec(_rules.pick_spec(shape, preferences, _space(mesh_shape)))
-
-
-def fsdp_extend(pspec: P, shape, mesh_shape: Mapping[str, int], axes=("data",)) -> P:
-    _deprecated("fsdp_extend", "repro.axe.rules.fsdp_extend")
-    spec = _rules.spec_of_entries(shape, tuple(pspec), _space(mesh_shape))
-    return pspec if spec is None else _lower.to_pspec(_rules.fsdp_extend(spec, axes=axes))
-
-
-def zero1_pspec(pspec: P, shape, mesh_shape: Mapping[str, int]) -> P:
-    _deprecated("zero1_pspec", "repro.axe.rules.zero1_extend")
-    spec = _rules.spec_of_entries(shape, tuple(pspec), _space(mesh_shape))
-    return pspec if spec is None else _lower.to_pspec(_rules.zero1_extend(spec))
-
-
-def param_pspecs(params: Any, mesh_shape: Mapping[str, int], *,
-                 fsdp: bool = False, fsdp_axes=("data",)) -> Any:
-    _deprecated("param_pspecs", "repro.axe.rules.param_specs")
-    return _rules.pspec_tree(
-        _rules.param_specs(params, _space(mesh_shape), fsdp=fsdp, fsdp_axes=fsdp_axes)
-    )
-
-
-def opt_pspecs(params: Any, p_pspecs: Any, mesh_shape: Mapping[str, int], *,
-               zero1: bool = True) -> Any:
-    _deprecated("opt_pspecs", "repro.axe.rules.opt_specs")
-    if not zero1:
-        return p_pspecs
-    space = _space(mesh_shape)
-
-    def z1(p, ps):
-        spec = _rules.spec_of_entries(p.shape, tuple(ps), space)
-        return ps if spec is None else _lower.to_pspec(_rules.zero1_extend(spec))
-
-    return jax.tree.map(z1, params, p_pspecs)
-
-
-def batch_pspecs(batch: Mapping[str, Any], mesh_shape: Mapping[str, int]) -> Dict[str, P]:
-    _deprecated("batch_pspecs", "repro.axe.rules.batch_specs")
-    specs = _rules.batch_specs(batch, _space(mesh_shape))
-    return {k: _lower.to_pspec(s) for k, s in specs.items()}
-
-
-def cache_pspecs(cache: Any, mesh_shape: Mapping[str, int]) -> Any:
-    _deprecated("cache_pspecs", "repro.axe.rules.cache_specs")
-    return _rules.pspec_tree(_rules.cache_specs(cache, _space(mesh_shape)))
-
-
-def shardings_of(pspecs: Any, mesh: Mesh) -> Any:
-    _deprecated("shardings_of", "repro.axe.rules.sharding_tree")
-    return jax.tree.map(
-        lambda ps: NamedSharding(mesh, ps),
-        pspecs,
-        is_leaf=lambda x: isinstance(x, P),
-    )
+def __getattr__(name: str):
+    new = _MIGRATIONS.get(name, "repro.axe.rules")
+    raise removed(f"repro.train.sharding.{name}", new, doc="docs/axespec.md")

@@ -80,6 +80,22 @@ def make_train_step(
     return train_step
 
 
+def make_compiled_train_step(
+    executable,
+    cfg,
+    optimizer: AdamW,
+    **kwargs,
+) -> Callable[[TrainState, Dict[str, jax.Array]], tuple]:
+    """A train step whose forward pass is an ``axe.compile``
+    :class:`~repro.axe.compile.Executable` over the model graph instead
+    of the bespoke module wiring: the loss differentiates through the
+    executable's shard_map, so the solved plan's collectives run in the
+    backward too. This is the step ``launch/train.py --solve`` builds."""
+    from repro.axe.compile import compiled_loss_fn
+
+    return make_train_step(compiled_loss_fn(executable, cfg), optimizer, **kwargs)
+
+
 # ---------------------------------------------------------------------------
 # Trainer: checkpointing + straggler watchdog + restart
 # ---------------------------------------------------------------------------

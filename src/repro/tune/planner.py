@@ -446,7 +446,7 @@ def best_schedule(op: str, **kwargs) -> Optional[Schedule]:
 
 
 # ---------------------------------------------------------------------------
-# planning keyed on solved AxeSpecs (repro.axe.solve output)
+# planning keyed on solved AxeSpecs (repro.axe.solve / axe.compile)
 # ---------------------------------------------------------------------------
 
 #: layout-graph op kind → the planning family its local problem maps to
@@ -455,6 +455,28 @@ _SPEC_FAMILIES = {
     "attention": "flash_attention",
     "norm": "rmsnorm",
 }
+
+#: planning family → the ``program/stage`` key the op-backend binding
+#: (``axe.compile``) dispatches under. Schedules planned for a solved
+#: graph node are cached under the SAME key the program stage resolves
+#: at trace time, so autotuned winners flow into compiled executables.
+_STAGE_KEYS = {
+    "matmul": "matmul/tile",
+    "flash_attention": "flash_attention/attend",
+    "moe_gemm": "moe_gemm/expert_gemm",
+    "rmsnorm": "rmsnorm/rows",
+}
+
+
+def stage_key_for(kind: str, in_specs: Sequence) -> Optional[str]:
+    """The backend-stage schedule key one graph node dispatches under
+    (None for kinds with no tunable backend stage)."""
+    family = _SPEC_FAMILIES.get(kind)
+    if family is None:
+        return None
+    if kind == "matmul" and len(in_specs) > 1 and len(in_specs[1].shape) == 3:
+        family = "moe_gemm"
+    return _STAGE_KEYS[family]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -488,18 +510,21 @@ def plan_from_specs(
     propagation pass) settled on; their ``local_shape()`` is the problem
     the kernel actually runs, and their canonical signatures become the
     schedule-cache layout key — so a schedule tuned for a solved layout
-    is keyed by that layout, not by the global shapes. Returns None for
-    op kinds with no planning family (elementwise, reshape, ...)."""
-    family = _SPEC_FAMILIES.get(kind)
-    if family is None:
+    is keyed by that layout, not by the global shapes. Candidates are
+    keyed per (graph node kind → backend stage): the emitted op is the
+    ``program/stage`` key the compiled executable's program dispatch
+    resolves (``matmul/tile``, ``flash_attention/attend``, ...), so
+    autotuning through ``tune.autotune_program`` lands exactly where
+    ``axe.compile`` looks. Returns None for op kinds with no planning
+    family (elementwise, reshape, ...)."""
+    op = stage_key_for(kind, in_specs)
+    if op is None:
         return None
     from repro.tune.schedule import layout_signature
 
     locals_ = [tuple(s.local_shape()) for s in in_specs]
     dtypes = tuple(s.dtype for s in in_specs)
-    if kind == "matmul" and len(locals_[1]) == 3:
-        family = "moe_gemm"          # grouped per-expert GEMM
-    if kind == "matmul" and len(locals_[0]) > 2 and family == "matmul":
+    if op == _STAGE_KEYS["matmul"] and len(locals_[0]) > 2:
         # flatten leading batch dims into M for the 2D tiled kernel
         m = 1
         for d in locals_[0][:-1]:
@@ -507,9 +532,9 @@ def plan_from_specs(
         locals_ = [(m, locals_[0][-1])] + locals_[1:]
     sig = layout_signature(*in_specs)
     cands = plan(
-        family, shapes=locals_, dtypes=dtypes, backend=backend, top_k=top_k
+        op, shapes=locals_, dtypes=dtypes, backend=backend, top_k=top_k
     )
-    return SpecPlan(family, tuple(locals_), dtypes, sig, tuple(cands))
+    return SpecPlan(op, tuple(locals_), dtypes, sig, tuple(cands))
 
 
 def schedule_from_specs(

@@ -327,7 +327,9 @@ def test_propagate_attention_resolves_q_partial_before_softmax():
 
 
 def test_propagate_moe_dispatch_resolves_partial_first():
-    x = AxeSpec.sharded((512, 256), SPACE, {0: ("data",)}, partial=("model",))
+    """Pending partials reduce before routing; tokens sharded over the
+    expert axis exchange capacity buffers (the EP AllToAll)."""
+    x = AxeSpec.sharded((512, 256), SPACE, {0: ("model",)}, partial=("data",))
     plan = propagate(
         [OpNode("disp", "moe_dispatch", ("x",), "xe",
                 attrs=(("experts", 4), ("capacity", 128)))],
@@ -337,6 +339,44 @@ def test_propagate_moe_dispatch_resolves_partial_first():
     assert entry.out_spec.partial == ()
     steps = [type(s).__name__ for r in entry.redistributions for s in r.steps]
     assert steps.index("AllReduce") < steps.index("AllToAll")
+
+
+def test_propagate_moe_dispatch_replicated_tokens_slice_experts():
+    """Tokens replicated over the expert axis: each expert owner keeps
+    its own slice locally (no wire traffic); the token sharding carries
+    onto the capacity dim."""
+    x = AxeSpec.sharded((512, 256), SPACE, {0: ("data",)})
+    plan = propagate(
+        [OpNode("disp", "moe_dispatch", ("x",), "xe",
+                attrs=(("experts", 4), ("capacity", 128)))],
+        {"x": x},
+    )
+    (entry,) = plan.entries
+    assert entry.out_spec.placement()[0] == ("model",)
+    assert entry.out_spec.placement()[1] == ("data",)
+    steps = [type(s).__name__ for r in entry.redistributions for s in r.steps]
+    assert steps == ["DynamicSlice"]
+    assert entry.comm_bytes == 0
+
+
+def test_moe_combine_steps_consistent_with_out_spec():
+    """Every token axis the combine's output placement commits to must
+    correspond to an emitted step and vice versa — an expert axis the
+    token count cannot absorb gathers instead of silently diverging
+    from the spec (found by review: data sharded over 'model' while the
+    spec claimed replicated)."""
+    space = PhysicalSpace.from_mesh_shape({"data": 2, "model": 8})
+    xe = AxeSpec.sharded((8, 16, 4), space, {0: ("model",), 1: ("data",)})
+    plan = propagate(
+        [OpNode("c", "moe_combine", ("xe",), "y", attrs=(("tokens", 8),))],
+        {"xe": xe},
+    )
+    (entry,) = plan.entries
+    # tokens=8 admits data(2) from the capacity dim but not model(8) on
+    # top of it -> the expert axis AllGathers, the spec stays truthful
+    assert entry.out_spec.placement()[0] == ("data",)
+    steps = [type(s).__name__ for r in entry.redistributions for s in r.steps]
+    assert steps == ["AllGather"]
 
 
 def test_sharded_rejects_out_of_range_placement_dim():
@@ -365,7 +405,7 @@ def test_propagate_graph_resolves_partial_with_allreduce():
 
 
 def test_propagate_moe_dispatch_all_to_all():
-    x = AxeSpec.sharded((4096, 512), SPACE, {0: ("data",)})
+    x = AxeSpec.sharded((4096, 512), SPACE, {0: ("data", "model")})
     plan = propagate(
         [OpNode("disp", "moe_dispatch", ("x",), "xe",
                 attrs=(("experts", 8), ("capacity", 1024)))],
@@ -374,6 +414,8 @@ def test_propagate_moe_dispatch_all_to_all():
     (entry,) = plan.entries
     assert entry.out_spec.shape == (8, 1024, 512)
     assert entry.out_spec.placement()[0] == ("model",)
+    # the non-expert token axes carry onto the capacity dim
+    assert entry.out_spec.placement()[1] == ("data",)
     steps = [type(s).__name__ for r in entry.redistributions for s in r.steps]
     assert steps == ["AllToAll"]
 
@@ -413,12 +455,23 @@ def test_redistribution_comm_bytes_match_collective_model():
 # ---------------------------------------------------------------------------
 
 
-def test_sharding_shims_lower_from_axespec():
+def test_sharding_shims_removed_with_migration_pointer():
+    """The PR-2 train.sharding shims' deprecation window lapsed: every
+    attribute now raises with a pointer at the axe.rules replacement.
+    The AxeSpec rules produce the same lowered PartitionSpecs the shims
+    used to derive."""
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
     from repro.axe import rules
     from repro.train import sharding as shim
+
+    with pytest.raises(AttributeError, match="repro.axe.rules.param_specs"):
+        shim.param_pspecs
+    with pytest.raises(AttributeError, match="removed"):
+        shim.batch_pspecs
+    with pytest.raises(AttributeError, match="repro.axe.rules"):
+        shim.no_such_name_ever
 
     mesh_shape = {"data": 16, "model": 16}
     space = PhysicalSpace.from_mesh_shape(mesh_shape)
@@ -430,16 +483,7 @@ def test_sharding_shims_lower_from_axespec():
                     "wo": np.zeros((9728, 2560), np.float32)},
         }
     }
-    specs = rules.param_specs(params, space)
-    with pytest.warns(DeprecationWarning, match="param_pspecs is deprecated"):
-        pspecs = shim.param_pspecs(params, mesh_shape)
-    import jax
-
-    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, AxeSpec))
-    flat_ps = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
-    assert len(flat_specs) == len(flat_ps) == 4
-    for s, p in zip(flat_specs, flat_ps):
-        assert to_pspec(s) == p
+    pspecs = rules.pspec_tree(rules.param_specs(params, space))
     # head-sharded wq on trailing dims
     assert pspecs["layers"]["attn"]["wq"] == P(None, "model", None)
 

@@ -389,35 +389,27 @@ def test_force_schedule_scoped_invalid_impl_raises(tmp_cache):
 
 
 # ---------------------------------------------------------------------------
-# legacy shims: keyword compatibility + DeprecationWarning + parity
+# legacy shims: removed after their deprecation window
 # ---------------------------------------------------------------------------
 
-def test_kernels_ops_shims_warn_and_match():
+def test_kernels_ops_shims_removed_with_migration_pointer():
+    """The PR-3 kernels.ops keyword shims are gone; the module points
+    every stale import at the corresponding program. The programs
+    themselves cover the old keyword surface (pinned blocks)."""
     from repro.kernels import ops as kops
+
+    with pytest.raises(AttributeError, match="repro.kernels.programs.matmul"):
+        kops.matmul
+    with pytest.raises(AttributeError, match="flash_attention"):
+        kops.flash_attention
+    with pytest.raises(AttributeError, match="repro.kernels.programs"):
+        kops.anything_else
 
     k1, k2 = jax.random.split(jax.random.PRNGKey(7))
     a, b = _rand(k1, (256, 512), jnp.float32), _rand(k2, (512, 256), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="kernels.ops.matmul is deprecated"):
-        got = kops.matmul(a, b, block_m=128, block_n=128, block_k=256)
+    got = programs.matmul(a, b, stage="tile", impl="kernel",
+                          blocks={"bm": 128, "bn": 128, "bk": 256})
     np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
-
-    q = _rand(jax.random.PRNGKey(8), (1, 2, 128, 64), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="flash_attention is deprecated"):
-        got = kops.flash_attention(q, q, q, causal=True)
-    np.testing.assert_allclose(got, ref.attention_ref(q, q, q, causal=True),
-                               rtol=2e-5, atol=2e-5)
-
-    x = _rand(jax.random.PRNGKey(9), (2, 128, 256), jnp.float32)
-    w = _rand(jax.random.PRNGKey(10), (2, 256, 128), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="moe_gemm is deprecated"):
-        got = kops.moe_gemm(x, w)
-    np.testing.assert_allclose(got, ref.moe_gemm_ref(x, w), rtol=1e-3, atol=1e-4)
-
-    xr = _rand(jax.random.PRNGKey(11), (1000, 256), jnp.float32)
-    wr = _rand(jax.random.PRNGKey(12), (256,), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="rmsnorm is deprecated"):
-        got = kops.rmsnorm(xr, wr)
-    np.testing.assert_allclose(got, ref.rmsnorm_ref(xr, wr), rtol=1e-3, atol=1e-4)
 
 
 def test_core_ops_matmul_shim_warns_and_dispatches():
@@ -458,32 +450,31 @@ def test_core_ops_matmul_shim_keeps_legacy_tiling_fallback():
         matmul_pallas(a, b, block_m=128, block_n=128, block_k=128, interpret=True)
 
 
-def test_train_sharding_shims_warn():
+def test_train_sharding_shims_removed():
+    from repro.axe import rules
     from repro.train import sharding as shim
 
-    mesh_shape = {"data": 4, "model": 2}
-    with pytest.warns(DeprecationWarning, match="dp_axes is deprecated"):
-        assert shim.dp_axes(mesh_shape) == ("data",)
-    with pytest.warns(DeprecationWarning, match="batch_pspecs is deprecated"):
-        specs = shim.batch_pspecs(
-            {"tokens": jnp.zeros((8, 16), jnp.int32)}, mesh_shape
-        )
-    assert "tokens" in specs
+    with pytest.raises(AttributeError, match="repro.axe.rules.dp_axes"):
+        shim.dp_axes
+    assert rules.dp_axes({"data": 4, "model": 2}) == ("data",)
 
 
-def test_dtensor_shims_warn_and_match():
+def test_dtensor_shims_removed_adapter_remains():
     from jax.sharding import PartitionSpec as P
 
     from repro.axe import lower as axe_lower
     from repro.core import dtensor
+    import repro.core as core_pkg
 
+    with pytest.raises(AttributeError, match="repro.axe.lower.layout_of_pspec"):
+        dtensor.layout_of_pspec
+    with pytest.raises(AttributeError, match="repro.axe.lower.pspec_of_layout"):
+        core_pkg.pspec_of_layout
+    # DTensorSpec (the collective layer's signature type) remains
     mesh_shape = {"data": 4, "model": 2}
-    with pytest.warns(DeprecationWarning, match="layout_of_pspec is deprecated"):
-        L = dtensor.layout_of_pspec((64, 128), ("data", "model"), mesh_shape)
-    assert L == axe_lower.layout_of_pspec((64, 128), ("data", "model"), mesh_shape)
-    with pytest.warns(DeprecationWarning, match="pspec_of_layout is deprecated"):
-        back = dtensor.pspec_of_layout(L, (64, 128), mesh_shape)
-    assert back == P("data", "model")
+    L = axe_lower.layout_of_pspec((64, 128), ("data", "model"), mesh_shape)
+    spec = dtensor.DTensorSpec((64, 128), L, "float32")
+    assert spec.pspec(mesh_shape) == P("data", "model")
 
 
 # ---------------------------------------------------------------------------
