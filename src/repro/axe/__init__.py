@@ -49,7 +49,14 @@ from repro.axe.propagate import (
     propagate_matmul,
     redistribute,
 )
-from repro.axe.graphs import GraphSpec, TensorMeta, decoder_layer_graph, model_graph
+from repro.axe.graphs import (
+    GraphSpec,
+    TensorMeta,
+    cache_window,
+    decode_graph,
+    decoder_layer_graph,
+    model_graph,
+)
 from repro.axe.solve import (
     Decision,
     SolveError,
@@ -63,6 +70,9 @@ from repro.axe.compile import (
     LoweredOp,
     compile,
     compiled_loss_fn,
+    decode_cache,
+    decode_executable,
+    decode_inputs,
     model_executable,
     model_inputs,
     op_backend,
@@ -95,8 +105,13 @@ __all__ = [
     "StageError",
     "TensorMeta",
     "block_lowering",
+    "cache_window",
     "compile",
     "compiled_loss_fn",
+    "decode_cache",
+    "decode_executable",
+    "decode_graph",
+    "decode_inputs",
     "decoder_layer_graph",
     "enumerate_specs",
     "get_program",

@@ -380,6 +380,128 @@ def _exec_ssm_mix(ctx: ExecCtx, xz, bb, cc, dt_raw):
     return y.reshape(t_l, di_l).astype(ctx.out_spec_dtype())
 
 
+@register_op_backend("decode_select")
+def _exec_decode_select(ctx: ExecCtx, x, pos):
+    """The decode-time q/k/v boundary: head split + qk-norm + rope at
+    the *runtime* per-slot positions (the prefill ``reshape`` select
+    ropes at static ``arange(seq)`` positions; decode cannot)."""
+    from repro.models.common import rmsnorm, rope
+
+    b_l, h_l, _one, hd = ctx.out_spec.local_shape()
+    y = x.reshape(b_l, 1, h_l, hd)
+    w = ctx.aux(ctx.attr("norm_weight"), required=False)
+    if w is not None:
+        y = rmsnorm(y, w)
+    theta = ctx.attr("rope_theta")
+    if theta:
+        y = rope(y, pos[:, None], theta)
+    return y.transpose(0, 2, 1, 3)
+
+
+@register_op_backend("cache_update")
+def _exec_cache_update(ctx: ExecCtx, cache, new, pos):
+    """Write one token into the cache at each slot's own position
+    (ring buffers wrap). A per-slot one-hot select rather than a
+    dynamic-update-slice: every slot in the batch may sit at a
+    different depth under continuous batching."""
+    w = cache.shape[1]
+    write = (pos % w) if ctx.attr("ring") else pos
+    oh = (jnp.arange(w, dtype=jnp.int32)[None, :] == write[:, None])
+    token = new.transpose(0, 2, 1, 3).astype(cache.dtype)  # [B, 1, KV, hd]
+    return jnp.where(oh[:, :, None, None], token, cache)
+
+
+@register_op_backend("decode_attention")
+def _exec_decode_attention(ctx: ExecCtx, q, k, v, pos):
+    """Single-token attention over the laid-out cache, bound to the
+    ``flash_attention/decode`` GRID stage; GQA kv heads broadcast
+    locally when only the query heads are sharded (mirroring the
+    prefill ``attention`` backend)."""
+    from repro.kernels.flash_attention import flash_decode_pallas
+
+    q_spec, k_spec = ctx.in_specs[0], ctx.in_specs[1]
+    h_axes = q_spec.placement()[1]
+    kv_axes = k_spec.placement()[2]
+    b_l, h_l, _one, hd = q.shape
+    kv_l = k.shape[2]
+    g = q_spec.shape[1] // k_spec.shape[2]
+    if h_axes and kv_axes and tuple(h_axes) != tuple(kv_axes):
+        raise CompileError(
+            f"{ctx.node.name}: query/kv head shardings disagree "
+            f"({h_axes} vs {kv_axes})"
+        )
+    if h_axes and not kv_axes and g > 1:
+        # kv replicated, query heads sharded: expand the cache to
+        # per-query-head rows and keep this device's head chunk
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        start = ctx.axis_index(h_axes) * h_l
+        k = jax.lax.dynamic_slice_in_dim(k, start, h_l, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(v, start, h_l, axis=2)
+        kv_l = h_l
+    g_l = h_l // kv_l
+    qg = q.reshape(b_l, kv_l, g_l, hd)      # heads grouped per kv head
+    kc = k.transpose(0, 2, 1, 3)            # [B, KV, W, hd]
+    vc = v.transpose(0, 2, 1, 3)
+    out = flash_decode_pallas(
+        qg, kc, vc, pos,
+        ring=bool(ctx.attr("ring")), interpret=ctx.interpret,
+    )
+    return out.reshape(b_l, h_l, 1, hd)
+
+
+@register_op_backend("ssm_decode")
+def _exec_ssm_decode(ctx: ExecCtx, xz, bb, cc, dt_raw, ssm_state, conv_state):
+    """One recurrent step of the SSD mixer — the exact
+    ``models.ssm.ssd_decode`` math on the cache-in state tensors; the
+    advanced states are stashed on the side channel for the
+    ``side_output`` boundary nodes."""
+    hd = int(ctx.attr("head_dim"))
+    di = int(ctx.attr("d_inner"))
+    n = int(ctx.attr("state"))
+    b_l = xz.shape[0]
+    conv_w = ctx.aux(ctx.attr("conv_w"))
+    dt_bias = ctx.aux(ctx.attr("dt_bias"))
+    a_log = ctx.aux(ctx.attr("A_log"))
+    d_skip = ctx.aux(ctx.attr("D"))
+
+    u = jnp.concatenate([xz, bb, cc], axis=-1)
+    hist = jnp.concatenate([conv_state, u[:, None]], axis=1)
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", hist.astype(jnp.float32), conv_w.astype(jnp.float32)
+    )
+    u_act = jax.nn.silu(conv_out)
+    xs = u_act[:, :di]
+    bs = u_act[:, di: di + n]
+    cs = u_act[:, di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias)
+    lam = jnp.exp(dt * -jnp.exp(a_log))
+    xh = xs.reshape(b_l, -1, hd)
+    s_new = ssm_state * lam[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", bs, xh, dt
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cs, s_new) + xh * d_skip[:, None]
+    ctx.side[ctx.node.out] = {
+        "ssm": s_new,
+        "conv": hist[:, 1:].astype(conv_state.dtype),
+    }
+    return y.reshape(b_l, di).astype(ctx.out_spec_dtype())
+
+
+@register_op_backend("side_output")
+def _exec_side_output(ctx: ExecCtx, _x):
+    """Surface a tensor the producing op stashed on the side channel
+    (the SSD mixer's advanced states) as a graph output."""
+    side = ctx.side.get(ctx.attr("side"))
+    if side is None:
+        raise CompileError(
+            f"{ctx.node.name}: no side state — side_output is only "
+            f"executable in a graph whose 'side' attr names an earlier "
+            f"node output with stashed state"
+        )
+    return side[ctx.attr("channel")]
+
+
 # ---------------------------------------------------------------------------
 # the Executable
 # ---------------------------------------------------------------------------
@@ -412,6 +534,8 @@ def _backend_name(node: OpNode, in_specs: Sequence[AxeSpec] = ()) -> str:
         return "program:moe_gemm" if grouped else "program:matmul"
     if node.kind == "attention":
         return "program:flash_attention"
+    if node.kind == "decode_attention":
+        return "program:flash_attention/decode"
     if node.kind == "norm":
         return "program:rmsnorm"
     if node.kind == "finalize":
@@ -868,6 +992,92 @@ def model_executable(
             f"layout plan does not cover the {cfg.name} graph at "
             f"batch={batch}, seq={seq} (different shape/depth/space): "
             f"re-solving",
+            UserWarning, stacklevel=2,
+        )
+        plan = None
+    return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam)
+
+
+def decode_inputs(graph: GraphSpec, cfg, params, cache) -> Dict[str, Any]:
+    """:func:`model_inputs` plus the cache tensors: slice each layer's
+    cache leaves out of the reference pytree (``models.transformer``
+    layout — per-slot dicts stacked over super-blocks) onto the graph's
+    per-layer cache-in names."""
+    out = model_inputs(graph, cfg, params)
+    per = _period(cfg)
+    for i in _graph_layers(graph):
+        sup, slot = i // per, i % per
+        leaf = cache[f"l{slot}"]
+        p = f"L{i}."
+        if "k" in leaf:
+            out[f"{p}k_cache"] = leaf["k"][sup]
+            out[f"{p}v_cache"] = leaf["v"][sup]
+        else:
+            out[f"{p}ssm_state"] = leaf["ssm"][sup]
+            out[f"{p}conv_state"] = leaf["conv"][sup]
+    return out
+
+
+def decode_cache(graph: GraphSpec, cfg, outputs: Sequence[Any], cache):
+    """Reassemble the reference cache pytree from a decode executable's
+    output tuple (the cache-out tensors, one pair per layer) — the
+    inverse of :func:`decode_inputs`'s per-layer slicing. ``cache`` is
+    only consulted for leaf kinds (attention vs SSM slots)."""
+    per = _period(cfg)
+    vals = dict(zip(graph.outputs(), outputs))
+    layers = _graph_layers(graph)
+    sups = sorted({i // per for i in layers})
+    new = {}
+    for slot in sorted({i % per for i in layers}):
+        leaf = cache[f"l{slot}"]
+        names = ({"k": "k_cache_out", "v": "v_cache_out"} if "k" in leaf
+                 else {"ssm": "ssm_state_out", "conv": "conv_state_out"})
+        new[f"l{slot}"] = {
+            key: jnp.stack([vals[f"L{s * per + slot}.{g}"] for s in sups])
+            for key, g in names.items()
+        }
+    return new
+
+
+def decode_executable(
+    cfg,
+    mesh,
+    batch: int,
+    max_seq: int,
+    *,
+    plan=None,
+    layers: Optional[int] = None,
+    schedule_cache: Optional[str] = None,
+    beam: int = 4,
+    dtype: Optional[str] = None,
+) -> Executable:
+    """Build the single-token decode-step graph for ``cfg`` (cache
+    tensors as first-class inputs/outputs) and compile it — the serving
+    twin of :func:`model_executable`. A ``plan`` solved for a different
+    graph (e.g. the prefill forward) does not cover the decode graph and
+    is dropped with a warning; pass a plan solved on a decode graph (or
+    None) to avoid the re-solve."""
+    import warnings
+
+    from repro.axe.graphs import decode_graph
+    from repro.axe.spec import PhysicalSpace
+
+    if mesh is not None:
+        space = PhysicalSpace.from_mesh_shape(
+            dict(zip(mesh.axis_names, mesh.devices.shape))
+        )
+    else:
+        space = PhysicalSpace(())
+    gs = decode_graph(
+        cfg, batch, max_seq, space,
+        dtype=dtype or cfg.dtype,
+        layers=cfg.num_layers if layers is None else layers,
+    )
+    if plan is not None and not plan_covers(gs, plan):
+        warnings.warn(
+            f"layout plan does not cover the {cfg.name} decode graph at "
+            f"batch={batch}, max_seq={max_seq} (different shape/depth/"
+            f"space): re-solving",
             UserWarning, stacklevel=2,
         )
         plan = None

@@ -47,17 +47,23 @@ class TensorMeta:
     name: str
     shape: Tuple[int, ...]
     dtype: str
-    role: str                      # "activation" | "param"
+    role: str                      # "activation" | "param" | "cache"
     prefs: Tuple[Tuple, ...] = ()
 
 
 @dataclasses.dataclass
 class GraphSpec:
-    """An op graph plus everything needed to seed or solve its layout."""
+    """An op graph plus everything needed to seed or solve its layout.
+
+    ``extra_outputs`` names tensors that are graph results *in addition
+    to* being consumed by later nodes — the cache-out boundary of the
+    decode-step graphs, where the updated KV cache both feeds the
+    attention node and must leave the executable for the next step."""
 
     nodes: List[OpNode]
     inputs: Dict[str, TensorMeta]
     space: PhysicalSpace
+    extra_outputs: Tuple[str, ...] = ()
 
     def seeded_env(self) -> Dict[str, AxeSpec]:
         """The rule-engine baseline: first admissible preference per
@@ -71,9 +77,14 @@ class GraphSpec:
         return env
 
     def outputs(self) -> Tuple[str, ...]:
-        """Tensors produced but never consumed (the graph results)."""
+        """Tensors produced but never consumed (the graph results),
+        plus any declared ``extra_outputs`` — in node order."""
         consumed = {i for n in self.nodes for i in n.inputs}
-        return tuple(n.out for n in self.nodes if n.out not in consumed)
+        extra = set(self.extra_outputs)
+        return tuple(
+            n.out for n in self.nodes
+            if n.out not in consumed or n.out in extra
+        )
 
 
 class _Builder:
@@ -84,6 +95,7 @@ class _Builder:
         self.dtype = dtype
         self.nodes: List[OpNode] = []
         self.inputs: Dict[str, TensorMeta] = {}
+        self.extra_outputs: List[str] = []
 
     def inp(self, name: str, shape, role: str, prefs=(), dtype=None) -> str:
         self.inputs[name] = TensorMeta(
@@ -104,8 +116,13 @@ class _Builder:
             + tuple(extra),
         )
 
+    def mark_output(self, name: str) -> str:
+        self.extra_outputs.append(name)
+        return name
+
     def spec(self) -> GraphSpec:
-        return GraphSpec(self.nodes, self.inputs, self.space)
+        return GraphSpec(self.nodes, self.inputs, self.space,
+                         tuple(self.extra_outputs))
 
 
 def capacity(tokens: int, cfg) -> int:
@@ -389,6 +406,179 @@ def model_graph(
             b, cfg, batch, seq, f"L{i}.", x,
             layer_index=i, enc_out=enc_out, enc_tokens=enc_t, enc_seq=enc_s,
         )
+
+    x_f = b.op("final_norm", "norm", (x,), "x_f",
+               attrs=(("weight", "final_norm"),))
+    lm_head = b.inp("lm_head", (d, v), "param", list(rules.PARAM_RULES["lm_head"]))
+    b.op("lm_head_proj", "matmul", (x_f, lm_head), "logits")
+    return b.spec()
+
+
+# ---------------------------------------------------------------------------
+# decode-step graphs: the KV cache as a first-class graph tensor
+# ---------------------------------------------------------------------------
+
+#: causal-conv filter taps — the jax-free twin of ``models.ssm.CONV_K``
+#: (parity asserted in tests) so the conv-state cache input matches the
+#: reference ``ssd_state_init`` leaf exactly
+CONV_K = 4
+
+
+def cache_window(cfg, layer_index: int, max_seq: int) -> int:
+    """The cache length of one layer: its sliding window (ring buffer)
+    capped at ``max_seq``, or the full ``max_seq`` — exactly
+    ``models.transformer.cache_init``'s per-layer allocation."""
+    w = _layer_window(cfg, layer_index)
+    return min(w, max_seq) if w else max_seq
+
+
+def _attention_decode_block(
+    b: _Builder, cfg, batch: int, max_seq: int, p: str, x_in: str,
+    *, layer_index: int = 0,
+) -> str:
+    """One decode step of the attention mixer: norm → q/k/v projections
+    → rope/qk-norm at the *runtime* position (``decode_select``) → cache
+    write at that position (``cache_update`` — the cache-in/cache-out
+    boundary) → single-token attention over the laid-out cache
+    (``decode_attention``) → output projection → residual."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window = _layer_window(cfg, layer_index)
+    w_len = cache_window(cfg, layer_index, max_seq)
+    ring = window is not None
+    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n",
+               attrs=(("weight", f"{p}norm1"),))
+    wq = b.inp(f"{p}wq", (d, h * hd), "param", [(None, "model"), (None, None)])
+    wk = b.inp(f"{p}wk", (d, kv * hd), "param", [(None, "model"), (None, None)])
+    wv = b.inp(f"{p}wv", (d, kv * hd), "param", [(None, "model"), (None, None)])
+    qf = b.op(f"{p}q_proj", "matmul", (x_n, wq), f"{p}qf")
+    kf = b.op(f"{p}k_proj", "matmul", (x_n, wk), f"{p}kf")
+    vf = b.op(f"{p}v_proj", "matmul", (x_n, wv), f"{p}vf")
+    qk = cfg.qk_norm
+
+    def sel(role, heads, extra=()):
+        theta = cfg.rope_theta if role in ("q", "k") else None
+        return (("select", role), ("heads", heads), ("head_dim", hd),
+                ("batch", batch), ("rope_theta", theta)) + tuple(extra)
+
+    q = b.op(f"{p}q", "decode_select", (qf, "pos"), f"{p}q",
+             attrs=sel("q", h, (("norm_weight", f"{p}q_norm" if qk else None),)))
+    k = b.op(f"{p}k", "decode_select", (kf, "pos"), f"{p}k",
+             attrs=sel("k", kv, (("norm_weight", f"{p}k_norm" if qk else None),)))
+    v = b.op(f"{p}v", "decode_select", (vf, "pos"), f"{p}v",
+             attrs=sel("v", kv))
+    # cache-in: a first-class graph tensor the solver places like any
+    # other (batch-sharded and/or kv-head-sharded; the ring/linear write
+    # keeps the position dim locally complete)
+    cache_prefs = [(rules.dp_entry(b.space), None, "model", None),
+                   (None, None, "model", None),
+                   (rules.dp_entry(b.space), None, None, None),
+                   (None, None, None, None)]
+    k_cache = b.inp(f"{p}k_cache", (batch, w_len, kv, hd), "cache", cache_prefs)
+    v_cache = b.inp(f"{p}v_cache", (batch, w_len, kv, hd), "cache", cache_prefs)
+    kco = b.op(f"{p}k_cache_write", "cache_update", (k_cache, k, "pos"),
+               f"{p}k_cache_out", attrs=(("ring", ring),))
+    vco = b.op(f"{p}v_cache_write", "cache_update", (v_cache, v, "pos"),
+               f"{p}v_cache_out", attrs=(("ring", ring),))
+    b.mark_output(kco)
+    b.mark_output(vco)
+    attn = b.op(f"{p}decode_attention", "decode_attention",
+                (q, kco, vco, "pos"), f"{p}attn_out",
+                attrs=(("ring", ring),))
+    flat = b.reshape(f"{p}attn_flat", attn, (batch, h * hd), ((0, 0), (1, 1)),
+                     extra=(("select", "merge_heads"), ("batch", batch)))
+    wo = b.inp(f"{p}wo", (h * hd, d), "param", [("model", None), (None, None)])
+    o = b.op(f"{p}wo_proj", "matmul", (flat, wo), f"{p}attn_o")
+    return b.op(f"{p}attn_residual", "elementwise", (o, x_in), f"{p}x1",
+                attrs=(("fn", "add"),))
+
+
+def _ssm_decode_block(b: _Builder, cfg, batch: int, p: str, x_in: str) -> str:
+    """One decode step of the SSD mixer: the recurrent state and the
+    causal-conv history are cache-in tensors; ``ssm_decode`` advances
+    them one token and the ``side_output`` boundary nodes surface the
+    new states as graph outputs."""
+    d = cfg.d_model
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    dp = rules.dp_entry(b.space)
+    x_n = b.op(f"{p}norm_in", "norm", (x_in,), f"{p}x_n",
+               attrs=(("weight", f"{p}norm1"),))
+    wx = b.inp(f"{p}wx", (d, di), "param", [(None, "model"), (None, None)])
+    wz = b.inp(f"{p}wz", (d, di), "param", [(None, "model"), (None, None)])
+    wB = b.inp(f"{p}wB", (d, n), "param", [(None, None)])
+    wC = b.inp(f"{p}wC", (d, n), "param", [(None, None)])
+    wdt = b.inp(f"{p}wdt", (d, h), "param", [(None, "model"), (None, None)])
+    xz = b.op(f"{p}x_proj", "matmul", (x_n, wx), f"{p}xz")
+    zz = b.op(f"{p}z_proj", "matmul", (x_n, wz), f"{p}zz")
+    bb = b.op(f"{p}b_proj", "matmul", (x_n, wB), f"{p}bb")
+    cc = b.op(f"{p}c_proj", "matmul", (x_n, wC), f"{p}cc")
+    dt = b.op(f"{p}dt_proj", "matmul", (x_n, wdt), f"{p}dt")
+    ssm_state = b.inp(f"{p}ssm_state", (batch, h, n, cfg.ssm_headdim), "cache",
+                      [(dp, None, None, None), (None, None, None, None)],
+                      dtype="float32")
+    conv_state = b.inp(f"{p}conv_state", (batch, CONV_K - 1, di + 2 * n), "cache",
+                       [(dp, None, None), (None, None, None)])
+    y = b.op(f"{p}ssm_decode", "ssm_decode",
+             (xz, bb, cc, dt, ssm_state, conv_state), f"{p}y",
+             attrs=(("batch", batch),
+                    ("heads", h), ("head_dim", cfg.ssm_headdim),
+                    ("state", n), ("d_inner", di),
+                    ("dt_bias", f"{p}dt_bias"), ("A_log", f"{p}A_log"),
+                    ("D", f"{p}D"), ("conv_w", f"{p}conv_w")))
+    # cache-out boundary: the advanced states the mixer computed, typed
+    # like their cache-in tensors
+    b.op(f"{p}ssm_state_write", "side_output", (y,), f"{p}ssm_state_out",
+         attrs=(("side", y), ("channel", "ssm"), ("like", ssm_state)))
+    b.op(f"{p}conv_state_write", "side_output", (y,), f"{p}conv_state_out",
+         attrs=(("side", y), ("channel", "conv"), ("like", conv_state)))
+    g = b.op(f"{p}gate", "elementwise", (y, zz), f"{p}g",
+             attrs=(("fn", "mul_silu"),))
+    gn = b.op(f"{p}gate_norm", "norm", (g,), f"{p}gn",
+              attrs=(("weight", f"{p}gate_norm"),))
+    wo = b.inp(f"{p}ssm_wo", (di, d), "param", [("model", None), (None, None)])
+    o = b.op(f"{p}out_proj", "matmul", (gn, wo), f"{p}ssm_o")
+    return b.op(f"{p}ssm_residual", "elementwise", (o, x_in), f"{p}x1",
+                attrs=(("fn", "add"),))
+
+
+def decode_graph(
+    cfg,
+    batch: int,
+    max_seq: int,
+    space: PhysicalSpace,
+    dtype: str = "bfloat16",
+    *,
+    layers: int = None,
+) -> GraphSpec:
+    """The single-token decode step as an op graph: embed the current
+    token → per-layer mixers reading and writing their cache tensors at
+    the runtime position ``pos`` → next-token logits.
+
+    Activations are ``tokens [batch]`` and ``pos [batch]`` (per-slot
+    positions, so a continuous batcher can decode requests at different
+    depths in one step); cache tensors are named inputs
+    (``L{i}.k_cache`` / ``L{i}.v_cache`` / ``L{i}.ssm_state`` /
+    ``L{i}.conv_state``) shaped exactly like the reference
+    ``cache_init`` leaves for one super-block slot, and the updated
+    caches come back as graph outputs alongside ``logits``."""
+    b = _Builder(space, dtype)
+    dp = rules.dp_entry(space)
+    d, v = cfg.d_model, cfg.vocab_size
+
+    b.inp("tokens", (batch,), "activation", [(dp,), (None,)], dtype="int32")
+    b.inp("pos", (batch,), "activation", [(dp,), (None,)], dtype="int32")
+    embed = b.inp("embed", (v, d), "param", list(rules.PARAM_RULES["embed"]))
+    x = b.op("embed_lookup", "embed", ("tokens", embed), "x0")
+
+    n_layers = cfg.num_layers if layers is None else min(cfg.num_layers, layers)
+    for i in range(n_layers):
+        p = f"L{i}."
+        if _mixer_kind(cfg, i) == "ssm":
+            x = _ssm_decode_block(b, cfg, batch, p, x)
+        else:
+            x = _attention_decode_block(b, cfg, batch, max_seq, p, x,
+                                        layer_index=i)
+        if cfg.is_moe or cfg.d_ff:
+            x = _ffn_block(b, cfg, batch, p, x, x)
 
     x_f = b.op("final_norm", "norm", (x,), "x_f",
                attrs=(("weight", "final_norm"),))

@@ -40,7 +40,9 @@ class OpNode:
 
     name: str
     kind: str                     # matmul | attention | moe_dispatch | moe_combine |
-    #                               norm | elementwise | reshape | embed | ssm_mix
+    #                               norm | elementwise | reshape | embed | ssm_mix |
+    #                               decode_select | cache_update | decode_attention |
+    #                               ssm_decode | side_output
     inputs: Tuple[str, ...]
     out: str
     attrs: Tuple[Tuple[str, object], ...] = ()
@@ -552,6 +554,190 @@ def rule_ssm_mix(node: OpNode, x: AxeSpec, b: AxeSpec, c: AxeSpec, dt: AxeSpec):
     return out, tuple(redists)
 
 
+def _align_scalar_per_row(
+    node: OpNode, name: str, op: AxeSpec, row_axes: Tuple[str, ...],
+) -> List[Redistribution]:
+    """Align a per-row 1-D operand (the decode position vector) to the
+    primary operand's row axes; partials resolve (positions are read as
+    true values)."""
+    mesh_shape = op.space.mesh_shape
+    want_pl: Dict[int, Tuple[str, ...]] = {}
+    if row_axes:
+        ext = math.prod(mesh_shape[a] for a in row_axes)
+        if op.shape[0] % ext == 0:
+            want_pl[0] = row_axes
+    want = op.with_placement(want_pl)
+    if op.partial or not op.equivalent(want):
+        return [redistribute(op, want, name)]
+    return []
+
+
+def rule_decode_select(node: OpNode, x: AxeSpec, pos: AxeSpec):
+    """The decode-time q/k/v boundary: ``x [B, H·hd] → [B, H, 1, hd]``
+    with qk-norm + rope applied at the *runtime* positions ``pos [B]``.
+    Nonlinear (norm), so pending partials resolve first; the feature
+    sharding carries onto the head dim when the head count admits it
+    (gathered otherwise), and ``pos`` aligns to the batch sharding."""
+    heads = int(node.attr("heads"))
+    hd = int(node.attr("head_dim"))
+    mesh_shape = x.space.mesh_shape
+    px = x.placement()
+    b_axes = px[0]
+    h_axes = px[1]
+    if h_axes:
+        ext = math.prod(mesh_shape[a] for a in h_axes)
+        if heads % ext != 0:
+            h_axes = ()
+    want = x.with_placement(
+        {i: e for i, e in ((0, b_axes), (1, h_axes)) if e}
+    )
+    redists = []
+    if x.partial or not x.equivalent(want):
+        redists.append(redistribute(x, want, node.inputs[0]))
+    redists += _align_scalar_per_row(node, node.inputs[1], pos, b_axes)
+    out = AxeSpec.sharded(
+        (x.shape[0], heads, 1, hd), x.space,
+        {i: e for i, e in ((0, b_axes), (1, h_axes)) if e}, x.dtype,
+    )
+    return out, tuple(redists)
+
+
+def rule_cache_update(node: OpNode, cache: AxeSpec, new: AxeSpec, pos: AxeSpec):
+    """The cache-in → cache-out boundary: write one token into the
+    ring/linear cache at ``pos``. The position dim (dim 1) must be
+    locally complete — every device owning a (batch, head) slab writes
+    its own slot — so a position-dim sharding gathers first; the new
+    token aligns to the cache's batch/head placement and the output
+    keeps the cache's spec."""
+    mesh_shape = cache.space.mesh_shape
+    pc = cache.placement()
+    keep = {i: e for i, e in enumerate(pc) if e and i != 1}
+    want_cache = cache.with_placement(keep)
+    redists = []
+    if cache.partial or not cache.equivalent(want_cache):
+        redists.append(redistribute(cache, want_cache, node.inputs[0]))
+        cache = want_cache
+    pc = cache.placement()
+    # new token [B, H, 1, hd]: batch ← cache dim 0, heads ← cache dim 2,
+    # head_dim ← cache dim 3 (when the extents divide; gather otherwise)
+    want_pl: Dict[int, Tuple[str, ...]] = {}
+    for src_dim, dst_dim in ((0, 0), (2, 1), (3, 3)):
+        axes = pc[src_dim]
+        if not axes:
+            continue
+        ext = math.prod(mesh_shape[a] for a in axes)
+        if new.shape[dst_dim] % ext == 0:
+            want_pl[dst_dim] = axes
+    want_new = new.with_placement(want_pl)
+    if new.partial or not new.equivalent(want_new):
+        redists.append(redistribute(new, want_new, node.inputs[1]))
+    redists += _align_scalar_per_row(node, node.inputs[2], pos, pc[0])
+    out = AxeSpec.sharded(
+        cache.shape, cache.space,
+        {i: e for i, e in enumerate(pc) if e}, cache.dtype,
+    )
+    return out, tuple(redists)
+
+
+def rule_decode_attention(node: OpNode, q: AxeSpec, k: AxeSpec, v: AxeSpec,
+                          pos: AxeSpec):
+    """Single-token attention over the laid-out cache:
+    ``q [B, H, 1, hd] × cache [B, W, KV, hd] → [B, H, 1, hd]``. Softmax
+    is nonlinear, so q's partials resolve first; the cache aligns its
+    batch dim to q's, its kv-head dim to q's head axes when the kv-head
+    count admits them (replicated otherwise — the GQA local broadcast),
+    and keeps the position + head_dim dims locally complete."""
+    pq = q.placement()
+    mesh_shape = q.space.mesh_shape
+    redists = []
+    if q.partial:
+        resolved = q.with_placement({i: e for i, e in enumerate(pq) if e})
+        redists.append(redistribute(q, resolved, node.inputs[0]))
+        q = resolved
+        pq = q.placement()
+    b_axes, h_axes = pq[0], pq[1]
+    for name, op in ((node.inputs[1], k), (node.inputs[2], v)):
+        want_pl: Dict[int, Tuple[str, ...]] = {}
+        if b_axes and op.shape[0] % math.prod(mesh_shape[a] for a in b_axes) == 0:
+            want_pl[0] = b_axes
+        if h_axes:
+            ext = math.prod(mesh_shape[a] for a in h_axes)
+            if op.shape[2] % ext == 0:
+                want_pl[2] = h_axes
+        want = op.with_placement(want_pl)
+        if op.partial or not op.equivalent(want):
+            redists.append(redistribute(op, want, name))
+    redists += _align_scalar_per_row(node, node.inputs[3], pos, b_axes)
+    out = AxeSpec.sharded(
+        q.shape, q.space, {i: e for i, e in enumerate(pq) if e}, q.dtype
+    )
+    return out, tuple(redists)
+
+
+def rule_ssm_decode(node: OpNode, x: AxeSpec, b: AxeSpec, c: AxeSpec,
+                    dt: AxeSpec, ssm_state: AxeSpec, conv_state: AxeSpec):
+    """One recurrent step of the SSD mixer: ``(x [B, di], B [B, N],
+    C [B, N], dt [B, H], state [B, H, N, P], conv [B, K-1, di+2N]) →
+    y [B, di]``. The step is nonlinear (decay gating, conv + silu), so
+    partials resolve first. Every operand keeps only the batch sharding
+    — the single-token recurrence consumes full feature/state vectors
+    per sequence, so feature shardings gather (and the plan charges
+    them, instead of the backend hiding an implicit broadcast)."""
+    px = x.placement()
+    mesh_shape = x.space.mesh_shape
+    t_axes = px[0]
+    if t_axes:
+        kept = []
+        ext = 1
+        for a in t_axes:
+            if x.shape[0] % (ext * mesh_shape[a]) == 0:
+                kept.append(a)
+                ext *= mesh_shape[a]
+        t_axes = tuple(kept)
+    redists = []
+    want_x = x.with_placement({0: t_axes} if t_axes else {})
+    if x.partial or not x.equivalent(want_x):
+        redists.append(redistribute(x, want_x, node.inputs[0]))
+        x = want_x
+    for name, op in zip(node.inputs[1:], (b, c, dt, ssm_state, conv_state)):
+        want_pl: Dict[int, Tuple[str, ...]] = {}
+        if t_axes:
+            ext = math.prod(mesh_shape[a] for a in t_axes)
+            if op.shape[0] % ext == 0:
+                want_pl[0] = t_axes
+        want = op.with_placement(want_pl)
+        if op.partial or not op.equivalent(want):
+            redists.append(redistribute(op, want, name))
+    out = AxeSpec.sharded(
+        x.shape, x.space, {0: t_axes} if t_axes else {}, x.dtype
+    )
+    return out, tuple(redists)
+
+
+def rule_side_output(node: OpNode, x: AxeSpec, env=None):
+    """A boundary node surfacing a tensor the producing op computed on
+    the side (the SSD mixer's advanced states): shape and dtype come
+    from the cache-in tensor named by ``attrs['like']``; the batch
+    placement follows the producing op's output (the states were
+    aligned to it inside the producer's rule) and no data moves."""
+    like = node.attr("like")
+    if env is None or like not in env:
+        raise PropagationError(
+            f"{node.name}: side_output needs attrs['like'] naming a "
+            f"tensor already in the environment (got {like!r})"
+        )
+    spec = env[like]
+    b_axes = x.placement()[0]
+    out = AxeSpec.sharded(
+        spec.shape, spec.space,
+        {0: b_axes} if b_axes else {}, spec.dtype,
+    )
+    return out, ()
+
+
+rule_side_output._wants_env = True
+
+
 _RULES = {
     "matmul": rule_matmul,
     "attention": rule_attention,
@@ -562,6 +748,11 @@ _RULES = {
     "reshape": rule_reshape,
     "embed": rule_embed,
     "ssm_mix": rule_ssm_mix,
+    "decode_select": rule_decode_select,
+    "cache_update": rule_cache_update,
+    "decode_attention": rule_decode_attention,
+    "ssm_decode": rule_ssm_decode,
+    "side_output": rule_side_output,
 }
 
 

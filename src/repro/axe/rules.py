@@ -300,18 +300,116 @@ def batch_specs(batch: Mapping[str, Any], space: PhysicalSpace) -> Dict[str, Axe
     return out
 
 
-def cache_specs(cache: Any, space: PhysicalSpace) -> Any:
+#: cache-leaf basename -> decode-graph cache tensor basename
+#: (``repro.axe.graphs.decode_graph`` input names, layer prefix stripped)
+CACHE_GRAPH_NAMES = {
+    "k": "k_cache", "v": "v_cache", "ck": "k_cache", "cv": "v_cache",
+    "ssm": "ssm_state", "conv": "conv_state",
+}
+
+
+class CachePlanFallbackWarning(UserWarning):
+    """A layout plan was supplied for cache placement but holds no
+    solved spec for a cache leaf — the leaf falls back to the
+    preference tables. Structured: ``.leaf`` (cache tree path),
+    ``.name`` (the decode-graph tensor basename looked up)."""
+
+    def __init__(self, leaf: str, name: str):
+        self.leaf, self.name = leaf, name
+        super().__init__(
+            f"cache_specs: layout plan has no solved spec for cache leaf "
+            f"{leaf!r} (decode-graph name {name!r}); falling back to the "
+            f"preference tables"
+        )
+
+
+def _plan_cache_env(plan: Any) -> Dict[str, AxeSpec]:
+    """Solved cache specs keyed by decode-graph basename (``k_cache``
+    etc.; the first layer's choice wins, as in :class:`PlanRules`)."""
+    env = getattr(plan, "assignment", None)
+    if env is None:
+        env = getattr(plan, "env", None)
+    if env is None and isinstance(plan, Mapping):
+        env = plan
+    if env is None:
+        raise TypeError(
+            f"cache_specs plan wants a SolveResult, LayoutPlan, or "
+            f"name->AxeSpec mapping, got {type(plan).__name__}"
+        )
+    targets = set(CACHE_GRAPH_NAMES.values())
+    out: Dict[str, AxeSpec] = {}
+    for name in sorted(env):
+        base = name.rsplit(".", 1)[-1]
+        if base in targets and base not in out:
+            out[base] = env[name]
+    return out
+
+
+def cache_specs(cache: Any, space: PhysicalSpace, *, plan: Any = None) -> Any:
     """KV caches [L, B, S, KV, hd] / SSM states [L, B, H, N, P] / conv
     [L, B, K, C]: shard batch over DP when divisible, else shard the
-    sequence dim over `data` (long-context decode); heads over `model`."""
+    sequence dim over `data` (long-context decode); heads over `model`.
+
+    ``plan`` opts into solver-driven placement: a solved layout (a
+    ``SolveResult``, ``LayoutPlan``, or name→AxeSpec mapping) whose
+    decode-graph cache tensors (``L{i}.k_cache`` …) carry their solved
+    placement onto the matching cache leaves — leading (stacked-layer)
+    dims replicate, and axes a leaf's extents do not admit are dropped
+    per-dim with a :class:`PlanDivisibilityWarning`. Leaves the plan
+    does not cover fall back to the tables with a structured
+    :class:`CachePlanFallbackWarning`."""
     import jax
 
     dp = dp_entry(space)
+    solved = _plan_cache_env(plan) if plan is not None else {}
+
+    def from_solved(ps: str, shape, dtype: str) -> Optional[AxeSpec]:
+        name = CACHE_GRAPH_NAMES.get(ps.rsplit(".", 1)[-1])
+        if name is None:
+            return None
+        spec = solved.get(name)
+        if spec is None or spec.space != space:
+            key = ("cache", ps, name)
+            if key not in _DIV_WARNED:
+                _DIV_WARNED.add(key)
+                warnings.warn(CachePlanFallbackWarning(ps, name), stacklevel=4)
+            return None
+        lead = len(shape) - len(spec.shape)
+        if lead < 0:
+            return None
+        mesh_shape = space.mesh_shape
+        placement: Dict[int, Tuple[str, ...]] = {}
+        for gdim, axes in enumerate(spec.placement()):
+            if not axes:
+                continue
+            ext = math.prod(mesh_shape[a] for a in axes)
+            if shape[lead + gdim] % ext == 0:
+                placement[lead + gdim] = axes
+            else:
+                key = (ps, lead + gdim, axes)
+                if key not in _DIV_WARNED:
+                    _DIV_WARNED.add(key)
+                    warnings.warn(
+                        PlanDivisibilityWarning(
+                            ps, lead + gdim, axes, spec.signature(),
+                            shape[lead + gdim],
+                            math.prod(mesh_shape[a] for a in axes),
+                        ),
+                        stacklevel=4,
+                    )
+        try:
+            return AxeSpec.sharded(tuple(shape), space, placement, dtype)
+        except SpecError:
+            return None
 
     def assign(path, leaf):
         ps = path_str(path)
         shape = leaf.shape
         dtype = _dtype_str(leaf)
+        if plan is not None:
+            spec = from_solved(ps, shape, dtype)
+            if spec is not None:
+                return spec
         if ps.endswith(("k", "v", "ck", "cv")) and leaf.ndim >= 4:
             # [..., B, S, KV, hd]: prefer batch-DP + head-TP; fall back to
             # sequence sharding (long-context / non-dividing KV heads).

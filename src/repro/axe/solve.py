@@ -117,6 +117,7 @@ def enumerate_specs(
 _ELTWISE_FLOPS = {
     "norm": 4.0, "elementwise": 1.0, "embed": 1.0,
     "moe_dispatch": 2.0, "moe_combine": 2.0, "reshape": 0.0,
+    "decode_select": 4.0, "cache_update": 1.0, "side_output": 0.0,
 }
 
 _COST_CACHE: Dict[Tuple, float] = {}
@@ -163,6 +164,16 @@ def op_seconds(
     elif kind == "ssm_mix":
         n_state = locals_[1][-1]
         flops = 6.0 * nel[0] * n_state
+        mem = float((sum(nel) + n_out) * item)
+    elif kind == "decode_attention":
+        # q [B, H, 1, hd] over cache [B, W, KV, hd]: the whole cache is
+        # read once per step — decode is memory-bound by design
+        w_local = locals_[1][1]
+        flops = 4.0 * n_out * w_local
+        mem = float((sum(nel) + n_out) * item)
+    elif kind == "ssm_decode":
+        n_state = locals_[4][-2]
+        flops = 6.0 * n_out * n_state
         mem = float((sum(nel) + n_out) * item)
     else:
         flops = _ELTWISE_FLOPS.get(kind, 1.0) * n_out
@@ -482,6 +493,12 @@ def solve(
         if within:  # the comm budget: never out-spend the rules
             best = min(within, key=lambda s: (s.cost_s, s.comm_bytes))
 
+    # inputs no node consumes (e.g. the pos activation of a pure-SSM
+    # decode graph) never got bound at a use site: take their seeded
+    # (rule-preferred) spec
+    for name in graph.inputs:
+        if name not in best.env:
+            best.env[name] = seeded_env[name]
     assignment = {name: best.env[name] for name in graph.inputs}
     plan, objective, comm_bytes = evaluate_env(graph, assignment, backend=backend)
     return SolveResult(

@@ -111,14 +111,21 @@ def infer_redistribution(
         j = dst_loc.get(ax)
         if j is not None and j != i:
             plan.append(AllToAll(ax, i, j))
-    # 3) axis dropped by dst: all_gather
-    for ax, i in sorted(src_loc.items()):
-        if ax not in dst_loc:
-            plan.append(AllGather(ax, i))
-    # 4) axis introduced by dst from replication: local slice (no comm)
-    for ax, j in sorted(dst_loc.items()):
-        if ax not in src_loc:
-            plan.append(DynamicSlice(ax, j))
+    # 3) axis dropped by dst: all_gather. Axes composed on one dim
+    #    nest major→minor in placement order, so the tiled gathers must
+    #    run minor-first — gathering the major axis first interleaves
+    #    the minor-axis chunks out of mesh order.
+    for i, axes in enumerate(sp):
+        for ax in reversed(axes):
+            if ax not in dst_loc:
+                plan.append(AllGather(ax, i))
+    # 4) axis introduced by dst from replication: local slice (no
+    #    comm); composed axes slice major-first (placement order) so
+    #    each inner slice subdivides the outer axis's chunk.
+    for j, axes in enumerate(dp):
+        for ax in axes:
+            if ax not in src_loc:
+                plan.append(DynamicSlice(ax, j))
     return plan
 
 

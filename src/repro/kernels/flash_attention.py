@@ -165,6 +165,143 @@ def _attend(ctx, q, k, v, *, causal: bool = False, window: int | None = None,
     return ctx.jit((block_q, block_kv, causal, window, scale), make)(q, k, v)
 
 
+# ---------------------------------------------------------------------------
+# flash decode: single-token queries attending over the laid-out cache
+# ---------------------------------------------------------------------------
+
+
+@flash_attention_program.stage("decode_mac", scope=Scope.BLOCK)
+def _decode_mac(
+    ctx,
+    q_ref, k_ref, v_ref, pos_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    kv_steps: int,
+    block_kv: int,
+    ring: bool,
+    kv_len: int,
+    scale: float,
+):
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [g, d]
+    k = k_ref[0].astype(jnp.float32)  # [bkv, d]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    # cache validity from the per-slot position: linear caches attend
+    # to k_pos <= pos; a ring buffer that has wrapped (pos + 1 >= W) is
+    # entirely live — the same predicate the reference decode applies
+    pos_b = pos_ref[0, 0]
+    k_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = k_pos <= pos_b
+    if ring:
+        valid = valid | (pos_b + 1 >= kv_len)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(kj == kv_steps - 1)
+    def _done():
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@flash_attention_program.stage("decode", scope=Scope.GRID)
+def _decode(ctx, q, k, v, pos, *, ring: bool = False, scale: float | None = None):
+    """Flash decode: grouped single-token queries ``q [B, KV, G, d]``
+    attend over the cache ``k/v [B, KV, W, d]`` at per-slot positions
+    ``pos [B]``. Grid: (batch*kv_heads, kv_blocks) with the online
+    softmax accumulating across cache blocks — the decode twin of
+    ``attend``, with the mask coming from the runtime position instead
+    of grid coordinates. Untunable by design: the kv block size is the
+    largest preferred size dividing the cache length (a cache is a
+    fixed ring, not a schedule choice)."""
+    b, kvh, g, d = q.shape
+    w = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    block_kv = next((s for s in (512, 256, 128, 64) if s <= w and w % s == 0), w)
+
+    def make():
+        def launch(q, k, v, pos):
+            b, kvh, g, d = q.shape
+            w = k.shape[2]
+            bh = b * kvh
+            qr = q.reshape(bh, g, d)
+            kr = k.reshape(bh, w, d)
+            vr = v.reshape(bh, w, d)
+            pr = jnp.repeat(pos.astype(jnp.int32), kvh)[:, None]
+
+            q_low = block_lowering((bh, g, d), (1, g, d), q.dtype,
+                                   index_map=lambda bhi, kj: (bhi, 0, 0),
+                                   op="flash_attention.decode.Q")
+            k_low = block_lowering((bh, w, d), (1, block_kv, d), k.dtype,
+                                   index_map=lambda bhi, kj: (bhi, kj, 0),
+                                   op="flash_attention.decode.K")
+            v_low = block_lowering((bh, w, d), (1, block_kv, d), v.dtype,
+                                   index_map=lambda bhi, kj: (bhi, kj, 0),
+                                   op="flash_attention.decode.V")
+            o_low = block_lowering((bh, g, d), (1, g, d), q.dtype,
+                                   index_map=lambda bhi, kj: (bhi, 0, 0),
+                                   op="flash_attention.decode.O")
+            kv_steps = k_low.grid[1]
+            pos_spec = pl.BlockSpec((1, 1), lambda bhi, kj: (bhi, 0))
+
+            body = functools.partial(
+                ctx.run, "decode_mac",
+                kv_steps=kv_steps, block_kv=block_kv,
+                ring=ring, kv_len=w, scale=scale,
+            )
+            out = ctx.pallas_call(
+                lambda *refs: body(*refs),
+                grid=(bh, kv_steps),
+                in_specs=[q_low.spec, k_low.spec, v_low.spec, pos_spec],
+                out_specs=o_low.spec,
+                out_shape=jax.ShapeDtypeStruct((bh, g, d), q.dtype),
+                scratch_shapes=[
+                    pltpu.VMEM((g, d), jnp.float32),
+                    pltpu.VMEM((g, 1), jnp.float32),
+                    pltpu.VMEM((g, 1), jnp.float32),
+                ],
+                dimension_semantics=("parallel", "arbitrary"),
+            )(qr, kr, vr, pr)
+            return out.reshape(b, kvh, g, d)
+
+        return launch
+
+    return ctx.jit((block_kv, ring, scale), make)(q, k, v, pos)
+
+
+def flash_decode_pallas(
+    q: jax.Array,    # [B, KV, G, D] grouped single-token queries
+    k: jax.Array,    # [B, KV, W, D] cache, head-major
+    v: jax.Array,    # [B, KV, W, D]
+    pos: jax.Array,  # [B] int32 per-slot positions
+    *,
+    ring: bool = False,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw launcher for the ``flash_attention/decode`` stage."""
+    return flash_attention_program(
+        q, k, v, pos, stage="decode", ring=ring, scale=scale,
+        interpret=interpret,
+    )
+
+
 def flash_attention_pallas(
     q: jax.Array,  # [B, H, Sq, D]
     k: jax.Array,  # [B, H, Skv, D]

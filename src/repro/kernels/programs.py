@@ -30,6 +30,7 @@ from repro.kernels.collective_matmul import derive_axis_name as derive_axis_name
 from repro.kernels.flash_attention import (
     flash_attention_program as flash_attention,
 )
+from repro.kernels.flash_attention import flash_decode_pallas as flash_decode
 from repro.kernels.matmul import matmul_program as matmul
 from repro.kernels.moe_gemm import moe_gemm_program as moe_gemm
 from repro.kernels.rmsnorm import rmsnorm_program as rmsnorm
@@ -41,6 +42,7 @@ __all__ = [
     "collective_matmul",
     "derive_axis_name",
     "flash_attention",
+    "flash_decode",
     "matmul",
     "moe_gemm",
     "rmsnorm",

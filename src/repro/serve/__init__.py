@@ -1,1 +1,17 @@
+from repro.serve.batcher import (
+    ContinuousBatcher,
+    PagePool,
+    PagePoolError,
+    Request,
+    RequestResult,
+)
 from repro.serve.engine import ServeEngine
+
+__all__ = [
+    "ContinuousBatcher",
+    "PagePool",
+    "PagePoolError",
+    "Request",
+    "RequestResult",
+    "ServeEngine",
+]

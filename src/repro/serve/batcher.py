@@ -1,0 +1,306 @@
+"""Slot-based continuous batching over the compiled decode step
+(docs/serving.md).
+
+The batcher owns one batched cache (``engine.batch_size`` slots) and a
+fixed :class:`PagePool` of cache pages. Requests join mid-stream:
+admission performs a batch-1 prefill through the legacy model API
+(prefill/decode disaggregation), writes the prefilled cache into the
+request's slot, and leases its cache pages; every step then runs ONE
+compiled decode over all slots at their own positions (the decode
+graph's ``pos`` activation is per-slot). Finished requests retire
+immediately — their pages return to the pool exactly once and the slot
+recycles to the next queued request — so the decode batch stays full
+without ever re-padding or re-compiling.
+
+Determinism: the step counter is the only clock, and sampling keys are
+``fold_in(fold_in(seed, uid), pos)`` — a request's tokens depend only
+on its own uid/positions, never on which neighbors share the batch.
+Replaying the same arrival trace reproduces the same outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePoolError(RuntimeError):
+    """Raised on page-accounting violations (double free, double lease,
+    freeing an unknown uid) — these are serving bugs, never warnings."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is the step index at which
+    the request becomes visible to the batcher (synthetic traces)."""
+
+    uid: int
+    prompt: np.ndarray            # [S] int32 token ids
+    max_new_tokens: int
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    tokens: np.ndarray            # [max_new_tokens] int32
+    submitted: int                # step the request arrived
+    admitted: int                 # step a slot + pages were leased
+    first_token: int              # step the prefill token was emitted
+    finished: int                 # step the last token was emitted
+
+
+class PagePool:
+    """A fixed pool of cache pages with exact lease accounting.
+
+    Serving-level admission control: a request leases
+    ``ceil(cache_len / page_size)`` pages for its whole lifetime and
+    returns them exactly once on retirement. Double leases and double
+    frees raise :class:`PagePoolError` — the test suite's invariant."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError("n_pages and page_size must be positive")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages))
+        self._leased: Dict[int, Tuple[int, ...]] = {}
+        self.freed_count: Dict[int, int] = {}
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, cache_len: int) -> int:
+        return -(-cache_len // self.page_size)
+
+    def alloc(self, uid: int, n: int) -> Tuple[int, ...]:
+        if uid in self._leased:
+            raise PagePoolError(f"uid {uid} already holds a lease")
+        if n > len(self._free):
+            raise PagePoolError(
+                f"uid {uid} wants {n} pages, only {len(self._free)} free"
+            )
+        pages = tuple(self._free[:n])
+        del self._free[:n]
+        self._leased[uid] = pages
+        return pages
+
+    def free(self, uid: int) -> None:
+        pages = self._leased.pop(uid, None)
+        if pages is None:
+            raise PagePoolError(f"uid {uid} holds no lease (double free?)")
+        self._free.extend(pages)
+        self.freed_count[uid] = self.freed_count.get(uid, 0) + 1
+
+    def leased_pages(self) -> Dict[int, Tuple[int, ...]]:
+        return dict(self._leased)
+
+
+@dataclasses.dataclass
+class _Slot:
+    index: int
+    uid: Optional[int] = None     # None: free
+    pos: int = 0
+    remaining: int = 0
+    tokens: Optional[List[int]] = None
+    last_tok: int = 0
+    result: Optional[RequestResult] = None
+
+
+class ContinuousBatcher:
+    """Continuous batching driver over a :class:`ServeEngine`.
+
+    ``engine.batch_size`` is the slot count; every decode step is one
+    compiled-executable call over all slots (``engine.decode_step``).
+    ``temperature``/``top_k`` follow the engine's sampling semantics
+    (temperature 0 = greedy)."""
+
+    def __init__(self, engine, *, page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 temperature: Optional[float] = None,
+                 top_k: Optional[int] = None):
+        self.engine = engine
+        self.n_slots = engine.batch_size
+        per_slot = -(-engine.max_seq // page_size)
+        self.pool = PagePool(
+            n_pages if n_pages is not None else self.n_slots * per_slot,
+            page_size,
+        )
+        self.temperature = (
+            engine.temperature if temperature is None else temperature
+        )
+        self.top_k = top_k
+        self.slots = [_Slot(i) for i in range(self.n_slots)]
+        self.queue: List[Request] = []
+        self.pending: List[Request] = []   # not yet arrived (trace replay)
+        self.step_count = 0
+        self.results: Dict[int, RequestResult] = {}
+        self._submit_step: Dict[int, int] = {}
+        self.cache = engine.api.cache_init(self.n_slots, engine.max_seq)
+        if engine.mesh is not None:
+            self.cache = engine._place_cache(self.cache)
+
+    # -- request intake ---------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request; it becomes admissible at ``req.arrival``."""
+        if req.uid in self._submit_step or req.uid in self.results:
+            raise ValueError(f"duplicate uid {req.uid}")
+        self._submit_step[req.uid] = max(req.arrival, self.step_count)
+        self.pending.append(req)
+        self.pending.sort(key=lambda r: (r.arrival, r.uid))
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.uid is not None)
+
+    def _free_slot(self) -> Optional[_Slot]:
+        for s in self.slots:
+            if s.uid is None:
+                return s
+        return None
+
+    # -- slot lifecycle ---------------------------------------------------
+    def _admit(self, req: Request, slot: _Slot) -> None:
+        eng = self.engine
+        prompt = np.asarray(req.prompt, np.int32)
+        cache_len = min(len(prompt) + req.max_new_tokens, eng.max_seq)
+        self.pool.alloc(req.uid, self.pool.pages_for(cache_len))
+
+        # batch-1 prefill through the legacy model API (disaggregated
+        # from the batched compiled decode)
+        one = eng.api.cache_init(1, eng.max_seq)
+        logits, one = eng._prefill(eng.params, {"tokens": prompt[None, :]}, one)
+        tok = int(self._sample_one(req.uid, len(prompt) - 1, logits[0, -1]))
+
+        # write the prefilled cache into this slot (leaves are
+        # [n_super, B, ...]: batch is axis 1)
+        self.cache = jax.tree.map(
+            lambda big, new: jax.lax.dynamic_update_slice_in_dim(
+                big, new.astype(big.dtype), slot.index, axis=1
+            ),
+            self.cache, one,
+        )
+        slot.uid = req.uid
+        slot.pos = len(prompt)
+        slot.remaining = req.max_new_tokens - 1
+        slot.tokens = [tok]
+        slot.last_tok = tok
+        slot.result = RequestResult(
+            uid=req.uid, tokens=np.zeros(0, np.int32),
+            submitted=self._submit_step[req.uid],
+            admitted=self.step_count, first_token=self.step_count,
+            finished=-1,
+        )
+        if slot.remaining == 0:
+            self._retire(slot)
+
+    def _retire(self, slot: _Slot) -> None:
+        self.pool.free(slot.uid)
+        res = slot.result
+        res.tokens = np.asarray(slot.tokens, np.int32)
+        res.finished = self.step_count
+        self.results[slot.uid] = res
+        slot.uid = None
+        slot.pos = 0
+        slot.remaining = 0
+        slot.tokens = None
+        slot.last_tok = 0
+        slot.result = None
+
+    # -- sampling ---------------------------------------------------------
+    def _keys(self, uids: np.ndarray, pos: np.ndarray):
+        base = jax.random.PRNGKey(self.engine.rng_seed)
+        return jax.vmap(
+            lambda u, p: jax.random.fold_in(jax.random.fold_in(base, u), p)
+        )(jnp.asarray(uids, jnp.uint32), jnp.asarray(pos, jnp.uint32))
+
+    def _mask_top_k(self, logits):
+        if self.top_k is not None and self.top_k > 0:
+            kth = jax.lax.top_k(logits, self.top_k)[0][..., -1:]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+        return logits
+
+    def _sample_one(self, uid: int, pos: int, logits) -> int:
+        logits = self._mask_top_k(logits)
+        if self.temperature <= 0.0:
+            return int(jnp.argmax(logits, axis=-1))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.engine.rng_seed), uid),
+            np.uint32(pos),
+        )
+        return int(jax.random.categorical(key, logits / self.temperature))
+
+    def _sample_batch(self, uids: np.ndarray, pos: np.ndarray, logits):
+        logits = self._mask_top_k(logits)
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        keys = self._keys(uids, pos)
+        toks = jax.vmap(
+            lambda k, lg: jax.random.categorical(k, lg / self.temperature)
+        )(keys, logits)
+        return np.asarray(toks, np.int32)
+
+    # -- the serving loop -------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler tick: admit arrivals into free slots, run one
+        batched compiled decode over the active slots, retire finished
+        requests. Returns False when nothing is left to do."""
+        # arrivals whose time has come
+        while self.pending and self.pending[0].arrival <= self.step_count:
+            self.queue.append(self.pending.pop(0))
+        # admit while there is a slot AND pages for the whole request
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req = self.queue[0]
+            cache_len = min(
+                len(req.prompt) + req.max_new_tokens, self.engine.max_seq
+            )
+            if self.pool.pages_for(cache_len) > self.pool.n_pages:
+                raise PagePoolError(
+                    f"uid {req.uid} needs {self.pool.pages_for(cache_len)} "
+                    f"pages; the pool only has {self.pool.n_pages}"
+                )
+            if self.pool.pages_for(cache_len) > self.pool.available:
+                break  # head-of-line waits for pages (deterministic order)
+            self.queue.pop(0)
+            self._admit(req, slot)
+
+        live = [s for s in self.slots if s.uid is not None]
+        if not live:
+            done = not (self.queue or self.pending)
+            self.step_count += 1
+            return not done
+
+        tok = jnp.asarray([s.last_tok for s in self.slots], jnp.int32)
+        pos = jnp.asarray([s.pos for s in self.slots], jnp.int32)
+        logits, self.cache = self.engine.decode_step(tok, self.cache, pos)
+        sampled = self._sample_batch(
+            np.asarray([s.uid if s.uid is not None else 0 for s in self.slots]),
+            np.asarray([s.pos for s in self.slots]),
+            logits,
+        )
+        self.step_count += 1
+        for s in live:
+            t = int(sampled[s.index])
+            s.tokens.append(t)
+            s.last_tok = t
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining <= 0:
+                self._retire(s)
+        return True
+
+    def run(self, requests: Sequence[Request] = ()) -> Dict[int, RequestResult]:
+        """Drive the loop to completion over ``requests`` (plus anything
+        already submitted); returns results keyed by uid."""
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            pass
+        return dict(self.results)

@@ -42,9 +42,11 @@ class ServeEngine:
     one :class:`~repro.axe.compile.Executable` per (batch, seq) whose
     ops bind to the kernel programs and whose redistributions are the
     solved plan's collectives — the same plan ``layout_plan`` places
-    params with. Incremental decode (:meth:`generate`) keeps the
-    cache-carrying model API; that is a serving-loop concern, not a
-    graph-compilation one."""
+    params with. Incremental decode (:meth:`generate`) runs through the
+    compiled decode-step executable (:meth:`compiled_decode` — the
+    KV/SSM caches are first-class graph tensors, docs/serving.md) by
+    default; ``decode_mode="legacy"`` keeps the cache-carrying model
+    API path for parity checks."""
 
     api: Any                 # ModelAPI
     batch_size: int
@@ -55,6 +57,7 @@ class ServeEngine:
     force_schedule: Optional[Union[str, Mapping[str, str]]] = None
     mesh: Optional[Any] = None       # jax.sharding.Mesh
     layout_plan: Optional[Any] = None  # SolveResult | LayoutPlan | {name: AxeSpec}
+    decode_mode: str = "compiled"      # "compiled" | "legacy"
 
     def __post_init__(self):
         from repro import tune
@@ -87,7 +90,9 @@ class ServeEngine:
     def _place_cache(self, cache):
         from repro.axe import rules as axe_rules
 
-        specs = axe_rules.cache_specs(cache, self._space())
+        specs = axe_rules.cache_specs(
+            cache, self._space(), plan=self.layout_plan
+        )
         shardings = axe_rules.sharding_tree(specs, self.mesh)
         return jax.device_put(cache, shardings)
 
@@ -136,6 +141,52 @@ class ServeEngine:
             self._compiled[key] = exe
         return exe
 
+    # -- compiled decode step (axe.compile on the decode graph) ----------
+    def compiled_decode(self, *, batch: Optional[int] = None,
+                        layers: Optional[int] = None):
+        """The :class:`~repro.axe.compile.Executable` for one decode
+        step of this engine's model — the KV/SSM caches are graph
+        inputs and outputs placed by the layout solver like any other
+        tensor. Memoized in the same FIFO-bounded table as
+        :meth:`compiled_forward` and sharing ``schedule_cache``.
+        ``layout_plan`` is consumed when it covers the decode graph
+        (i.e. it was solved on one — a forward-pass plan has no cache
+        tensors and is skipped without re-solve noise)."""
+        from repro.axe import rules as axe_rules
+        from repro.axe.compile import decode_executable
+
+        key = ("decode", batch or self.batch_size, layers)
+        exe = self._compiled.get(key)
+        if exe is None:
+            plan = self.layout_plan
+            if plan is not None and not axe_rules._plan_cache_env(plan):
+                plan = None
+            exe = decode_executable(
+                self.api.cfg, self.mesh, batch or self.batch_size,
+                self.max_seq, plan=plan, layers=layers,
+                schedule_cache=self.schedule_cache,
+                dtype=str(self.api.cfg.dtype),
+            )
+            while len(self._compiled) >= self.MAX_COMPILED:
+                self._compiled.pop(next(iter(self._compiled)))
+            self._compiled[key] = exe
+        return exe
+
+    def decode_step(self, tok: jax.Array, cache, pos: jax.Array):
+        """One compiled decode step: ``tok [B]`` current tokens,
+        ``pos [B]`` per-slot positions (requests in one batch may sit at
+        different depths), legacy-layout ``cache`` pytree in/out.
+        Returns ``(logits [B, V], new_cache)``."""
+        from repro.axe.compile import decode_cache, decode_inputs
+
+        b = int(tok.shape[0])
+        exe = self.compiled_decode(batch=b)
+        run = self._scheduled(exe)
+        inputs = decode_inputs(exe.graph, self.api.cfg, self.params, cache)
+        outs = run(inputs, tok, pos)
+        logits = dict(zip(exe.graph.outputs(), outs))["logits"]
+        return logits, decode_cache(exe.graph, self.api.cfg, outs, cache)
+
     def score(self, tokens: jax.Array) -> jax.Array:
         """Full-sequence logits [B, S, V] through the compiled graph —
         the engine's forward pass as one ``axe.compile`` executable
@@ -155,9 +206,19 @@ class ServeEngine:
         prompts: jax.Array,       # [B, S_prompt] int32 (padded batch)
         max_new_tokens: int,
         *,
+        temperature: Optional[float] = None,
+        top_k: Optional[int] = None,
         extra_inputs: Optional[Dict[str, jax.Array]] = None,
     ) -> np.ndarray:
-        """Greedy / temperature sampling for a fixed batch."""
+        """Greedy / temperature / top-k sampling for a fixed batch.
+
+        Prefill runs through the legacy full-sequence model API; each
+        decode step runs through the compiled decode executable
+        (``decode_mode="compiled"``, the default) or the legacy
+        ``api.decode_step`` (``decode_mode="legacy"``).
+        ``temperature``/``top_k`` override the engine defaults per call;
+        ``temperature=0`` (or unset with an engine default of 0) is
+        exact greedy decoding."""
         assert self.params is not None, "call load() first"
         b, s_prompt = prompts.shape
         assert b == self.batch_size
@@ -171,18 +232,35 @@ class ServeEngine:
 
         key = jax.random.PRNGKey(self.rng_seed)
         outs: List[jax.Array] = []
-        tok = self._sample(logits[:, -1], key)
+        tok = self._sample(logits[:, -1], key,
+                           temperature=temperature, top_k=top_k)
         outs.append(tok)
         pos = s_prompt
+        compiled = self.decode_mode != "legacy"
         for i in range(max_new_tokens - 1):
             key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, tok[:, None], cache, jnp.int32(pos))
-            tok = self._sample(logits[:, -1], sub)
+            if compiled:
+                step_logits, cache = self.decode_step(
+                    tok, cache, jnp.full((b,), pos, jnp.int32)
+                )
+            else:
+                logits, cache = self._decode(
+                    self.params, tok[:, None], cache, jnp.int32(pos)
+                )
+                step_logits = logits[:, -1]
+            tok = self._sample(step_logits, sub,
+                               temperature=temperature, top_k=top_k)
             outs.append(tok)
             pos += 1
         return np.stack([np.asarray(t) for t in outs], axis=1)
 
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
-        if self.temperature <= 0.0:
+    def _sample(self, logits: jax.Array, key, *,
+                temperature: Optional[float] = None,
+                top_k: Optional[int] = None) -> jax.Array:
+        t = self.temperature if temperature is None else temperature
+        if top_k is not None and top_k > 0:
+            kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+        if t <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / self.temperature).astype(jnp.int32)
+        return jax.random.categorical(key, logits / t).astype(jnp.int32)

@@ -1,0 +1,250 @@
+"""Continuous batcher invariants (``repro.serve.batcher``): slot and
+page-lease accounting under churn, per-request output independence
+from co-batched neighbors, and deterministic trace replay.
+
+Deterministic sweeps over fixed arrival traces run everywhere; the
+``@given`` versions re-check the same invariants over random traces
+when hypothesis is installed (``pip install .[dev]``) and skip
+otherwise — the fixed traces are the fallback coverage."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import get_config, smoke_variant
+from repro.models.model_zoo import build_model
+from repro.serve import (
+    ContinuousBatcher,
+    PagePool,
+    PagePoolError,
+    Request,
+    ServeEngine,
+)
+
+SLOTS, MAX_SEQ = 3, 32
+#: prompt lengths drawn from a small set so the batch-1 prefill jit
+#: compiles once per length, not per request
+PROMPT_LENS = (3, 4, 5)
+
+_ENGINE = {}
+
+
+def _engine():
+    if "eng" not in _ENGINE:
+        cfg = dataclasses.replace(smoke_variant(get_config("qwen3-4b")),
+                                  dtype="float32")
+        api = build_model(cfg)
+        eng = ServeEngine(api=api, batch_size=SLOTS, max_seq=MAX_SEQ)
+        eng.load(api.init(jax.random.PRNGKey(0)))
+        _ENGINE["eng"] = (cfg, eng)
+    return _ENGINE["eng"]
+
+
+def _trace(spec, seed=0):
+    """Requests from (arrival, prompt_len_idx, max_new_tokens) triples;
+    token ids are seeded off the uid so traces are reproducible."""
+    cfg, _ = _engine()
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for uid, (arrival, len_idx, new_toks) in enumerate(spec, start=1):
+        s = PROMPT_LENS[len_idx % len(PROMPT_LENS)]
+        rng.seed(seed * 1000 + uid)
+        reqs.append(Request(
+            uid=uid,
+            prompt=rng.randint(0, cfg.vocab_size, size=s).astype(np.int32),
+            max_new_tokens=1 + new_toks % 5,
+            arrival=arrival,
+        ))
+    return reqs
+
+
+#: fixed sweeps: bursty arrivals, staggered arrivals, more requests
+#: than slots, single-token requests that retire at admission
+TRACES = [
+    [(0, 0, 3), (0, 1, 2), (0, 2, 4), (0, 0, 1)],
+    [(0, 1, 4), (2, 2, 3), (4, 0, 2), (6, 1, 5), (8, 2, 1)],
+    [(0, 0, 0), (0, 1, 0), (1, 2, 2), (1, 0, 3), (2, 1, 4), (3, 2, 3)],
+]
+
+
+def _check_invariants(bat):
+    live = [s.uid for s in bat.slots if s.uid is not None]
+    assert len(live) == len(set(live)), "slot aliasing: duplicate uid"
+    leased = bat.pool.leased_pages()
+    assert set(leased) == set(live), "lease lifetime != slot residency"
+    pages = [p for ps in leased.values() for p in ps]
+    assert len(pages) == len(set(pages)), "page aliasing across leases"
+    assert bat.pool.available + len(pages) == bat.pool.n_pages
+
+
+def _run_checked(bat, reqs):
+    for r in reqs:
+        bat.submit(r)
+    while True:
+        alive = bat.step()
+        _check_invariants(bat)
+        if not alive:
+            break
+    return dict(bat.results)
+
+
+def _assert_trace_clean(reqs, results, pool):
+    assert set(results) == {r.uid for r in reqs}
+    for r in reqs:
+        res = results[r.uid]
+        assert len(res.tokens) == r.max_new_tokens
+        assert res.submitted >= r.arrival
+        assert res.admitted >= res.submitted
+        assert res.finished >= res.first_token == res.admitted
+    assert pool.available == pool.n_pages, "pages leaked"
+    assert all(v == 1 for v in pool.freed_count.values()), "double free"
+    assert set(pool.freed_count) == {r.uid for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# page pool: exact lease accounting
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_accounting():
+    pool = PagePool(n_pages=8, page_size=16)
+    assert pool.pages_for(1) == 1 and pool.pages_for(16) == 1
+    assert pool.pages_for(17) == 2
+    a = pool.alloc(1, 3)
+    b = pool.alloc(2, 2)
+    assert len(set(a) | set(b)) == 5 and pool.available == 3
+    with pytest.raises(PagePoolError):
+        pool.alloc(1, 1)        # double lease
+    with pytest.raises(PagePoolError):
+        pool.alloc(3, 4)        # more than free
+    pool.free(1)
+    assert pool.available == 6
+    with pytest.raises(PagePoolError):
+        pool.free(1)            # double free
+    with pytest.raises(PagePoolError):
+        pool.free(99)           # unknown uid
+    pool.free(2)
+    assert pool.available == pool.n_pages
+    assert pool.freed_count == {1: 1, 2: 1}
+
+
+def test_oversized_request_raises():
+    _, eng = _engine()
+    bat = ContinuousBatcher(eng, page_size=4, n_pages=2)  # 8 token budget
+    reqs = _trace([(0, 2, 4)])  # 5 prompt + 5 new > 8
+    with pytest.raises(PagePoolError):
+        bat.run(reqs)
+
+
+# ---------------------------------------------------------------------------
+# fixed-trace sweeps: slots, pages, independence, replay
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("trace_idx", range(len(TRACES)))
+def test_slot_and_page_invariants(trace_idx):
+    _, eng = _engine()
+    reqs = _trace(TRACES[trace_idx], seed=trace_idx)
+    bat = ContinuousBatcher(eng)
+    results = _run_checked(bat, reqs)
+    _assert_trace_clean(reqs, results, bat.pool)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_outputs_independent_of_neighbors(temperature):
+    """Each request's tokens match a solo run of the same request —
+    co-batched neighbors never leak in (greedy and sampled: the keys
+    fold uid/pos, not slot or step)."""
+    _, eng = _engine()
+    reqs = _trace(TRACES[1], seed=7)
+    co = ContinuousBatcher(eng, temperature=temperature).run(reqs)
+    for r in reqs:
+        solo = ContinuousBatcher(eng, temperature=temperature).run(
+            [dataclasses.replace(r, arrival=0)]
+        )
+        np.testing.assert_array_equal(
+            co[r.uid].tokens, solo[r.uid].tokens,
+            err_msg=f"uid {r.uid} tokens depend on co-batched neighbors",
+        )
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_deterministic_replay(temperature):
+    _, eng = _engine()
+    reqs = _trace(TRACES[2], seed=3)
+    a = ContinuousBatcher(eng, temperature=temperature).run(reqs)
+    b = ContinuousBatcher(eng, temperature=temperature).run(reqs)
+    assert set(a) == set(b)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid].tokens, b[uid].tokens)
+        assert dataclasses.astuple(a[uid])[2:] == dataclasses.astuple(b[uid])[2:]
+
+
+def test_page_pressure_head_of_line_waits():
+    """With a pool smaller than the slot count wants, admission blocks
+    deterministically on the head of the queue; everything still
+    finishes and pages drain."""
+    _, eng = _engine()
+    # one page per request's worth of cache -> at most 2 leases at once
+    reqs = _trace([(0, 0, 3), (0, 1, 3), (0, 2, 3), (1, 0, 2)], seed=11)
+    bat = ContinuousBatcher(eng, page_size=MAX_SEQ // 2, n_pages=2)
+    results = _run_checked(bat, reqs)
+    _assert_trace_clean(reqs, results, bat.pool)
+    # FIFO admission: a later uid is never admitted before an earlier
+    # one that arrived no later
+    admitted = {r.uid: results[r.uid].admitted for r in reqs}
+    assert admitted[1] <= admitted[2] <= admitted[3]
+
+
+def test_slots_recycle_under_churn():
+    """More requests than slots: every slot is reused and the decode
+    batch keeps running while requests join and leave mid-stream."""
+    _, eng = _engine()
+    reqs = _trace([(i // 2, i, 2 + i % 3) for i in range(SLOTS * 3)], seed=5)
+    bat = ContinuousBatcher(eng)
+    results = _run_checked(bat, reqs)
+    _assert_trace_clean(reqs, results, bat.pool)
+    assert len(results) == SLOTS * 3 > SLOTS
+
+
+def test_duplicate_uid_rejected():
+    _, eng = _engine()
+    bat = ContinuousBatcher(eng)
+    (req,) = _trace([(0, 0, 2)])
+    bat.submit(req)
+    with pytest.raises(ValueError):
+        bat.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# property versions (skip without hypothesis; the fixed traces above
+# are the fallback coverage)
+# ---------------------------------------------------------------------------
+
+_triples = st.lists(
+    st.tuples(st.integers(0, 6), st.integers(0, 2), st.integers(0, 4)),
+    min_size=1, max_size=6,
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec=_triples, seed=st.integers(0, 3))
+def test_invariants_random_traces(spec, seed):
+    _, eng = _engine()
+    reqs = _trace(spec, seed=seed)
+    bat = ContinuousBatcher(eng)
+    results = _run_checked(bat, reqs)
+    _assert_trace_clean(reqs, results, bat.pool)
+
+
+@settings(max_examples=5, deadline=None)
+@given(spec=_triples, seed=st.integers(0, 3))
+def test_replay_random_traces(spec, seed):
+    _, eng = _engine()
+    reqs = _trace(spec, seed=seed)
+    a = ContinuousBatcher(eng).run(reqs)
+    b = ContinuousBatcher(eng).run(reqs)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid].tokens, b[uid].tokens)
