@@ -3,8 +3,15 @@ over the model-zoo graphs (dense / MoE / SSM smoke configs), reporting
 wall time and tokens/s per config, merged into ``BENCH_graph.json`` for
 the nightly regression gate (``benchmarks/check_regression.py``).
 
+The default run measures each config twice — through the fusion passes
+(``repro.axe.passes``, the gated ``graph.forward.*`` rows) and unfused
+(``graph.forward.*.unfused``) — so the baseline carries the fused vs
+unfused tokens/s side by side. ``--no-fuse`` is the A/B switch: it
+measures only the unfused executables and overwrites the section with
+them (a debugging mode — don't commit its output as the baseline).
+
 Usage:
-    python benchmarks/bench_graph.py [--batch 4] [--seq 64]
+    python benchmarks/bench_graph.py [--batch 4] [--seq 64] [--no-fuse]
 """
 from __future__ import annotations
 
@@ -26,7 +33,37 @@ BENCH_GRAPH_JSON = "BENCH_graph.json"
 ARCHS = ("qwen3-4b", "qwen3-moe-235b-a22b", "mamba2-2.7b")
 
 
-def run(batch: int, seq: int) -> list:
+def _build(axe, cfg, mesh, params, batch, seq, *, fuse):
+    exe = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype,
+                               fuse=fuse)
+    return exe, axe.model_inputs(exe.graph, cfg, params)
+
+
+def _interleaved(execs, tokens, *, warmup: int = 3, rounds: int = 25):
+    """Best wall-time (µs) per executable, sampled in drift-symmetric
+    rounds: each round runs the legs forward then reversed (A,B,B,A), so
+    a linear host-load drift across the round hits every leg equally —
+    the fused and unfused legs run identical layouts, and a sequential
+    A-then-B sweep would let a few ms of machine noise decide the
+    comparison. Min over rounds because the host is shared: the fastest
+    observation is the least-contended one."""
+    import time
+
+    for exe, inputs in execs:
+        for _ in range(warmup):
+            jax.block_until_ready(exe(inputs, tokens))
+    samples = [[] for _ in execs]
+    order = list(range(len(execs)))
+    for _ in range(rounds):
+        for i in order + order[::-1]:
+            exe, inputs = execs[i]
+            t0 = time.perf_counter()
+            jax.block_until_ready(exe(inputs, tokens))
+            samples[i].append(time.perf_counter() - t0)
+    return [min(ts) * 1e6 for ts in samples]
+
+
+def run(batch: int, seq: int, *, fuse: bool = True) -> list:
     from repro import axe, compat
     from repro.configs import get_config, smoke_variant
     from repro.models.model_zoo import build_model
@@ -45,15 +82,35 @@ def run(batch: int, seq: int) -> list:
         tokens = jax.random.randint(
             jax.random.PRNGKey(1), (batch * seq,), 0, cfg.vocab_size, jnp.int32
         )
-        exe = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype)
-        inputs = axe.model_inputs(exe.graph, cfg, params)
-        us = time_jitted(exe, inputs, tokens)
-        tok_s = batch * seq / (us / 1e6)
+        exe_u, ins_u = _build(axe, cfg, mesh, params, batch, seq, fuse=False)
+        base = (
+            f"compiled forward {batch}x{seq} "
+            f"collectives={len(exe_u.collective_sequence())} "
+            f"comm={exe_u.plan.total_comm_bytes}B/dev"
+        )
+        if not fuse:
+            us_u = time_jitted(exe_u, ins_u, tokens)
+            tok_u = batch * seq / (us_u / 1e6)
+            rows.append(row(
+                f"graph.forward.{arch}", us_u,
+                f"{base} tokens/s={tok_u:.0f} (no-fuse mode)",
+            ))
+            continue
+        exe_f, ins_f = _build(axe, cfg, mesh, params, batch, seq, fuse=True)
+        us_u, us_f = _interleaved([(exe_u, ins_u), (exe_f, ins_f)], tokens)
+        tok_u = batch * seq / (us_u / 1e6)
+        tok_f = batch * seq / (us_f / 1e6)
+        rep = exe_f.fusion_report
         rows.append(row(
-            f"graph.forward.{arch}", us,
-            f"compiled forward {batch}x{seq} tokens/s={tok_s:.0f} "
-            f"collectives={len(exe.collective_sequence())} "
-            f"comm={exe.plan.total_comm_bytes}B/dev",
+            f"graph.forward.{arch}", us_f,
+            f"compiled forward {batch}x{seq} fused tokens/s={tok_f:.0f} "
+            f"(unfused {tok_u:.0f}) patterns={len(rep.patterns_fired)} "
+            f"collectives={len(exe_f.collective_sequence())} "
+            f"comm={exe_f.plan.total_comm_bytes}B/dev",
+        ))
+        rows.append(row(
+            f"graph.forward.{arch}.unfused", us_u,
+            f"{base} tokens/s={tok_u:.0f}",
         ))
     return rows
 
@@ -62,8 +119,12 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="measure only the unfused executables (A/B "
+                         "debugging; overwrites the section — don't "
+                         "commit as the baseline)")
     args = ap.parse_args()
-    rows = run(args.batch, args.seq)
+    rows = run(args.batch, args.seq, fuse=not args.no_fuse)
     path = write_bench_json(
         "graph", rows, filename=BENCH_GRAPH_JSON,
     )

@@ -15,10 +15,14 @@ written against it (docs/kernel-dsl.md).
 * ``repro.axe.compile``   — ``axe.compile``: GraphSpec + LayoutPlan →
   a jitted :class:`Executable` whose ops bind to the kernel programs
   and whose redistributions are real collectives (docs/compile.md)
+* ``repro.axe.passes``    — graph-level fusion passes run before
+  solve/compile: epilogue fusion, reshape-pair collapse, DCE
+  (docs/passes.md)
 """
 from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
 from repro.axe.program import (
     PROGRAMS,
+    Epilogue,
     Program,
     ProgramError,
     StageContext,
@@ -64,6 +68,19 @@ from repro.axe.solve import (
     enumerate_specs,
     solve,
 )
+from repro.axe.passes import (
+    DeadCodeElimination,
+    EpilogueFusion,
+    FusionReport,
+    Pass,
+    PassError,
+    PassPipeline,
+    PassReport,
+    Pattern,
+    ReshapePairCollapse,
+    default_pipeline,
+    fuse_graph,
+)
 from repro.axe.compile import (
     CompileError,
     Executable,
@@ -84,19 +101,29 @@ __all__ = [
     "AxeSpec",
     "BlockLowering",
     "CompileError",
+    "DeadCodeElimination",
     "Decision",
+    "Epilogue",
+    "EpilogueFusion",
     "Executable",
+    "FusionReport",
     "GraphSpec",
     "LoweredOp",
     "LayoutPlan",
     "OpNode",
     "PROGRAMS",
+    "Pass",
+    "PassError",
+    "PassPipeline",
+    "PassReport",
+    "Pattern",
     "PhysicalSpace",
     "PlanEntry",
     "Program",
     "ProgramError",
     "PropagationError",
     "Redistribution",
+    "ReshapePairCollapse",
     "SolveError",
     "SolveResult",
     "SpecError",
@@ -113,7 +140,9 @@ __all__ = [
     "decode_graph",
     "decode_inputs",
     "decoder_layer_graph",
+    "default_pipeline",
     "enumerate_specs",
+    "fuse_graph",
     "get_program",
     "kernel",
     "model_executable",

@@ -41,7 +41,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.axe.graphs import GraphSpec
-from repro.axe.propagate import LayoutPlan, OpNode, PlanEntry
+from repro.axe.propagate import (
+    LayoutPlan,
+    OpNode,
+    PlanEntry,
+    compose_epilogue,
+    epilogue_steps,
+    step_node,
+)
 from repro.axe.solve import SolveResult, evaluate_env, finalize_entries, solve
 from repro.axe.spec import AxeSpec
 from repro.core import collective as coll
@@ -98,11 +105,14 @@ class ExecCtx:
     mesh arithmetic helpers."""
 
     def __init__(self, node: OpNode, entry: PlanEntry, in_specs, aux, side,
-                 shape_steps, mesh_shape, interpret: bool):
+                 shape_steps, mesh_shape, interpret: bool, *,
+                 out_spec: Optional[AxeSpec] = None):
         self.node = node
         self.entry = entry
         self.in_specs = tuple(in_specs)
-        self.out_spec: AxeSpec = entry.out_spec
+        #: the *segment* out spec — for a fused node's epilogue segments
+        #: this overrides the entry's (final-chain) out spec
+        self.out_spec: AxeSpec = entry.out_spec if out_spec is None else out_spec
         self._aux = aux
         self.side = side
         #: collective steps of the plan's shape-changing redistribution
@@ -531,16 +541,21 @@ class LoweredOp:
 def _backend_name(node: OpNode, in_specs: Sequence[AxeSpec] = ()) -> str:
     if node.kind == "matmul":
         grouped = len(in_specs) > 1 and len(in_specs[1].shape) == 3
-        return "program:moe_gemm" if grouped else "program:matmul"
-    if node.kind == "attention":
-        return "program:flash_attention"
-    if node.kind == "decode_attention":
-        return "program:flash_attention/decode"
-    if node.kind == "norm":
-        return "program:rmsnorm"
-    if node.kind == "finalize":
-        return "collective"
-    return f"jnp:{node.kind}"
+        base = "program:moe_gemm" if grouped else "program:matmul"
+    elif node.kind == "attention":
+        base = "program:flash_attention"
+    elif node.kind == "decode_attention":
+        base = "program:flash_attention/decode"
+    elif node.kind == "norm":
+        base = "program:rmsnorm"
+    elif node.kind == "finalize":
+        base = "collective"
+    else:
+        base = f"jnp:{node.kind}"
+    steps = epilogue_steps(node)
+    if steps:
+        base += "+epi:" + "+".join(str(s[0]) for s in steps)
+    return base
 
 
 #: attr keys whose values name auxiliary (replicated) input tensors
@@ -586,10 +601,14 @@ class Executable:
         )
         aux: List[str] = []
         for node in graph.nodes:
-            for key in _AUX_ATTRS:
-                name = node.attr(key)
-                if name is not None and name not in aux:
-                    aux.append(name)
+            # a fused node's epilogue steps carry the absorbed ops'
+            # attrs — their auxiliary tensors are still required
+            subs = (node,) + tuple(step_node(s) for s in epilogue_steps(node))
+            for sub in subs:
+                for key in _AUX_ATTRS:
+                    name = sub.attr(key)
+                    if name is not None and name not in aux:
+                        aux.append(name)
         self.aux_names: Tuple[str, ...] = tuple(aux)
         self.outputs = graph.outputs()
 
@@ -606,6 +625,9 @@ class Executable:
         )
         self._issued: List[Tuple[str, str, Tuple[str, ...]]] = []
         self._jitted = None
+        #: the FusionReport when the graph came through fuse_graph
+        #: (set by compile(..., fuse=True) / model_executable)
+        self.fusion_report = None
 
     # -- introspection ---------------------------------------------------
     def _lower_entry(self, entry: PlanEntry) -> LoweredOp:
@@ -711,29 +733,36 @@ class Executable:
                         )
                     env[node.out] = x
                     continue
-                ins, in_specs, shape_steps = [], [], ()
-                for nm in node.inputs:
-                    x, spec = env[nm], self.plan.env[nm]
-                    for r in entry.redistributions:
-                        if r.operand != nm:
-                            continue
-                        if r.dst.shape == r.src.shape:
-                            x = coll.apply_plan(x, r.steps)
-                            spec = r.dst
-                        else:
-                            # shape-changing exchange: the op backend
-                            # owns these steps (MoE dispatch/combine)
-                            shape_steps = r.steps
-                        if r.steps:
-                            self._issued.append(
-                                (node.name, nm,
-                                 tuple(type(s).__name__ for s in r.steps))
-                            )
-                    ins.append(x)
-                    in_specs.append(spec)
-                ctx = ExecCtx(node, entry, in_specs, aux, side, shape_steps,
-                              mesh_shape, self.interpret)
-                out = op_backend(node.kind)(ctx, *ins)
+                vals = {nm: env[nm] for nm in node.inputs}
+                specs = {nm: self.plan.env[nm] for nm in node.inputs}
+                shape_steps = ()
+                internal: Dict[str, List] = {}
+                for r in entry.redistributions:
+                    if r.operand not in vals:
+                        # a fused chain intermediate (not a node input):
+                        # the fused runner applies it between segments
+                        internal.setdefault(r.operand, []).append(r)
+                    elif r.dst.shape == r.src.shape:
+                        vals[r.operand] = coll.apply_plan(vals[r.operand], r.steps)
+                        specs[r.operand] = r.dst
+                    else:
+                        # shape-changing exchange: the op backend
+                        # owns these steps (MoE dispatch/combine)
+                        shape_steps = r.steps
+                    if r.steps:
+                        self._issued.append(
+                            (node.name, r.operand,
+                             tuple(type(s).__name__ for s in r.steps))
+                        )
+                if epilogue_steps(node):
+                    out = self._run_fused(node, entry, vals, specs,
+                                          internal, aux, side, mesh_shape)
+                else:
+                    ins = [vals[nm] for nm in node.inputs]
+                    in_specs = [specs[nm] for nm in node.inputs]
+                    ctx = ExecCtx(node, entry, in_specs, aux, side, shape_steps,
+                                  mesh_shape, self.interpret)
+                    out = op_backend(node.kind)(ctx, *ins)
                 want = entry.out_spec.local_shape()
                 if tuple(out.shape) != tuple(want):
                     raise CompileError(
@@ -743,6 +772,108 @@ class Executable:
                 env[node.out] = out
         outs = tuple(env[o] for o in self.outputs)
         return outs[0] if len(outs) == 1 else outs
+
+    # -- fused-epilogue execution (axe.passes, docs/passes.md) -----------
+    def _run_fused(self, node, entry, vals, specs, internal, aux, side,
+                   mesh_shape):
+        """Execute a node carrying a fused epilogue: run the base op's
+        backend, then each absorbed step's backend on the evolving chain
+        value, applying the plan's *internal* redistributions (chain
+        tensors that no longer exist in the fused graph) between
+        segments. A 2-D matmul base with an elementwise-only chain and
+        no internal moves instead runs the chain inside the kernel on
+        the f32 accumulator tile (:func:`_kernel_epilogue`)."""
+        out = self._kernel_epilogue(node, entry, vals, specs, internal)
+        if out is not None:
+            return out
+        operands = tuple(self.plan.env[nm] for nm in node.inputs)
+        _, _, segments = compose_epilogue(node, operands, self.plan.env)
+        for sub, seg_spec in segments:
+            try:
+                sub_ins = [vals[nm] for nm in sub.inputs]
+                sub_specs = [specs[nm] for nm in sub.inputs]
+            except KeyError as exc:
+                raise CompileError(
+                    f"{node.name}: fused segment {sub.name} consumes "
+                    f"{exc.args[0]!r}, which no earlier segment produced"
+                ) from None
+            ctx = ExecCtx(sub, entry, sub_specs, aux, side, (),
+                          mesh_shape, self.interpret, out_spec=seg_spec)
+            out = op_backend(sub.kind)(ctx, *sub_ins)
+            cur_spec = seg_spec
+            for r in internal.get(sub.out, ()):
+                out = coll.apply_plan(out, r.steps)
+                cur_spec = r.dst
+            vals[sub.out] = out
+            specs[sub.out] = cur_spec
+        return out
+
+    def _kernel_epilogue(self, node, entry, vals, specs, internal):
+        """The in-VMEM fast path: when the base is a plain 2-D matmul
+        and every absorbed step is a known elementwise op with no
+        internal redistributions, hand the whole chain to the matmul
+        program as a :class:`~repro.axe.program.Epilogue` — it runs on
+        the f32 accumulator tile before writeback (or functionally on
+        the result when the extras don't tile like C). Returns None when
+        the chain needs the general segment path."""
+        if node.kind != "matmul" or internal:
+            return None
+        steps = [step_node(s) for s in epilogue_steps(node)]
+        if any(s.kind != "elementwise" for s in steps):
+            return None
+        n_base = int(node.attr("base_inputs") or len(node.inputs))
+        if n_base != 2:
+            return None
+        a_nm, b_nm = node.inputs[:2]
+        a, b = vals[a_nm], vals[b_nm]
+        if a.ndim != 2 or b.ndim != 2:
+            return None
+        fns = []
+        for s in steps:
+            fn = s.attr("fn", "add")
+            if fn not in ("add", "swiglu", "mul_silu", "gelu"):
+                return None
+            fns.append(fn)
+        chain0 = str(node.attr("base_out") or node.out)
+        extras: List[str] = []
+        for s in steps:
+            for nm in s.inputs:
+                produced = nm == chain0 or any(t.out == nm for t in steps)
+                if not produced and nm not in extras:
+                    if nm not in vals:
+                        return None
+                    extras.append(nm)
+
+        def body(tile, *xs):
+            named = dict(zip(extras, xs))
+            named[chain0] = tile
+            cur = tile
+            for s, fn in zip(steps, fns):
+                args = [named[nm] for nm in s.inputs]
+                if fn == "add":
+                    cur = args[0]
+                    for x in args[1:]:
+                        cur = cur + x
+                elif fn == "swiglu":
+                    cur = jax.nn.silu(args[0]) * args[1]
+                elif fn == "mul_silu":
+                    cur = args[0] * jax.nn.silu(args[1])
+                else:  # gelu
+                    cur = jax.nn.gelu(args[0])
+                named[s.out] = cur
+            return cur
+
+        from repro.kernels import programs
+
+        epi = programs.Epilogue(
+            tag="+".join(fns), body=body,
+            args=tuple(vals[nm] for nm in extras),
+        )
+        return programs.matmul(
+            a, b, arg_specs=(specs[a_nm], specs[b_nm]),
+            out_dtype=jnp.dtype(entry.out_spec.dtype),
+            interpret=self.interpret, epilogue=epi,
+        )
 
     def _sharded_fn(self):
         from repro import compat
@@ -807,6 +938,17 @@ def plan_covers(graph: GraphSpec, plan) -> bool:
         spec = env.get(name)
         if spec is None or spec.shape != meta.shape or spec.space != graph.space:
             return False
+    # a LayoutPlan/SolveResult must also have been planned over these
+    # exact nodes — a plan solved on the unfused graph does not cover
+    # its fused rewrite (and vice versa), even at the same shapes
+    layout = plan.plan if isinstance(plan, SolveResult) else plan
+    if isinstance(layout, LayoutPlan):
+        have = {e.op.name: e.op for e in layout.entries}
+        # compare the whole OpNode, not just the name: fusion keeps base
+        # node names but rewrites inputs/attrs, so name-subset would let
+        # an unfused plan silently drive the fused rewrite
+        if any(have.get(n.name) != n for n in graph.nodes):
+            return False
     return True
 
 
@@ -818,6 +960,7 @@ def compile(  # noqa: A001 - the paper-facing API name
     schedule_cache: Optional[str] = None,
     interpret: Optional[bool] = None,
     beam: int = 4,
+    fuse: bool = False,
 ) -> Executable:
     """Compile ``graph`` for ``mesh`` under ``plan`` (see module doc).
 
@@ -826,11 +969,40 @@ def compile(  # noqa: A001 - the paper-facing API name
     input assignment, or None — in which case the layout solver runs
     (``beam`` forwarded). ``schedule_cache`` pins the process-wide
     schedule cache (``repro.tune``) so program stages traced inside the
-    executable reuse autotuned schedules."""
+    executable reuse autotuned schedules. ``fuse=True`` rewrites the
+    graph through :func:`repro.axe.passes.fuse_graph` first (epilogue
+    fusion, reshape collapse, DCE — docs/passes.md); a ``plan`` handed
+    alongside must cover the *fused* graph (use :func:`plan_covers` to
+    check — a plan solved on the unfused rewrite does not cover).
+
+    With ``fuse=True`` and ``plan=None`` the layout is solved on the
+    **pre-rewrite** graph and its input assignment is propagated through
+    the fused graph (``compose_epilogue`` parity: identical specs and
+    comm bytes). Fusing changes execution structure, never layout
+    decisions — a beam search run directly on the rewritten graph walks
+    a subtly different state space and can settle on a different
+    near-tie (e.g. replicated attention heads) that costs the same in
+    the model but executes measurably worse."""
     if schedule_cache is not None:
         from repro import tune
 
         tune.use_cache(schedule_cache)
+
+    fusion_report = None
+    if fuse:
+        from repro.axe.passes import fuse_graph
+
+        unfused = graph
+        graph, fusion_report = fuse_graph(graph)
+        if plan is not None and not plan_covers(graph, plan):
+            raise CompileError(
+                "the layout plan does not cover the fused graph (it was "
+                "solved on a different rewrite); pass a covering plan "
+                "or plan=None"
+            )
+        if plan is None:
+            res = solve(unfused, beam=beam)
+            plan = {n: res.assignment[n] for n in graph.inputs}
 
     solve_result: Optional[SolveResult] = None
     if plan is None:
@@ -862,10 +1034,12 @@ def compile(  # noqa: A001 - the paper-facing API name
             f"plan must be a SolveResult, LayoutPlan, mapping, or None; "
             f"got {type(plan).__name__}"
         )
-    return Executable(
+    exe = Executable(
         graph, mesh, layout, assignment,
         interpret=interpret, solve_result=solve_result,
     )
+    exe.fusion_report = fusion_report
+    return exe
 
 
 # ---------------------------------------------------------------------------
@@ -963,14 +1137,17 @@ def model_executable(
     schedule_cache: Optional[str] = None,
     beam: int = 4,
     dtype: Optional[str] = None,
+    fuse: bool = False,
 ) -> Executable:
     """The consumer-facing constructor: build the model-zoo graph for
     ``cfg`` at (batch, seq) and compile it. ``layers=None`` compiles the
     full depth (what training/serving needs); pass a small cap for
-    layout studies. A ``plan`` solved for a *different* graph shape
-    (other batch/seq/depth — e.g. a layout-study solve handed to a
-    serving engine) does not cover this graph: it is dropped with a
-    warning and the layout is re-solved."""
+    layout studies. ``fuse=True`` runs the graph-level fusion passes
+    before solving (docs/passes.md). A ``plan`` solved for a *different*
+    graph shape (other batch/seq/depth — e.g. a layout-study solve
+    handed to a serving engine) or a different fusion rewrite does not
+    cover this graph: it is dropped with a warning and the layout is
+    re-solved."""
     import warnings
 
     from repro.axe.graphs import model_graph
@@ -987,15 +1164,23 @@ def model_executable(
         dtype=dtype or cfg.dtype,
         layers=cfg.num_layers if layers is None else layers,
     )
-    if plan is not None and not plan_covers(gs, plan):
+    gs_run = gs
+    if fuse:
+        from repro.axe.passes import fuse_graph
+
+        # the rewrite is deterministic, so this fused view matches the
+        # one compile(fuse=True) produces — used only for the cover check
+        gs_run, _ = fuse_graph(gs)
+    if plan is not None and not plan_covers(gs_run, plan):
         warnings.warn(
             f"layout plan does not cover the {cfg.name} graph at "
-            f"batch={batch}, seq={seq} (different shape/depth/space): "
-            f"re-solving",
+            f"batch={batch}, seq={seq} (different shape/depth/space/"
+            f"fusion): re-solving",
             UserWarning, stacklevel=2,
         )
         plan = None
-    return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam)
+    return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam,
+                   fuse=fuse)
 
 
 def decode_inputs(graph: GraphSpec, cfg, params, cache) -> Dict[str, Any]:
@@ -1050,13 +1235,16 @@ def decode_executable(
     schedule_cache: Optional[str] = None,
     beam: int = 4,
     dtype: Optional[str] = None,
+    fuse: bool = False,
 ) -> Executable:
     """Build the single-token decode-step graph for ``cfg`` (cache
     tensors as first-class inputs/outputs) and compile it — the serving
-    twin of :func:`model_executable`. A ``plan`` solved for a different
-    graph (e.g. the prefill forward) does not cover the decode graph and
-    is dropped with a warning; pass a plan solved on a decode graph (or
-    None) to avoid the re-solve."""
+    twin of :func:`model_executable`. ``fuse=True`` runs the graph-level
+    fusion passes first (docs/passes.md; DCE provably preserves the
+    cache-out / side-output channels). A ``plan`` solved for a different
+    graph (e.g. the prefill forward, or an unfused rewrite) does not
+    cover the decode graph and is dropped with a warning; pass a plan
+    solved on a matching decode graph (or None) to avoid the re-solve."""
     import warnings
 
     from repro.axe.graphs import decode_graph
@@ -1073,15 +1261,21 @@ def decode_executable(
         dtype=dtype or cfg.dtype,
         layers=cfg.num_layers if layers is None else layers,
     )
-    if plan is not None and not plan_covers(gs, plan):
+    gs_run = gs
+    if fuse:
+        from repro.axe.passes import fuse_graph
+
+        gs_run, _ = fuse_graph(gs)
+    if plan is not None and not plan_covers(gs_run, plan):
         warnings.warn(
             f"layout plan does not cover the {cfg.name} decode graph at "
             f"batch={batch}, max_seq={max_seq} (different shape/depth/"
-            f"space): re-solving",
+            f"space/fusion): re-solving",
             UserWarning, stacklevel=2,
         )
         plan = None
-    return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam)
+    return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam,
+                   fuse=fuse)
 
 
 def compiled_loss_fn(exe: Executable, cfg) -> Callable:

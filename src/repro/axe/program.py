@@ -75,12 +75,31 @@ def get_program(name: str) -> "Program":
 
 
 @dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """A fused epilogue a GRID stage applies to its accumulated output
+    tile before the HBM writeback — the BLOCK-scope tail of a
+    ``repro.axe.passes`` epilogue fusion. ``body(tile, *extras)`` maps
+    the f32 accumulator tile plus per-tile slices of ``args`` (extra
+    operands, tiled like the output) to the final tile. ``tag`` is the
+    chain's identity and feeds the schedule key: a fused launch must
+    never share a compiled schedule (or jit cache slot) with the plain
+    one. ``full_rows=True`` declares the body reads whole rows (a norm
+    epilogue), so lowerings must keep the tile's last dim unsplit."""
+
+    tag: str
+    body: Callable
+    args: Tuple[Any, ...] = ()
+    full_rows: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class _CallOptions:
     """Per-invocation options threaded through the stage graph."""
 
     schedules: Tuple[Tuple[str, ScheduleLike], ...] = ()  # stage name → override
     arg_specs: Tuple[Any, ...] = ()                       # operand AxeSpecs
     interpret: bool = False
+    epilogue: Optional[Epilogue] = None
     # entry-stage-only overrides: (stage_name, schedule, blocks, impl)
     entry: Optional[Tuple[str, Optional[Any], Optional[Dict[str, int]], Optional[str]]] = None
 
@@ -157,6 +176,13 @@ class StageContext:
     @property
     def arg_specs(self) -> Tuple[Any, ...]:
         return self._opts.arg_specs
+
+    @property
+    def epilogue(self) -> Optional[Epilogue]:
+        """The fused epilogue of this invocation, if any — stages that
+        support in-kernel application consume it; others ignore it and
+        the caller applies the chain functionally on their result."""
+        return self._opts.epilogue
 
     # -- composition ----------------------------------------------------
     def run(self, stage_name: str, *args, **kw):
@@ -287,6 +313,7 @@ class Program:
         impl: Optional[str] = None,
         arg_specs: Sequence[Any] = (),
         interpret: Optional[bool] = None,
+        epilogue: Optional[Epilogue] = None,
         **kw,
     ):
         """Run the program on ``args``.
@@ -297,7 +324,9 @@ class Program:
         dispatched stage's schedule; ``schedules`` pins per stage by
         name; ``blocks`` overrides individual block sizes (forcing the
         kernel-ish variant, legacy ``block_*`` compatibility); ``impl``
-        restricts the dispatched stage to one variant.
+        restricts the dispatched stage to one variant. ``epilogue``
+        attaches a fused :class:`Epilogue` — its tag joins the schedule
+        key, so fused and plain launches tune and cache independently.
         """
         name = stage or self.dispatch_stage()
         if interpret is None:
@@ -306,6 +335,7 @@ class Program:
             schedules=tuple((schedules or {}).items()),
             arg_specs=tuple(arg_specs or ()),
             interpret=bool(interpret),
+            epilogue=epilogue,
             entry=(name, schedule, dict(blocks) if blocks else None, impl),
         )
         return self._run(name, args, kw, opts)
@@ -344,7 +374,12 @@ class Program:
 
         parts = st.schedule_key_parts(args, kw, opts.arg_specs)
         shapes, dtypes = parts["shapes"], parts["dtypes"]
-        layout_sig = tune.layout_signature(*opts.arg_specs, tag=parts.get("tag"))
+        tag = parts.get("tag")
+        if opts.epilogue is not None:
+            # a fused launch is a different kernel: its schedule entry
+            # must never collide with the plain op's
+            tag = f"{tag}+epi:{opts.epilogue.tag}" if tag else f"epi:{opts.epilogue.tag}"
+        layout_sig = tune.layout_signature(*opts.arg_specs, tag=tag)
 
         if blocks:
             # explicit block sizes force the kernel-ish variant (legacy

@@ -757,6 +757,104 @@ _RULES = {
 
 
 # ---------------------------------------------------------------------------
+# fused epilogues (repro.axe.passes rewrites)
+# ---------------------------------------------------------------------------
+
+#: op kinds that may run as a fused epilogue stage of a producing op —
+#: the pointwise / per-row / data-movement glue whose rules compose
+#: cleanly on the producer's output spec
+EPILOGUE_STEP_KINDS = ("norm", "elementwise", "reshape", "decode_select")
+
+
+def epilogue_steps(node: OpNode) -> Tuple[Tuple, ...]:
+    """The fused epilogue chain of ``node``: ``(kind, name, inputs, out,
+    attrs)`` step descriptors (empty for an unfused node). The fusion
+    pass stores them under ``attrs['epilogue']`` with the original node
+    and tensor names preserved, so plans and traces stay attributable."""
+    return tuple(node.attr("epilogue") or ())
+
+
+def epilogue_kinds(node: OpNode) -> Tuple[str, ...]:
+    return tuple(str(s[0]) for s in epilogue_steps(node))
+
+
+def step_node(step) -> OpNode:
+    """Materialize one epilogue step descriptor back into an OpNode."""
+    kind, name, ins, out, attrs = step
+    return OpNode(str(name), str(kind), tuple(ins), str(out), tuple(attrs))
+
+
+def compose_epilogue(node: OpNode, operands: Sequence[AxeSpec], env=None):
+    """Propagate a fused node: run the base rule on the leading
+    ``attrs['base_inputs']`` operands, then every epilogue step's own
+    rule on the evolving chain spec. Returns ``(out_spec, redists,
+    segments)`` where ``segments`` is ``((sub_node, out_spec), ...)``
+    (base first) — the decomposition ``axe.compile`` executes.
+
+    A redistribution whose operand is a chain intermediate (not one of
+    ``node.inputs``) is *internal*: it moves data between fused stages
+    (e.g. resolving the base matmul's pending K-partials before a
+    residual add) and is applied by the fused backend, never to a plan
+    input. Because every stage reuses the unfused op's rule, the fused
+    plan's specs and comm bytes are identical to the unfused graph's —
+    fusion only removes the HBM round trips between stages."""
+    steps = epilogue_steps(node)
+    n_base = int(node.attr("base_inputs") or len(node.inputs))
+    base_out = str(node.attr("base_out") or node.out)
+    specs: Dict[str, AxeSpec] = dict(env or {})
+    specs.update(zip(node.inputs, operands))
+    base = OpNode(node.name, node.kind, tuple(node.inputs[:n_base]),
+                  base_out, node.attrs)
+    rule = _RULES.get(node.kind)
+    if rule is None:
+        raise PropagationError(f"no propagation rule for op kind {node.kind!r}")
+    kw = {"env": specs} if getattr(rule, "_wants_env", False) else {}
+    out_spec, redists = rule(base, *operands[:n_base], **kw)
+    redists = list(redists)
+    specs[base_out] = out_spec
+    segments = [(base, out_spec)]
+    for step in steps:
+        sub = step_node(step)
+        if sub.kind not in EPILOGUE_STEP_KINDS:
+            raise PropagationError(
+                f"{node.name}: op kind {sub.kind!r} cannot run as a fused "
+                f"epilogue stage (allowed: {', '.join(EPILOGUE_STEP_KINDS)})"
+            )
+        try:
+            sub_ops = [specs[i] for i in sub.inputs]
+        except KeyError as e:
+            raise PropagationError(
+                f"{node.name}: epilogue step {sub.name!r} reads unknown tensor {e}"
+            ) from e
+        srule = _RULES[sub.kind]
+        skw = {"env": specs} if getattr(srule, "_wants_env", False) else {}
+        s_out, s_redists = srule(sub, *sub_ops, **skw)
+        for r in s_redists:
+            # later steps reading the same tensor see the moved layout
+            if r.dst.shape == r.src.shape:
+                specs[r.operand] = r.dst
+        redists.extend(s_redists)
+        specs[sub.out] = s_out
+        segments.append((sub, s_out))
+    return segments[-1][1], tuple(redists), tuple(segments)
+
+
+def apply_rule(node: OpNode, operands: Sequence[AxeSpec], env=None):
+    """Rule dispatch shared by :func:`propagate` and the layout solver:
+    plain nodes go straight to their ``_RULES`` entry; nodes carrying a
+    fused epilogue (``attrs['epilogue']``) compose the base rule with
+    each step's rule, so both passes see identical specs and comm."""
+    if node.attr("epilogue"):
+        out_spec, redists, _ = compose_epilogue(node, operands, env)
+        return out_spec, redists
+    rule = _RULES.get(node.kind)
+    if rule is None:
+        raise PropagationError(f"no propagation rule for op kind {node.kind!r}")
+    kw = {"env": env} if getattr(rule, "_wants_env", False) and env is not None else {}
+    return rule(node, *operands, **kw)
+
+
+# ---------------------------------------------------------------------------
 # the pass
 # ---------------------------------------------------------------------------
 
@@ -781,16 +879,12 @@ def propagate(
 
     entries: List[PlanEntry] = []
     for node in nodes:
-        rule = _RULES.get(node.kind)
-        if rule is None:
-            raise PropagationError(f"no propagation rule for op kind {node.kind!r}")
         try:
             operands = [env[i] for i in node.inputs]
         except KeyError as e:
             raise PropagationError(f"{node.name}: unknown input {e}") from e
-        kw = {"env": env} if getattr(rule, "_wants_env", False) else {}
         try:
-            out_spec, redists = rule(node, *operands, **kw)
+            out_spec, redists = apply_rule(node, operands, env)
         except SpecError as e:
             raise PropagationError(f"{node.name}: {e}") from e
         env[node.out] = out_spec

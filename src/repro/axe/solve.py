@@ -46,6 +46,8 @@ from repro.axe.propagate import (
     PlanEntry,
     PropagationError,
     _itemsize,
+    apply_rule,
+    epilogue_kinds,
     redistribute,
 )
 from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
@@ -138,12 +140,21 @@ def op_seconds(
     operands: Sequence[AxeSpec],
     out_spec: AxeSpec,
     backend: str = "tpu",
+    *,
+    epilogue: Tuple[str, ...] = (),
 ) -> float:
     """Roofline time (max of compute and memory terms) of one op's
-    per-device local problem under the given layouts."""
+    per-device local problem under the given layouts.
+
+    ``epilogue`` names the step kinds fused onto this op
+    (``repro.axe.passes`` epilogue fusion): their flops are added, their
+    extra operands' bytes are counted (they are already in
+    ``operands``), but *no* intermediate HBM round trips are charged —
+    the fused chain stays in VMEM/registers, which is exactly the win
+    the solver should see relative to the unfused graph."""
     locals_ = tuple(s.local_shape() for s in operands)
     out_local = out_spec.local_shape()
-    key = (kind, locals_, out_local, out_spec.dtype, backend)
+    key = (kind, locals_, out_local, out_spec.dtype, backend, tuple(epilogue))
     hit = _COST_CACHE.get(key)
     if hit is not None:
         return hit
@@ -178,6 +189,12 @@ def op_seconds(
     else:
         flops = _ELTWISE_FLOPS.get(kind, 1.0) * n_out
         mem = float((sum(nel) + n_out) * item)
+    if epilogue:
+        flops += sum(_ELTWISE_FLOPS.get(k, 1.0) for k in epilogue) * n_out
+        if kind == "matmul":
+            # the kind branch above only read the two base operands;
+            # the epilogue's extra operands still stream from HBM
+            mem += float(sum(nel[2:]) * item)
     secs, _terms = roofline.schedule_time(flops=flops, mem_bytes=mem, backend=backend)
     _COST_CACHE[key] = secs
     return secs
@@ -221,7 +238,10 @@ def evaluate_env(
             # tensor names are single-assignment, so plan.env holds each
             # operand's spec exactly as the op saw it
             operands = [plan.env[i] for i in e.op.inputs]
-            objective += op_seconds(e.op.kind, operands, e.out_spec, backend)
+            objective += op_seconds(
+                e.op.kind, operands, e.out_spec, backend,
+                epilogue=epilogue_kinds(e.op),
+            )
         objective += comm_seconds(e.comm_bytes)
     return plan, objective, plan.total_comm_bytes
 
@@ -370,8 +390,7 @@ def solve(
         acc |= set(graph.nodes[i].inputs)
 
     for ni, node in enumerate(graph.nodes):
-        rule = _RULES.get(node.kind)
-        if rule is None:
+        if node.kind not in _RULES:
             raise SolveError(f"no propagation rule for op kind {node.kind!r}")
         free = [i for i in node.inputs if i not in states[0].env]
         cand_lists: List[Tuple[AxeSpec, ...]] = []
@@ -395,15 +414,15 @@ def solve(
             for combo in itertools.product(*cand_lists) if free else ((),):
                 env = dict(st.env)
                 env.update(zip(free, combo))
-                kw = {"env": env} if getattr(rule, "_wants_env", False) else {}
                 try:
                     operands = [env[i] for i in node.inputs]
-                    out_spec, redists = rule(node, *operands, **kw)
+                    out_spec, redists = apply_rule(node, operands, env)
                 except (SpecError, PropagationError):
                     continue
                 explored += 1
                 comm = sum(r.comm_bytes for r in redists)
-                op_s = op_seconds(node.kind, operands, out_spec, backend)
+                op_s = op_seconds(node.kind, operands, out_spec, backend,
+                                  epilogue=epilogue_kinds(node))
                 step_s = op_s + comm_seconds(comm)
                 env[node.out] = out_spec
                 bindings = dict(st.bindings)

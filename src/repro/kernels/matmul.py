@@ -49,7 +49,9 @@ def _dot(ctx, a, b, *, out_dtype=None):
 
 
 @matmul_program.stage("mac", scope=Scope.BLOCK)
-def _mac(ctx, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+def _mac(ctx, a_ref, b_ref, *refs, k_steps: int, fused: bool = False):
+    *extra_refs, o_ref, acc_ref = refs
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -60,7 +62,12 @@ def _mac(ctx, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        tile = acc_ref[...]
+        if fused:
+            # the fused epilogue runs on the f32 accumulator tile while
+            # it is still in VMEM — the chain never round-trips HBM
+            tile = ctx.epilogue.body(tile, *[r[...] for r in extra_refs])
+        o_ref[...] = tile.astype(o_ref.dtype)
 
 
 @matmul_program.stage(
@@ -72,14 +79,30 @@ def _mac(ctx, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
 )
 def _tile(ctx, a, b, *, out_dtype=None):
     out_dtype = out_dtype or a.dtype
+    epi = ctx.epilogue
+
+    def finish(out):
+        """Functional epilogue application — the fallback whenever the
+        chain cannot run inside the Pallas launch (XLA variant, non-2D
+        operands, infeasible tile, extras not output-shaped)."""
+        if epi is None:
+            return out
+        return epi.body(out.astype(jnp.float32), *epi.args).astype(out_dtype)
+
     if a.ndim != 2 or b.ndim != 2:
-        return ctx.run("dot", a, b, out_dtype=out_dtype)
+        return finish(ctx.run("dot", a, b, out_dtype=out_dtype))
     if ctx.impl != "kernel":
-        return ctx.run("dot", a, b, out_dtype=out_dtype)
+        return finish(ctx.run("dot", a, b, out_dtype=out_dtype))
     m, k = a.shape
     _, n = b.shape
+    # the epilogue runs in-kernel only when every extra operand tiles
+    # exactly like C; anything else applies functionally on the result
+    inline = epi is not None and all(
+        tuple(x.shape) == (m, n) for x in epi.args
+    )
     bm = min(ctx.block("bm"), m)
-    bn = min(ctx.block("bn"), n)
+    # a whole-row epilogue (norm) must see complete output rows per tile
+    bn = n if (inline and epi.full_rows) else min(ctx.block("bn"), n)
     bk = min(ctx.block("bk"), k)
     try:
         # fail fast on infeasible output tiles (same precheck the legacy
@@ -88,10 +111,12 @@ def _tile(ctx, a, b, *, out_dtype=None):
     except TilingError:
         if ctx.pinned:
             raise  # caller pinned the kernel: the unified error path
-        return ctx.run("dot", a, b, out_dtype=out_dtype)
+        return finish(ctx.run("dot", a, b, out_dtype=out_dtype))
+
+    n_extras = len(epi.args) if inline else 0
 
     def make():
-        def launch(a, b):
+        def launch(a, b, *extras):
             m, k = a.shape
             _, n = b.shape
             a_low = block_lowering((m, k), (bm, bk), a.dtype,
@@ -103,25 +128,35 @@ def _tile(ctx, a, b, *, out_dtype=None):
             o_low = block_lowering((m, n), (bm, bn), out_dtype,
                                    index_map=lambda i, j, kk: (i, j),
                                    op="matmul.C")
+            e_lows = [
+                block_lowering((m, n), (bm, bn), x.dtype,
+                               index_map=lambda i, j, kk: (i, j),
+                               op="matmul.epilogue")
+                for x in extras
+            ]
             k_steps = a_low.grid[1]
             return ctx.pallas_call(
-                lambda *refs: ctx.run("mac", *refs, k_steps=k_steps),
+                lambda *refs: ctx.run(
+                    "mac", *refs, k_steps=k_steps, fused=bool(extras)
+                ),
                 grid=(a_low.grid[0], b_low.grid[1], k_steps),
-                in_specs=[a_low.spec, b_low.spec],
+                in_specs=[a_low.spec, b_low.spec] + [e.spec for e in e_lows],
                 out_specs=o_low.spec,
                 out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
                 scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
                 dimension_semantics=("parallel", "parallel", "arbitrary"),
-            )(a, b)
+            )(a, b, *extras)
 
         return launch
 
+    key = (bm, bn, bk, str(out_dtype), epi.tag if inline else None, n_extras)
     try:
-        return ctx.jit((bm, bn, bk, str(out_dtype)), make)(a, b)
+        out = ctx.jit(key, make)(a, b, *(tuple(epi.args) if inline else ()))
     except TilingError:
         if ctx.pinned:
             raise
-        return ctx.run("dot", a, b, out_dtype=out_dtype)
+        return finish(ctx.run("dot", a, b, out_dtype=out_dtype))
+    return out if inline else finish(out)
 
 
 def matmul_pallas(

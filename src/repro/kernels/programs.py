@@ -34,11 +34,13 @@ from repro.kernels.flash_attention import flash_decode_pallas as flash_decode
 from repro.kernels.matmul import matmul_program as matmul
 from repro.kernels.moe_gemm import moe_gemm_program as moe_gemm
 from repro.kernels.rmsnorm import rmsnorm_program as rmsnorm
+from repro.axe.program import Epilogue as Epilogue
 
 ALL_PROGRAMS = (matmul, flash_attention, moe_gemm, rmsnorm, collective_matmul)
 
 __all__ = [
     "ALL_PROGRAMS",
+    "Epilogue",
     "collective_matmul",
     "derive_axis_name",
     "flash_attention",

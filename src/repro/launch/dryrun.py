@@ -90,6 +90,8 @@ def solve_cell(
     beam: int = 4,
     verbose: bool = True,
     trace: bool = False,
+    fuse: bool = False,
+    fusion_trace: bool = False,
 ):
     """Solve the whole-model layout for one cell — deviceless, like
     ``--layout-plan``, but the compiler *chooses* the placements: beam
@@ -113,6 +115,17 @@ def solve_cell(
     }
     try:
         gs = model_graph(cfg, shape.batch, shape.seq, space, layers=layers)
+        if fuse:
+            from repro.axe.passes import fuse_graph
+            from repro.axe.propagate import propagate
+
+            if fusion_trace:
+                # comm bytes of the rule-seeded plan before the rewrite
+                # — the --fusion-trace before/after-solve comparison
+                pre = propagate(gs.nodes, gs.seeded_env(), space=space)
+                record["unfused_seeded_comm_bytes"] = pre.total_comm_bytes
+            gs, rep = fuse_graph(gs)
+            record["fusion"] = rep.to_dict()
         res = solve(gs, beam=beam, backend="tpu")
     except Exception as e:  # record an error row; never abort a sweep
         record.update(status="error", error=f"{type(e).__name__}: {e}")
@@ -120,6 +133,8 @@ def solve_cell(
             record["traceback"] = traceback.format_exc()[-2000:]
         return record
     record["solve"] = res.to_dict()
+    if fuse and verbose and fusion_trace:
+        print(rep.describe())
     # the tune-planner schedule each solved op dispatches to, keyed on
     # the solved specs' canonical layout signature
     schedules = {}
@@ -150,6 +165,8 @@ def execute_cell(
     seq: int = 32,
     beam: int = 4,
     verbose: bool = True,
+    fuse: bool = False,
+    fusion_trace: bool = False,
 ):
     """Compile the solved plan with ``axe.compile`` and *run* it on
     this host's devices (smoke-reduced config): checks the numerics
@@ -197,6 +214,17 @@ def execute_cell(
     try:
         graph = model_graph(cfg, batch, seq, space,
                             dtype=cfg.dtype, layers=cfg.num_layers)
+        if fuse:
+            from repro.axe.passes import fuse_graph
+            from repro.axe.propagate import propagate
+
+            if fusion_trace:
+                pre = propagate(graph.nodes, graph.seeded_env(), space=space)
+                record["unfused_seeded_comm_bytes"] = pre.total_comm_bytes
+            graph, rep = fuse_graph(graph)
+            record["fusion"] = rep.to_dict()
+            if verbose and fusion_trace:
+                print(rep.describe())
         res = solve(graph, beam=beam, backend="tpu")
         exe = axe_compile(graph, mesh, plan=res)
 
@@ -244,13 +272,15 @@ def execute_cell(
             )
         record.update(
             status="ok",
+            fused=fuse,
             collectives=len(planned),
             comm_bytes=exe.plan.total_comm_bytes,
             solved_comm_bytes=res.comm_bytes,
             seeded_comm_bytes=res.seeded_comm_bytes,
         )
         if verbose:
-            print(f"EXEC {arch} mesh={space.signature()} "
+            tagf = " fused" if fuse else ""
+            print(f"EXEC {arch}{tagf} mesh={space.signature()} "
                   f"max|Δ|={record['max_abs_diff']:.2e} "
                   f"collectives={len(planned)} (issued == planned == decisions) "
                   f"comm={exe.plan.total_comm_bytes / 2**10:.1f} KiB/dev OK")
@@ -456,10 +486,23 @@ def main():
                          "(smoke-reduced config)")
     ap.add_argument("--exec-batch", type=int, default=4)
     ap.add_argument("--exec-seq", type=int, default=32)
+    ap.add_argument("--fuse", dest="fuse", action="store_true", default=False,
+                    help="with --solve/--execute: rewrite the graph through "
+                         "the fusion passes (repro.axe.passes) before "
+                         "solving — epilogue chains run fused")
+    ap.add_argument("--no-fuse", dest="fuse", action="store_false",
+                    help="disable the fusion passes (the default; the "
+                         "explicit flag pins a sweep row)")
+    ap.add_argument("--fusion-trace", action="store_true",
+                    help="with --fuse: print/record which patterns fired, "
+                         "the intermediates eliminated, and comm bytes "
+                         "before/after the rewrite (implies --fuse)")
     ap.add_argument("--layers", type=int, default=2,
                     help="decoder depth of the solved model graph")
     ap.add_argument("--beam", type=int, default=4, help="layout solver beam width")
     args = ap.parse_args()
+    if args.fusion_trace:
+        args.fuse = True
 
     cells = []
     if args.execute:
@@ -487,6 +530,7 @@ def main():
         if args.execute:
             rec = execute_cell(
                 arch, batch=args.exec_batch, seq=args.exec_seq, beam=args.beam,
+                fuse=args.fuse, fusion_trace=args.fusion_trace,
             )
             line = json.dumps(rec)
             if rec["status"] == "error":
@@ -502,6 +546,7 @@ def main():
                 layers=args.layers, beam=args.beam,
                 verbose=args.solve and not args.solve_compare,
                 trace=args.solve_trace,
+                fuse=args.fuse, fusion_trace=args.fusion_trace,
             )
             line = json.dumps(rec)
             if rec["status"] != "ok":

@@ -44,6 +44,10 @@ def main():
                          "forward pass through the compiled executable "
                          "(axe.compile) instead of the module wiring")
     ap.add_argument("--solve-beam", type=int, default=4)
+    ap.add_argument("--fuse", action="store_true",
+                    help="with --solve: rewrite the graph through the "
+                         "fusion passes (repro.axe.passes) before "
+                         "solving — epilogue chains run fused")
     ap.add_argument("--no-compiled-forward", action="store_true",
                     help="with --solve: keep the legacy module-wired "
                          "forward and only consume the solved param "
@@ -91,6 +95,12 @@ def main():
             cfg, mb_batch, args.seq, space,
             dtype=cfg.dtype, layers=cfg.num_layers if compiled else 2,
         )
+        if args.fuse:
+            from repro.axe.passes import fuse_graph
+
+            gs, rep = fuse_graph(gs)
+            print(f"fusion: {len(rep.patterns_fired)} patterns fired, "
+                  f"{len(rep.eliminated)} intermediates eliminated")
         res = solve(gs, beam=args.solve_beam, backend="tpu")
         plan = axe_rules.from_plan(res)
         print(f"layout solver: comm {res.seeded_comm_bytes / 2**20:.1f} -> "

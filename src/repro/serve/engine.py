@@ -3,7 +3,9 @@ tracking (continuous-batching-lite) and greedy/temperature sampling.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Mapping, Optional, Union  # noqa: F401
 
 import jax
@@ -46,7 +48,9 @@ class ServeEngine:
     compiled decode-step executable (:meth:`compiled_decode` — the
     KV/SSM caches are first-class graph tensors, docs/serving.md) by
     default; ``decode_mode="legacy"`` keeps the cache-carrying model
-    API path for parity checks."""
+    API path for parity checks. ``fuse=True`` runs the graph-level
+    fusion passes (docs/passes.md) on both graphs before solving, so
+    norm/elementwise/rope glue executes inside the adjacent kernels."""
 
     api: Any                 # ModelAPI
     batch_size: int
@@ -58,6 +62,7 @@ class ServeEngine:
     mesh: Optional[Any] = None       # jax.sharding.Mesh
     layout_plan: Optional[Any] = None  # SolveResult | LayoutPlan | {name: AxeSpec}
     decode_mode: str = "compiled"      # "compiled" | "legacy"
+    fuse: bool = False                 # graph-level fusion passes (docs/passes.md)
 
     def __post_init__(self):
         from repro import tune
@@ -66,8 +71,31 @@ class ServeEngine:
             tune.use_cache(self.schedule_cache)
         self.params = None
         self._compiled: Dict[tuple, Any] = {}
+        self._warned: set = set()
         self._decode = self._scheduled(jax.jit(self.api.decode_step))
         self._prefill = self._scheduled(jax.jit(self.api.prefill))
+
+    @contextlib.contextmanager
+    def _dedup_warnings(self):
+        """Re-emit each distinct placement/plan warning once per engine.
+
+        Executable construction and cache/param placement surface
+        structured warnings (``PlanDivisibilityWarning``,
+        ``CachePlanFallbackWarning``, the plan-does-not-cover re-solve
+        notice). A serving engine hits those paths repeatedly — every
+        ``generate()`` places a fresh cache, and a FIFO-evicted
+        (batch, seq) recompiles from scratch — so without engine-level
+        dedup the same warning fires once per request."""
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            yield
+        for w in caught:
+            key = (w.category.__name__, str(w.message))
+            if key not in self._warned:
+                self._warned.add(key)
+                warnings.warn_explicit(
+                    w.message, w.category, w.filename, w.lineno
+                )
 
     def _space(self):
         from repro.axe.spec import PhysicalSpace
@@ -79,20 +107,22 @@ class ServeEngine:
     def _place_params(self, params):
         from repro.axe import rules as axe_rules
 
-        plan = (
-            axe_rules.from_plan(self.layout_plan)
-            if self.layout_plan is not None else None
-        )
-        specs = axe_rules.param_specs(params, self._space(), plan=plan)
+        with self._dedup_warnings():
+            plan = (
+                axe_rules.from_plan(self.layout_plan)
+                if self.layout_plan is not None else None
+            )
+            specs = axe_rules.param_specs(params, self._space(), plan=plan)
         shardings = axe_rules.sharding_tree(specs, self.mesh)
         return jax.device_put(params, shardings)
 
     def _place_cache(self, cache):
         from repro.axe import rules as axe_rules
 
-        specs = axe_rules.cache_specs(
-            cache, self._space(), plan=self.layout_plan
-        )
+        with self._dedup_warnings():
+            specs = axe_rules.cache_specs(
+                cache, self._space(), plan=self.layout_plan
+            )
         shardings = axe_rules.sharding_tree(specs, self.mesh)
         return jax.device_put(cache, shardings)
 
@@ -131,11 +161,12 @@ class ServeEngine:
         key = (batch or self.batch_size, seq, layers)
         exe = self._compiled.get(key)
         if exe is None:
-            exe = model_executable(
-                self.api.cfg, self.mesh, batch or self.batch_size, seq,
-                plan=self.layout_plan, layers=layers,
-                dtype=str(self.api.cfg.dtype),
-            )
+            with self._dedup_warnings():
+                exe = model_executable(
+                    self.api.cfg, self.mesh, batch or self.batch_size, seq,
+                    plan=self.layout_plan, layers=layers,
+                    dtype=str(self.api.cfg.dtype), fuse=self.fuse,
+                )
             while len(self._compiled) >= self.MAX_COMPILED:
                 self._compiled.pop(next(iter(self._compiled)))
             self._compiled[key] = exe
@@ -161,12 +192,13 @@ class ServeEngine:
             plan = self.layout_plan
             if plan is not None and not axe_rules._plan_cache_env(plan):
                 plan = None
-            exe = decode_executable(
-                self.api.cfg, self.mesh, batch or self.batch_size,
-                self.max_seq, plan=plan, layers=layers,
-                schedule_cache=self.schedule_cache,
-                dtype=str(self.api.cfg.dtype),
-            )
+            with self._dedup_warnings():
+                exe = decode_executable(
+                    self.api.cfg, self.mesh, batch or self.batch_size,
+                    self.max_seq, plan=plan, layers=layers,
+                    schedule_cache=self.schedule_cache,
+                    dtype=str(self.api.cfg.dtype), fuse=self.fuse,
+                )
             while len(self._compiled) >= self.MAX_COMPILED:
                 self._compiled.pop(next(iter(self._compiled)))
             self._compiled[key] = exe
