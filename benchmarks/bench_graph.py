@@ -63,6 +63,61 @@ def _interleaved(execs, tokens, *, warmup: int = 3, rounds: int = 25):
     return [min(ts) * 1e6 for ts in samples]
 
 
+def run_offload(batch: int, seq: int) -> list:
+    """One host-offload row: the dense config compiled with its
+    embedding table parked on a carved host-class mesh axis
+    (``model_executable(classes=..., offload=...)``), interleaved
+    against the same graph all-accelerator on the same 3-axis mesh.
+    Checks bit-level parity before timing — the Transfer collective
+    lowers to the same SPMD primitives, only the cost model differs."""
+    import numpy as np
+
+    from repro import axe, compat
+    from repro.configs import get_config, smoke_variant
+    from repro.models.model_zoo import build_model
+
+    n_dev = len(jax.devices())
+    host_deg = 2 if n_dev % 2 == 0 else 1
+    rest = n_dev // host_deg
+    model_deg = 2 if rest % 2 == 0 else rest
+    mesh = compat.make_mesh(
+        (rest // model_deg, model_deg, host_deg), ("data", "model", "host")
+    )
+
+    arch = "qwen3-4b"
+    cfg = smoke_variant(get_config(arch))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (batch * seq,), 0, cfg.vocab_size, jnp.int32
+    )
+    exe_a = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype,
+                                 classes={"host": "host"})
+    exe_h = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype,
+                                 classes={"host": "host"}, offload=("embed",))
+    ins_a = axe.model_inputs(exe_a.graph, cfg, params)
+    ins_h = axe.model_inputs(exe_h.graph, cfg, params)
+    out_a = np.asarray(jax.block_until_ready(exe_a(ins_a, tokens)))
+    out_h = np.asarray(jax.block_until_ready(exe_h(ins_h, tokens)))
+    err = float(np.max(np.abs(out_a - out_h)))
+    if err > 1e-5:
+        raise RuntimeError(f"host-parked forward deviates by {err:.2e}")
+    transfers = sum(
+        1 for (_op, _operand, steps) in exe_h.collective_sequence()
+        if "Transfer" in steps
+    )
+    us_a, us_h = _interleaved([(exe_a, ins_a), (exe_h, ins_h)], tokens)
+    tok_h = batch * seq / (us_h / 1e6)
+    tok_a = batch * seq / (us_a / 1e6)
+    return [row(
+        f"graph.forward.{arch}.offload", us_h,
+        f"compiled forward {batch}x{seq} embed host-parked "
+        f"tokens/s={tok_h:.0f} (all-accel {tok_a:.0f}) "
+        f"transfers={transfers} xfer={exe_h.plan.total_transfer_bytes}B/dev "
+        f"max|d|={err:.1e}",
+    )]
+
+
 def run(batch: int, seq: int, *, fuse: bool = True) -> list:
     from repro import axe, compat
     from repro.configs import get_config, smoke_variant
@@ -123,8 +178,14 @@ def main() -> int:
                     help="measure only the unfused executables (A/B "
                          "debugging; overwrites the section — don't "
                          "commit as the baseline)")
+    ap.add_argument("--offload", action="store_true",
+                    help="also measure the dense config with its "
+                         "embedding table host-parked (repro.axe.hetero) "
+                         "against the all-accelerator twin")
     args = ap.parse_args()
     rows = run(args.batch, args.seq, fuse=not args.no_fuse)
+    if args.offload:
+        rows += run_offload(args.batch, args.seq)
     path = write_bench_json(
         "graph", rows, filename=BENCH_GRAPH_JSON,
     )

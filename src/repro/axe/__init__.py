@@ -61,6 +61,15 @@ from repro.axe.graphs import (
     decoder_layer_graph,
     model_graph,
 )
+from repro.axe.hetero import (
+    ClassTable,
+    DeviceClass,
+    HeteroError,
+    class_table,
+    default_class_table,
+    parse_classes,
+    use_class_table,
+)
 from repro.axe.solve import (
     Decision,
     SolveError,
@@ -100,14 +109,17 @@ from repro.axe.compile import (
 __all__ = [
     "AxeSpec",
     "BlockLowering",
+    "ClassTable",
     "CompileError",
     "DeadCodeElimination",
     "Decision",
+    "DeviceClass",
     "Epilogue",
     "EpilogueFusion",
     "Executable",
     "FusionReport",
     "GraphSpec",
+    "HeteroError",
     "LoweredOp",
     "LayoutPlan",
     "OpNode",
@@ -133,8 +145,10 @@ __all__ = [
     "TensorMeta",
     "block_lowering",
     "cache_window",
+    "class_table",
     "compile",
     "compiled_loss_fn",
+    "default_class_table",
     "decode_cache",
     "decode_executable",
     "decode_graph",
@@ -149,10 +163,12 @@ __all__ = [
     "model_graph",
     "model_inputs",
     "op_backend",
+    "parse_classes",
     "plan_covers",
     "program",
     "register_op_backend",
     "solve",
+    "use_class_table",
     "from_pspec",
     "from_sharding",
     "layout_of_pspec",

@@ -1138,6 +1138,8 @@ def model_executable(
     beam: int = 4,
     dtype: Optional[str] = None,
     fuse: bool = False,
+    classes=None,
+    offload: Sequence[str] = (),
 ) -> Executable:
     """The consumer-facing constructor: build the model-zoo graph for
     ``cfg`` at (batch, seq) and compile it. ``layers=None`` compiles the
@@ -1147,7 +1149,13 @@ def model_executable(
     graph shape (other batch/seq/depth — e.g. a layout-study solve
     handed to a serving engine) or a different fusion rewrite does not
     cover this graph: it is dropped with a warning and the layout is
-    re-solved."""
+    re-solved.
+
+    ``classes`` annotates mesh axes with device classes
+    (``{"host": "host"}`` — repro.axe.hetero) and ``offload`` names
+    graph inputs the solver must park on the non-default class; the
+    executable then carries the class-crossing Transfer collectives in
+    its plan (docs/heterogeneous.md)."""
     import warnings
 
     from repro.axe.graphs import model_graph
@@ -1155,7 +1163,8 @@ def model_executable(
 
     if mesh is not None:
         space = PhysicalSpace.from_mesh_shape(
-            dict(zip(mesh.axis_names, mesh.devices.shape))
+            dict(zip(mesh.axis_names, mesh.devices.shape)),
+            classes=dict(classes) if classes else (),
         )
     else:
         space = PhysicalSpace(())
@@ -1179,6 +1188,13 @@ def model_executable(
             UserWarning, stacklevel=2,
         )
         plan = None
+    if plan is None and offload:
+        # solve on the pre-rewrite graph (see compile's docstring) with
+        # the offload targets pinned to parked placements; no seeded
+        # budget — the rules never park
+        res = solve(gs, beam=beam, compare_seeded=False, offload=offload)
+        plan = ({n: res.assignment[n] for n in gs_run.inputs}
+                if fuse else res)
     return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam,
                    fuse=fuse)
 

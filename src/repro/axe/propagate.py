@@ -61,10 +61,12 @@ class Redistribution:
     dst: AxeSpec
     steps: Tuple[object, ...]
     comm_bytes: int
+    transfer_bytes: int = 0       # class-crossing bytes (Transfer steps only)
 
     def describe(self) -> str:
         steps = ", ".join(type(s).__name__ + repr(dataclasses.astuple(s)) for s in self.steps)
-        return f"{self.operand}: [{steps}] ({self.comm_bytes} B/device)"
+        xfer = f", {self.transfer_bytes} transfer B/device" if self.transfer_bytes else ""
+        return f"{self.operand}: [{steps}] ({self.comm_bytes} B/device{xfer})"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +78,10 @@ class PlanEntry:
     @property
     def comm_bytes(self) -> int:
         return sum(r.comm_bytes for r in self.redistributions)
+
+    @property
+    def transfer_bytes(self) -> int:
+        return sum(r.transfer_bytes for r in self.redistributions)
 
     def input_specs(self, env: Mapping[str, AxeSpec]) -> Tuple[AxeSpec, ...]:
         """The operand specs as the op actually sees them: the plan
@@ -103,11 +109,13 @@ class PlanEntry:
                     "operand": r.operand,
                     "collectives": [type(s).__name__ for s in r.steps],
                     "comm_bytes": r.comm_bytes,
+                    "transfer_bytes": r.transfer_bytes,
                 }
                 for r in self.redistributions
                 if r.steps
             ],
             "comm_bytes": self.comm_bytes,
+            "transfer_bytes": self.transfer_bytes,
         }
 
 
@@ -122,6 +130,10 @@ class LayoutPlan:
     @property
     def total_comm_bytes(self) -> int:
         return sum(e.comm_bytes for e in self.entries)
+
+    @property
+    def total_transfer_bytes(self) -> int:
+        return sum(e.transfer_bytes for e in self.entries)
 
     def spec(self, name: str) -> AxeSpec:
         return self.env[name]
@@ -166,8 +178,16 @@ def redistribute(src: AxeSpec, dst: AxeSpec, operand: str = "x") -> Redistributi
     steps = coll.infer_redistribution(
         src.to_dtensor(), dst.to_dtensor(), mesh_shape, partial_axes=src.partial
     )
+    t_bytes = 0
+    if src.space.has_classes:
+        from repro.axe import hetero
+
+        steps = hetero.classify_steps(steps, src.space)
+        t_bytes = coll.plan_transfer_bytes(
+            steps, src.to_dtensor(), mesh_shape, _itemsize(src.dtype)
+        )
     bytes_ = coll.plan_comm_bytes(steps, src.to_dtensor(), mesh_shape, _itemsize(src.dtype))
-    return Redistribution(operand, src, dst, tuple(steps), bytes_)
+    return Redistribution(operand, src, dst, tuple(steps), bytes_, t_bytes)
 
 
 def _filter_axes(axes: Sequence[str], taken: set) -> Tuple[str, ...]:
@@ -392,7 +412,8 @@ def rule_reshape(node: OpNode, x: AxeSpec):
         # dropped axes gather before the reshape; partials stay pending
         # (a reshape is value-preserving), so plan on partial-free specs
         r = redistribute(x.with_partial(()), want.with_partial(()), node.inputs[0])
-        redists.append(Redistribution(node.inputs[0], x, want, r.steps, r.comm_bytes))
+        redists.append(Redistribution(
+            node.inputs[0], x, want, r.steps, r.comm_bytes, r.transfer_bytes))
     out = AxeSpec.sharded(new_shape, x.space, out_pl, x.dtype, partial=x.partial)
     return out, tuple(redists)
 
@@ -798,6 +819,7 @@ def compose_epilogue(node: OpNode, operands: Sequence[AxeSpec], env=None):
     input. Because every stage reuses the unfused op's rule, the fused
     plan's specs and comm bytes are identical to the unfused graph's —
     fusion only removes the HBM round trips between stages."""
+    operands, pre = _class_align(node, operands)
     steps = epilogue_steps(node)
     n_base = int(node.attr("base_inputs") or len(node.inputs))
     base_out = str(node.attr("base_out") or node.out)
@@ -810,7 +832,7 @@ def compose_epilogue(node: OpNode, operands: Sequence[AxeSpec], env=None):
         raise PropagationError(f"no propagation rule for op kind {node.kind!r}")
     kw = {"env": specs} if getattr(rule, "_wants_env", False) else {}
     out_spec, redists = rule(base, *operands[:n_base], **kw)
-    redists = list(redists)
+    redists = list(pre) + list(redists)
     specs[base_out] = out_spec
     segments = [(base, out_spec)]
     for step in steps:
@@ -839,19 +861,53 @@ def compose_epilogue(node: OpNode, operands: Sequence[AxeSpec], env=None):
     return segments[-1][1], tuple(redists), tuple(segments)
 
 
+def _class_align(node: OpNode, operands: Sequence[AxeSpec]):
+    """Class-align pre-pass (repro.axe.hetero): any operand parked on a
+    non-default device class gets an explicit Transfer redistribution to
+    its declassed twin *before* the compute rule runs.  Every rule
+    therefore sees accelerator-clean specs — the structural guarantee
+    that no compute op is ever placed on a no-flops class.  Planning
+    happens on partial-free twins so a pending reduction is never
+    resolved here (it stays for the rule to handle)."""
+    if not any(s.space.has_classes for s in operands):
+        return list(operands), []
+    from repro.axe import hetero
+
+    pre: List[Redistribution] = []
+    aligned: List[AxeSpec] = []
+    done: Dict[str, AxeSpec] = {}
+    for name, spec in zip(node.inputs, operands):
+        if name in done:
+            aligned.append(done[name])
+            continue
+        if hetero.is_parked(spec):
+            dst = hetero.declassed(spec)
+            r = redistribute(spec.with_partial(()), dst.with_partial(()), name)
+            pre.append(Redistribution(
+                name, spec, dst, r.steps, r.comm_bytes, r.transfer_bytes))
+            spec = dst
+            done[name] = spec
+        aligned.append(spec)
+    return aligned, pre
+
+
 def apply_rule(node: OpNode, operands: Sequence[AxeSpec], env=None):
     """Rule dispatch shared by :func:`propagate` and the layout solver:
     plain nodes go straight to their ``_RULES`` entry; nodes carrying a
     fused epilogue (``attrs['epilogue']``) compose the base rule with
-    each step's rule, so both passes see identical specs and comm."""
+    each step's rule, so both passes see identical specs and comm.
+    Operands parked on a non-default device class are first transferred
+    to the accelerator class (:func:`_class_align`)."""
     if node.attr("epilogue"):
         out_spec, redists, _ = compose_epilogue(node, operands, env)
         return out_spec, redists
+    operands, pre = _class_align(node, operands)
     rule = _RULES.get(node.kind)
     if rule is None:
         raise PropagationError(f"no propagation rule for op kind {node.kind!r}")
     kw = {"env": env} if getattr(rule, "_wants_env", False) and env is not None else {}
-    return rule(node, *operands, **kw)
+    out_spec, redists = rule(node, *operands, **kw)
+    return out_spec, tuple(pre) + tuple(redists)
 
 
 # ---------------------------------------------------------------------------

@@ -262,13 +262,52 @@ def zero1_extend(spec: AxeSpec) -> AxeSpec:
     return spec
 
 
-def opt_specs(p_specs: Any, *, zero1: bool = True) -> Any:
+def offload_extend(spec: AxeSpec, *, axes: Sequence[str] = ("host",)) -> AxeSpec:
+    """Park a spec on a non-default device class (repro.axe.hetero):
+    shard the first admissible replicated dim over the class axes so the
+    accelerator tier holds ``1/host_degree`` of it and the class tier
+    the rest. The compiled step un-parks it with a Transfer gather —
+    this is how ``train --offload-opt`` moves optimizer moments off the
+    accelerator's HBM budget.
+
+    A degree-1 class axis cannot park (the canonical layout drops no-op
+    shards), so a degenerate host tier leaves specs unchanged — offload
+    degrades to a no-op on a single device instead of erroring."""
+    mesh_shape = spec.space.mesh_shape
+    avail = [a for a in axes if a in mesh_shape and mesh_shape[a] > 1]
+    if not avail:
+        return spec
+    total = math.prod(mesh_shape[a] for a in avail)
+    placement = list(spec.placement())
+    order = sorted(range(len(spec.shape)), key=lambda i: -spec.shape[i])
+    for i in order:
+        e, s = placement[i], spec.shape[i]
+        if not e and s % total == 0 and s >= total:
+            cand = placement.copy()
+            cand[i] = tuple(avail)
+            try:
+                return spec.with_placement({j: a for j, a in enumerate(cand) if a})
+            except SpecError:
+                continue
+    return spec
+
+
+def opt_specs(
+    p_specs: Any, *, zero1: bool = True, offload_axes: Sequence[str] = ()
+) -> Any:
     import jax
 
-    if not zero1:
+    def extend(spec):
+        if zero1:
+            spec = zero1_extend(spec)
+        if offload_axes:
+            spec = offload_extend(spec, axes=tuple(offload_axes))
+        return spec
+
+    if not zero1 and not offload_axes:
         return p_specs
     return jax.tree.map(
-        zero1_extend, p_specs, is_leaf=lambda x: isinstance(x, AxeSpec)
+        extend, p_specs, is_leaf=lambda x: isinstance(x, AxeSpec)
     )
 
 
@@ -368,16 +407,19 @@ def cache_specs(cache: Any, space: PhysicalSpace, *, plan: Any = None) -> Any:
         if name is None:
             return None
         spec = solved.get(name)
-        if spec is None or spec.space != space:
+        if spec is None or spec.space.mesh != space.mesh:
             key = ("cache", ps, name)
             if key not in _DIV_WARNED:
                 _DIV_WARNED.add(key)
                 warnings.warn(CachePlanFallbackWarning(ps, name), stacklevel=4)
             return None
+        # class annotations ride along: rebuild over the solved space so
+        # a host-parked cache tensor stays parked (repro.axe.hetero)
+        leaf_space = spec.space if spec.space.has_classes else space
         lead = len(shape) - len(spec.shape)
         if lead < 0:
             return None
-        mesh_shape = space.mesh_shape
+        mesh_shape = leaf_space.mesh_shape
         placement: Dict[int, Tuple[str, ...]] = {}
         for gdim, axes in enumerate(spec.placement()):
             if not axes:
@@ -398,7 +440,7 @@ def cache_specs(cache: Any, space: PhysicalSpace, *, plan: Any = None) -> Any:
                         stacklevel=4,
                     )
         try:
-            return AxeSpec.sharded(tuple(shape), space, placement, dtype)
+            return AxeSpec.sharded(tuple(shape), leaf_space, placement, dtype)
         except SpecError:
             return None
 
@@ -589,8 +631,14 @@ class PlanRules:
             return None
         base, param_rank, dim_map = entry
         solved = self.specs[base]
-        if solved.space != space:
+        if solved.space.mesh != space.mesh:
             return None
+        # only class annotations may differ: rebuild over the solved
+        # (class-carrying) space so a host-parked placement survives
+        # onto the leaf instead of silently lowering as accelerator-
+        # resident (repro.axe.hetero)
+        if solved.space.has_classes:
+            space = solved.space
         try:
             solved_pl = solved.placement()
         except SpecError:

@@ -51,6 +51,7 @@ from repro.axe.propagate import (
     redistribute,
 )
 from repro.axe.spec import AxeSpec, PhysicalSpace, SpecError
+from repro.axe import hetero
 
 
 class SolveError(ValueError):
@@ -79,7 +80,7 @@ def enumerate_specs(
     placements instead of a preference list. Deterministic order:
     fewer-axes placements first (replication is always candidate 0)."""
     shape = tuple(int(s) for s in shape)
-    key = (shape, space.mesh, str(dtype), max_candidates)
+    key = (shape, space.mesh, space.classes, str(dtype), max_candidates)
     hit = _ENUM_CACHE.get(key)
     if hit is not None:
         return hit
@@ -126,13 +127,21 @@ _COST_CACHE: Dict[Tuple, float] = {}
 
 
 def _ici_bw() -> float:
-    from repro.launch import mesh as meshmod
-
-    return meshmod.ICI_BW_PER_LINK * meshmod.ICI_LINKS
+    # the active default class' link (repro.axe.hetero) — equal to the
+    # hardcoded v5e ICI under the default table, so homogeneous solves
+    # are bit-identical to the pre-hetero cost model
+    return hetero.default_link_bw()
 
 
 def comm_seconds(comm_bytes: int) -> float:
     return comm_bytes / _ici_bw()
+
+
+def transfer_seconds(transfer_bytes: int, space: PhysicalSpace) -> float:
+    """Class-crossing bytes priced at the slower class link
+    (repro.axe.hetero) — the term that makes parking a tensor on the
+    host tier cheap or expensive depending on the active ClassTable."""
+    return hetero.transfer_seconds(transfer_bytes, space)
 
 
 def op_seconds(
@@ -154,7 +163,8 @@ def op_seconds(
     the solver should see relative to the unfused graph."""
     locals_ = tuple(s.local_shape() for s in operands)
     out_local = out_spec.local_shape()
-    key = (kind, locals_, out_local, out_spec.dtype, backend, tuple(epilogue))
+    key = (kind, locals_, out_local, out_spec.dtype, backend, tuple(epilogue),
+           hetero.class_table().token)
     hit = _COST_CACHE.get(key)
     if hit is not None:
         return hit
@@ -243,6 +253,7 @@ def evaluate_env(
                 epilogue=epilogue_kinds(e.op),
             )
         objective += comm_seconds(e.comm_bytes)
+        objective += transfer_seconds(e.transfer_bytes, plan.space)
     return plan, objective, plan.total_comm_bytes
 
 
@@ -262,13 +273,15 @@ class Decision:
     comm_bytes: int
     op_time_s: float
     cumulative_s: float
+    transfer_bytes: int = 0
 
     def describe(self) -> str:
         parts = [f"{self.op} [{self.kind}]"]
         for tensor, chosen, n in self.bound:
             parts.append(f"  bind {tensor} := {chosen}  ({n} candidates)")
+        xfer = f" xfer={self.transfer_bytes} B/dev" if self.transfer_bytes else ""
         parts.append(
-            f"  -> {self.out_spec}  comm={self.comm_bytes} B/dev "
+            f"  -> {self.out_spec}  comm={self.comm_bytes} B/dev{xfer} "
             f"op={self.op_time_s * 1e6:.1f} us  J={self.cumulative_s * 1e3:.3f} ms"
         )
         return "\n".join(parts)
@@ -281,6 +294,7 @@ class Decision:
             ],
             "out_spec": self.out_spec,
             "comm_bytes": self.comm_bytes,
+            "transfer_bytes": self.transfer_bytes,
             "op_time_s": self.op_time_s,
             "cumulative_s": self.cumulative_s,
         }
@@ -300,6 +314,7 @@ class SolveResult:
     seeded_comm_bytes: Optional[int] = None
     explored: int = 0
     beam: int = 0
+    transfer_bytes: int = 0
 
     @property
     def comm_improvement(self) -> Optional[float]:
@@ -314,7 +329,9 @@ class SolveResult:
         lines = [
             f"solved layout over {self.plan.space.signature()}: "
             f"comm={self.comm_bytes / 2**20:.1f} MiB/dev  "
-            f"J={self.objective_s * 1e3:.3f} ms  "
+            + (f"xfer={self.transfer_bytes / 2**20:.1f} MiB/dev  "
+               if self.transfer_bytes else "")
+            + f"J={self.objective_s * 1e3:.3f} ms  "
             f"(beam={self.beam}, {self.explored} states explored)"
         ]
         if self.seeded_comm_bytes is not None:
@@ -335,6 +352,7 @@ class SolveResult:
             "assignment": {k: s.signature() for k, s in sorted(self.assignment.items())},
             "objective_s": self.objective_s,
             "comm_bytes": self.comm_bytes,
+            "transfer_bytes": self.transfer_bytes,
             "seeded_objective_s": self.seeded_objective_s,
             "seeded_comm_bytes": self.seeded_comm_bytes,
             "explored": self.explored,
@@ -356,6 +374,14 @@ class _State:
     cost_s: float
     comm_bytes: int
     seeded: bool
+    transfer_bytes: int = 0
+    accel_bytes: int = 0     # per-device bytes bound on the default class
+
+
+def _offload_match(name: str, targets: Sequence[str]) -> bool:
+    """``targets`` match a free input by full name or by its basename
+    (``wq`` parks every layer's ``L*.wq``)."""
+    return name in targets or name.rsplit(".", 1)[-1] in targets
 
 
 def solve(
@@ -365,13 +391,25 @@ def solve(
     backend: str = "tpu",
     max_candidates: int = 96,
     compare_seeded: bool = True,
+    offload: Sequence[str] = (),
 ) -> SolveResult:
     """Search the graph's input-layout space (see module docstring).
 
     ``beam`` is the number of partial assignments kept after each op
     (the rule-seeded lineage is always retained in addition, as the comm
     budget). Deterministic: same graph + space + beam → same plan.
+
+    ``offload`` names free inputs (full name or basename) that must be
+    parked on a non-default device class (repro.axe.hetero): their
+    candidate lists are restricted to host-parked placements, so the
+    solver chooses *how* to park them, not whether.
     """
+    offload = tuple(offload)
+    if offload and not graph.space.has_classes:
+        raise SolveError(
+            f"offload={offload} needs a class-annotated space "
+            f"(PhysicalSpace.classes), got {graph.space!r}"
+        )
     seeded_env = graph.seeded_env()
     seeded_plan = seeded_obj = seeded_comm = None
     if compare_seeded:
@@ -404,14 +442,53 @@ def solve(
             cands = list(enumerate_specs(
                 meta.shape, graph.space, meta.dtype, max_candidates=max_candidates
             ))
-            seed = seeded_env[name]
-            if not any(c.equivalent(seed) for c in cands):
-                cands.append(seed)
+            if _offload_match(name, offload):
+                caxes = graph.space.class_axes()
+                parked = [c for c in cands if hetero.is_parked(c)]
+                if not parked:
+                    # the enumeration samples placements; park the ones
+                    # it kept explicitly in case none landed on the
+                    # class axes (offload_extend is a no-op on a
+                    # degenerate degree-1 tier)
+                    from repro.axe import rules as _rules
+
+                    seen = set()
+                    for c in cands:
+                        p = _rules.offload_extend(c, axes=caxes)
+                        if hetero.is_parked(p) and p.signature() not in seen:
+                            seen.add(p.signature())
+                            parked.append(p)
+                if parked:
+                    cands = parked
+                elif any(graph.space.mesh_shape[a] > 1 for a in caxes):
+                    raise SolveError(
+                        f"offload target {name!r} has no parked placement: no "
+                        f"non-default-class mesh axis divides shape {meta.shape}"
+                    )
+                # else: every class axis has degree 1 — parking is
+                # unrepresentable (the canonical layout drops no-op
+                # shards) and moves nothing; offload degrades to a no-op
+            else:
+                seed = seeded_env[name]
+                if not any(c.equivalent(seed) for c in cands):
+                    cands.append(seed)
             cand_lists.append(tuple(cands))
+
+        # finite default-class capacity (only a class-annotated space
+        # constrains): bound inputs parked on another class cost zero
+        # accelerator bytes — this is what makes parking worth choosing
+        # when the accelerator tier cannot hold everything
+        cap = math.inf
+        if graph.space.has_classes:
+            table = hetero.class_table()
+            cap = table.capacity(table.default)
 
         next_states: List[_State] = []
         for st in states:
             for combo in itertools.product(*cand_lists) if free else ((),):
+                bound_bytes = sum(hetero.accel_bytes(c) for c in combo)
+                if st.accel_bytes + bound_bytes > cap:
+                    continue
                 env = dict(st.env)
                 env.update(zip(free, combo))
                 try:
@@ -421,9 +498,11 @@ def solve(
                     continue
                 explored += 1
                 comm = sum(r.comm_bytes for r in redists)
+                t_bytes = sum(r.transfer_bytes for r in redists)
                 op_s = op_seconds(node.kind, operands, out_spec, backend,
                                   epilogue=epilogue_kinds(node))
-                step_s = op_s + comm_seconds(comm)
+                step_s = (op_s + comm_seconds(comm)
+                          + transfer_seconds(t_bytes, graph.space))
                 env[node.out] = out_spec
                 bindings = dict(st.bindings)
                 bindings.update(zip(free, combo))
@@ -440,15 +519,20 @@ def solve(
                     comm_bytes=comm,
                     op_time_s=op_s,
                     cumulative_s=st.cost_s + step_s,
+                    transfer_bytes=t_bytes,
                 )
                 next_states.append(_State(
                     env, bindings, st.trace + [decision],
                     st.cost_s + step_s, st.comm_bytes + comm, is_seeded,
+                    st.transfer_bytes + t_bytes,
+                    st.accel_bytes + bound_bytes,
                 ))
         if not next_states:
             raise SolveError(
                 f"{node.name}: every candidate assignment was rejected by "
                 f"the propagation rules"
+                + ("" if cap == math.inf
+                   else f" or the default-class capacity ({cap:.3g} B/device)")
             )
         # comm only accumulates, so a state already past the seeded comm
         # budget can never satisfy it — discard early (the seeded
@@ -525,6 +609,7 @@ def solve(
         assignment=assignment,
         objective_s=objective,
         comm_bytes=comm_bytes,
+        transfer_bytes=plan.total_transfer_bytes,
         trace=best.trace,
         seeded_plan=seeded_plan,
         seeded_objective_s=seeded_obj,

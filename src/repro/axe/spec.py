@@ -50,6 +50,8 @@ from repro.core.layout import (
 PlacementEntry = Tuple[str, ...]          # mesh axes sharding one logical dim
 Placement = Tuple[PlacementEntry, ...]    # one entry per logical dim
 
+DEFAULT_DEVICE_CLASS = "accel"            # class of un-annotated mesh axes
+
 
 # ---------------------------------------------------------------------------
 # PhysicalSpace
@@ -64,9 +66,16 @@ class PhysicalSpace:
     on-device memory axes (``m``, ``sub``, ``lane``) and the Pallas grid
     axes (``grid_*``) are implicit — every space has them, with extents
     fixed by the tensor being laid out rather than by the machine.
+
+    ``classes`` optionally annotates mesh axes with a device class from
+    the :mod:`repro.axe.hetero` registry (e.g. ``(("host", "host"),)``
+    marks the ``host`` axis as the CPU-memory tier).  Un-annotated axes
+    belong to the default (accelerator) class; a space with no
+    annotations behaves — and signs — exactly as before.
     """
 
     mesh: Tuple[Tuple[str, int], ...]
+    classes: Tuple[Tuple[str, str], ...] = ()
 
     def __post_init__(self) -> None:
         for a, n in self.mesh:
@@ -74,10 +83,26 @@ class PhysicalSpace:
                 raise ValueError(f"{a!r} is not a registered mesh axis")
             if n < 1:
                 raise ValueError(f"mesh axis {a!r} has non-positive size {n}")
+        names = [a for a, _ in self.mesh]
+        seen = set()
+        for a, c in self.classes:
+            if a not in names:
+                raise ValueError(f"class annotation for {a!r} not in mesh {names}")
+            if a in seen:
+                raise ValueError(f"mesh axis {a!r} annotated with two classes")
+            seen.add(a)
 
     @staticmethod
-    def from_mesh_shape(mesh_shape: Mapping[str, int]) -> "PhysicalSpace":
-        return PhysicalSpace(tuple((str(a), int(n)) for a, n in mesh_shape.items()))
+    def from_mesh_shape(
+        mesh_shape: Mapping[str, int],
+        classes: Mapping[str, str] | Tuple[Tuple[str, str], ...] = (),
+    ) -> "PhysicalSpace":
+        if isinstance(classes, Mapping):
+            classes = tuple(sorted((str(a), str(c)) for a, c in classes.items()))
+        return PhysicalSpace(
+            tuple((str(a), int(n)) for a, n in mesh_shape.items()),
+            tuple(classes),
+        )
 
     @property
     def mesh_shape(self) -> Dict[str, int]:
@@ -90,8 +115,33 @@ class PhysicalSpace:
     def axis_size(self, axis: str) -> int:
         return self.mesh_shape.get(axis, 1)
 
+    # -- device classes (repro.axe.hetero) ------------------------------
+    @property
+    def has_classes(self) -> bool:
+        return bool(self.classes)
+
+    def axis_class(self, axis: str) -> str:
+        """Device class of a mesh axis (DEFAULT_DEVICE_CLASS when
+        un-annotated)."""
+        for a, c in self.classes:
+            if a == axis:
+                return c
+        return DEFAULT_DEVICE_CLASS
+
+    def class_axes(self) -> Tuple[str, ...]:
+        """Mesh axes belonging to a non-default device class, in mesh
+        order."""
+        ann = {a: c for a, c in self.classes}
+        return tuple(
+            a for a, _ in self.mesh
+            if ann.get(a, DEFAULT_DEVICE_CLASS) != DEFAULT_DEVICE_CLASS
+        )
+
     def signature(self) -> str:
-        return ",".join(f"{a}={n}" for a, n in self.mesh)
+        sig = ",".join(f"{a}={n}" for a, n in self.mesh)
+        if self.classes:
+            sig += "|" + ",".join(f"{a}:{c}" for a, c in self.classes)
+        return sig
 
     def __repr__(self) -> str:
         return f"PhysicalSpace({self.signature()})"

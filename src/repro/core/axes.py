@@ -36,6 +36,7 @@ DEFAULT_AXES: Dict[str, AxisDef] = {
     "model": AxisDef("model", AxisKind.MESH),
     "expert": AxisDef("expert", AxisKind.MESH),
     "pipe": AxisDef("pipe", AxisKind.MESH),   # pipeline stages (train.pipeline)
+    "host": AxisDef("host", AxisKind.MESH),   # host-memory tier (axe.hetero)
     # memory
     "m": AxisDef("m", AxisKind.MEMORY),       # linear HBM offsets
     "sub": AxisDef("sub", AxisKind.MEMORY),   # VREG sublane (TPU "P"-like)
@@ -46,7 +47,7 @@ DEFAULT_AXES: Dict[str, AxisDef] = {
     "grid_k": AxisDef("grid_k", AxisKind.GRID),
 }
 
-MESH_AXES: Tuple[str, ...] = ("pod", "data", "model", "expert", "pipe")
+MESH_AXES: Tuple[str, ...] = ("pod", "data", "model", "expert", "pipe", "host")
 MEM_AXIS = "m"
 
 

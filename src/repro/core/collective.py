@@ -56,6 +56,25 @@ class AllReduce:
     axis: str
 
 
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """Class-crossing movement over a device-class mesh axis (e.g. the
+    ``host`` tier of ``repro.axe.hetero``) — same data motion as a
+    gather/slice but charged against the class link, never the ICI.
+
+    ``op`` is ``"gather"`` (un-park: reconstruct the tensor from the
+    class tier) or ``"slice"`` (park: each class shard keeps its chunk).
+    """
+
+    axis: str
+    dim: int
+    op: str = "gather"
+
+    def __post_init__(self) -> None:
+        if self.op not in ("gather", "slice"):
+            raise ValueError(f"Transfer op must be gather|slice, got {self.op!r}")
+
+
 Step = object
 
 
@@ -155,6 +174,31 @@ def plan_comm_bytes(
         elif isinstance(step, AllToAll):
             p = mesh_shape[step.axis]
             out += shard * (p - 1) // p
+        # Transfer steps are class-crossing, not ICI: see plan_transfer_bytes
+    return out
+
+
+def plan_transfer_bytes(
+    plan: Sequence[Step],
+    spec: DTensorSpec,
+    mesh_shape: Mapping[str, int],
+    itemsize: int,
+) -> int:
+    """Per-device bytes crossing a device-class link (Transfer steps
+    only). A gather moves every remote class shard in (``shard*(p-1)``,
+    mirroring the ring AllGather); a park (``slice``) is a local chop —
+    the page-out bytes are accounted where the data is actually written
+    (serve.batcher), not here."""
+    import math
+
+    total = math.prod(spec.shape) * itemsize
+    n_dev = math.prod(mesh_shape.values()) or 1
+    shard = total // n_dev
+    out = 0
+    for step in plan:
+        if isinstance(step, Transfer) and step.op == "gather":
+            p = mesh_shape[step.axis]
+            out += shard * (p - 1)
     return out
 
 
@@ -182,6 +226,14 @@ def lower_step(x: jax.Array, step: Step) -> jax.Array:
         size = compat.axis_size(step.axis)  # jax.lax.axis_size is new-jax-only
         chunk = x.shape[step.dim] // size
         return jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=step.dim)
+    if isinstance(step, Transfer):
+        # Class-crossing movement lowers to the same SPMD primitives as
+        # its homogeneous twin (the class tier mirrors the mesh), so
+        # host-parked executables stay bit-comparable to all-accel runs;
+        # only the *cost model* treats Transfer differently.
+        if step.op == "gather":
+            return jax.lax.all_gather(x, step.axis, axis=step.dim, tiled=True)
+        return lower_step(x, DynamicSlice(step.axis, step.dim))
     raise TypeError(f"unknown step {step}")
 
 

@@ -52,6 +52,51 @@ def _mesh_shape(multi_pod: bool):
     return {"pod": 2, "data": 16, "model": 16} if multi_pod else {"data": 16, "model": 16}
 
 
+def _hetero_space(mesh_shape, classes_text: str, host_degree: int):
+    """Class-annotated solve space: carve a ``host`` memory-tier axis
+    into the mesh and parse the per-class cost table (``--classes``
+    syntax, ``repro.axe.hetero.parse_classes``)."""
+    from repro.axe import hetero
+
+    table = hetero.parse_classes(classes_text)
+    shape = dict(mesh_shape)
+    shape["host"] = host_degree
+    space = PhysicalSpace.from_mesh_shape(
+        shape, classes={"host": hetero.HOST_CLASS}
+    )
+    return table, space
+
+
+def _hetero_record(res, table):
+    """Per-class placement + transfer-byte summary of a SolveResult."""
+    from repro.axe import hetero
+
+    parked = {
+        name: spec.signature()
+        for name, spec in sorted(res.assignment.items())
+        if hetero.is_parked(spec)
+    }
+    return {
+        "default_class": table.default,
+        "placed": {
+            table.default: len(res.assignment) - len(parked),
+            hetero.HOST_CLASS: len(parked),
+        },
+        "parked": parked,
+        "transfer_bytes": res.transfer_bytes,
+    }
+
+
+def _print_hetero(rec):
+    het = rec["hetero"]
+    placed = het["placed"]
+    print("per-class placement: "
+          + "  ".join(f"{c}={n}" for c, n in sorted(placed.items()))
+          + f"  transfer={het['transfer_bytes'] / 2**10:.1f} KiB/dev")
+    for name, sig in het["parked"].items():
+        print(f"  parked {name}: {sig}")
+
+
 def layout_plan_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose: bool = True):
     """Propagate one decoder layer's layout plan — no mesh, no compile."""
     from repro.axe.graphs import decoder_layer_graph
@@ -92,6 +137,9 @@ def solve_cell(
     trace: bool = False,
     fuse: bool = False,
     fusion_trace: bool = False,
+    classes: str = None,
+    host_degree: int = 2,
+    offload: tuple = (),
 ):
     """Solve the whole-model layout for one cell — deviceless, like
     ``--layout-plan``, but the compiler *chooses* the placements: beam
@@ -104,15 +152,26 @@ def solve_cell(
     from repro.axe.spec import PhysicalSpace
     from repro.tune import planner as tune_planner
 
+    import contextlib
+
+    from repro.axe import hetero
+
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    space = PhysicalSpace.from_mesh_shape(_mesh_shape(multi_pod))
+    table = None
+    if classes:
+        table, space = _hetero_space(_mesh_shape(multi_pod), classes, host_degree)
+    else:
+        space = PhysicalSpace.from_mesh_shape(_mesh_shape(multi_pod))
     record = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
         "kind": shape.kind, "batch": shape.batch, "seq": shape.seq,
         "layers": layers, "beam": beam,
     }
+    if classes:
+        record["classes"] = classes
+        record["offload"] = list(offload)
     try:
         gs = model_graph(cfg, shape.batch, shape.seq, space, layers=layers)
         if fuse:
@@ -126,7 +185,15 @@ def solve_cell(
                 record["unfused_seeded_comm_bytes"] = pre.total_comm_bytes
             gs, rep = fuse_graph(gs)
             record["fusion"] = rep.to_dict()
-        res = solve(gs, beam=beam, backend="tpu")
+        # under a class table the rule-seeded baseline is not the budget
+        # (the rules never park; the parked lineage must be free to
+        # out-spend the seed on ICI comm to save accelerator memory)
+        ctx = hetero.use_class_table(table) if table else contextlib.nullcontext()
+        with ctx:
+            res = solve(gs, beam=beam, backend="tpu",
+                        compare_seeded=not classes, offload=offload)
+        if table is not None:
+            record["hetero"] = _hetero_record(res, table)
     except Exception as e:  # record an error row; never abort a sweep
         record.update(status="error", error=f"{type(e).__name__}: {e}")
         if not isinstance(e, SolveError):
@@ -155,6 +222,8 @@ def solve_cell(
     record["status"] = "ok"
     if verbose:
         print(res.describe(trace=trace))
+        if "hetero" in record:
+            _print_hetero(record)
     return record
 
 
@@ -167,16 +236,21 @@ def execute_cell(
     verbose: bool = True,
     fuse: bool = False,
     fusion_trace: bool = False,
+    classes: str = None,
+    host_degree: int = 2,
+    offload: tuple = (),
 ):
     """Compile the solved plan with ``axe.compile`` and *run* it on
     this host's devices (smoke-reduced config): checks the numerics
     against the reference model forward and cross-checks the
     redistribution collectives the traced body issued against the plan
     and the solver's per-op Decision comm accounting."""
+    import contextlib
     import dataclasses as _dc
 
     import numpy as np
 
+    from repro.axe import hetero
     from repro.axe.compile import (
         SUPPORTED_FAMILIES, compile as axe_compile, model_inputs,
     )
@@ -203,12 +277,31 @@ def execute_cell(
     # cap the mesh at 8 devices even when this module's default 512
     # forced host devices are in effect
     n_dev = min(len(jax.devices()), 8)
-    model_deg = 4 if n_dev % 4 == 0 else n_dev
-    mesh = Mesh(
-        _np.asarray(jax.devices()[:n_dev]).reshape(n_dev // model_deg, model_deg),
-        ("data", "model"),
-    )
-    space = PhysicalSpace.from_mesh_shape(axe_rules.mesh_shape_of(mesh))
+    table = None
+    if classes:
+        # carve a host-class axis out of the device budget: 8 devices →
+        # (data=2, model=2, host=2); 1 device degenerates to (1, 1, 1)
+        hd = host_degree if n_dev % host_degree == 0 else 1
+        rest = n_dev // hd
+        model_deg = 2 if rest % 2 == 0 else rest
+        mesh = Mesh(
+            _np.asarray(jax.devices()[:n_dev]).reshape(
+                rest // model_deg, model_deg, hd),
+            ("data", "model", "host"),
+        )
+        table = hetero.parse_classes(classes)
+        space = PhysicalSpace.from_mesh_shape(
+            axe_rules.mesh_shape_of(mesh), classes={"host": hetero.HOST_CLASS}
+        )
+        record["classes"] = classes
+        record["offload"] = list(offload)
+    else:
+        model_deg = 4 if n_dev % 4 == 0 else n_dev
+        mesh = Mesh(
+            _np.asarray(jax.devices()[:n_dev]).reshape(n_dev // model_deg, model_deg),
+            ("data", "model"),
+        )
+        space = PhysicalSpace.from_mesh_shape(axe_rules.mesh_shape_of(mesh))
     record["mesh_shape"] = space.mesh_shape
 
     try:
@@ -225,7 +318,12 @@ def execute_cell(
             record["fusion"] = rep.to_dict()
             if verbose and fusion_trace:
                 print(rep.describe())
-        res = solve(graph, beam=beam, backend="tpu")
+        ctx = hetero.use_class_table(table) if table else contextlib.nullcontext()
+        with ctx:
+            res = solve(graph, beam=beam, backend="tpu",
+                        compare_seeded=not classes, offload=offload)
+        if table is not None:
+            record["hetero"] = _hetero_record(res, table)
         exe = axe_compile(graph, mesh, plan=res)
 
         api = build_model(cfg)
@@ -270,6 +368,22 @@ def execute_cell(
                 f"plan comm disagrees with the solver Decision trace: "
                 f"{mismatches[:4]}"
             )
+        # class-crossing Transfer collectives: every one the plan holds
+        # must have been issued by the traced body (observed == planned
+        # above covers the sequence; count them out explicitly so the
+        # hetero smoke leg can assert the offload actually moved bytes)
+        transfers = sum(
+            1 for (_op, _operand, steps) in planned if "Transfer" in steps
+        )
+        record["transfers"] = transfers
+        parkable = any(
+            space.mesh_shape[a] > 1 for a in space.class_axes()
+        )
+        if offload and parkable and transfers == 0:
+            raise RuntimeError(
+                f"offload={list(offload)} was requested but the compiled "
+                f"plan issued no Transfer collective"
+            )
         record.update(
             status="ok",
             fused=fuse,
@@ -277,13 +391,19 @@ def execute_cell(
             comm_bytes=exe.plan.total_comm_bytes,
             solved_comm_bytes=res.comm_bytes,
             seeded_comm_bytes=res.seeded_comm_bytes,
+            transfer_bytes=exe.plan.total_transfer_bytes,
         )
         if verbose:
             tagf = " fused" if fuse else ""
+            tagx = (f" transfers={transfers} "
+                    f"xfer={exe.plan.total_transfer_bytes / 2**10:.1f} KiB/dev"
+                    if classes else "")
             print(f"EXEC {arch}{tagf} mesh={space.signature()} "
                   f"max|Δ|={record['max_abs_diff']:.2e} "
                   f"collectives={len(planned)} (issued == planned == decisions) "
-                  f"comm={exe.plan.total_comm_bytes / 2**10:.1f} KiB/dev OK")
+                  f"comm={exe.plan.total_comm_bytes / 2**10:.1f} KiB/dev{tagx} OK")
+            if "hetero" in record:
+                _print_hetero(record)
     except Exception as e:  # record an error row; never abort a sweep
         record.update(status="error", error=f"{type(e).__name__}: {e}")
         record["traceback"] = traceback.format_exc()[-2000:]
@@ -500,9 +620,24 @@ def main():
     ap.add_argument("--layers", type=int, default=2,
                     help="decoder depth of the solved model graph")
     ap.add_argument("--beam", type=int, default=4, help="layout solver beam width")
+    ap.add_argument("--classes", default=None,
+                    help="with --solve/--execute: heterogeneous device "
+                         "classes as name=flops:mem_bw:link_bw[:capacity] "
+                         "pairs (e.g. host=0:100e9:16e9,accel=197e12:819e9:"
+                         "200e9); carves a host-class mesh axis and reports "
+                         "per-class placement + transfer bytes")
+    ap.add_argument("--host-degree", type=int, default=2,
+                    help="with --classes: size of the carved host mesh axis")
+    ap.add_argument("--offload", default=None,
+                    help="with --classes: comma-separated input names (full "
+                         "or basename, e.g. embed) the solver must park on "
+                         "the host class")
     args = ap.parse_args()
     if args.fusion_trace:
         args.fuse = True
+    if args.offload and not args.classes:
+        ap.error("--offload requires --classes")
+    offload = tuple(filter(None, (args.offload or "").split(",")))
 
     cells = []
     if args.execute:
@@ -531,6 +666,8 @@ def main():
             rec = execute_cell(
                 arch, batch=args.exec_batch, seq=args.exec_seq, beam=args.beam,
                 fuse=args.fuse, fusion_trace=args.fusion_trace,
+                classes=args.classes, host_degree=args.host_degree,
+                offload=offload,
             )
             line = json.dumps(rec)
             if rec["status"] == "error":
@@ -547,11 +684,22 @@ def main():
                 verbose=args.solve and not args.solve_compare,
                 trace=args.solve_trace,
                 fuse=args.fuse, fusion_trace=args.fusion_trace,
+                classes=args.classes, host_degree=args.host_degree,
+                offload=offload,
             )
             line = json.dumps(rec)
             if rec["status"] != "ok":
                 failures += 1
                 print(line)
+            elif args.classes:
+                # no seeded budget under a class table (the rules never
+                # park) — report placement + transfer spend instead
+                s, het = rec["solve"], rec["hetero"]
+                print(f"SOLVE {arch} {shape} {mesh} classes "
+                      f"solved={s['comm_bytes'] / 2**20:.1f} MiB/dev "
+                      f"xfer={s['transfer_bytes'] / 2**20:.1f} MiB/dev "
+                      f"parked={len(het['parked'])} "
+                      f"J={1e3 * s['objective_s']:.2f} ms OK")
             else:
                 s = rec["solve"]
                 solved, seeded = s["comm_bytes"], s["seeded_comm_bytes"]
@@ -619,7 +767,7 @@ def main():
             out_f.flush()
     if out_f:
         out_f.close()
-    if args.solve_compare and len(cells) > 1 and improved == 0:
+    if args.solve_compare and not args.classes and len(cells) > 1 and improved == 0:
         print("SOLVE-COMPARE: no config strictly improved over its seeded plan")
         failures += 1
     sys.exit(1 if failures else 0)

@@ -82,6 +82,26 @@ BACKEND_PEAKS = {
     "cpu": (200e9, 50e9),
 }
 
+
+def _peaks(backend: str) -> Tuple[float, float]:
+    """Per-backend (peak_flops, mem_bw). The accelerator backend reads
+    the *active* device-class table (repro.axe.hetero) — its default
+    table is exactly the v5e constants above, so homogeneous costing is
+    unchanged; tests flip the table to flip relative costs."""
+    if backend == "tpu":
+        from repro.axe import hetero
+
+        return hetero.default_peaks()
+    return BACKEND_PEAKS.get(backend, BACKEND_PEAKS["cpu"])
+
+
+def _link_bw() -> float:
+    """The default class' link bandwidth — the v5e ICI under the
+    default table (repro.axe.hetero)."""
+    from repro.axe import hetero
+
+    return hetero.default_link_bw()
+
 # Pallas kernels execute in interpret mode (Python per grid step) off
 # TPU; the planner multiplies their compute term by this so an
 # interpreted kernel never out-ranks a compiled XLA schedule.
@@ -102,8 +122,8 @@ def schedule_time(
     the same model ``derive_terms`` applies to whole compiled programs,
     reduced to a single operator so the planner can rank candidates.
     """
-    peak_flops, mem_bw = BACKEND_PEAKS.get(backend, BACKEND_PEAKS["cpu"])
-    ici_bw = meshmod.ICI_BW_PER_LINK * meshmod.ICI_LINKS
+    peak_flops, mem_bw = _peaks(backend)
+    ici_bw = _link_bw()
     terms = {
         "compute": compute_penalty * flops / peak_flops,
         "memory": mem_bytes / mem_bw,
@@ -144,12 +164,13 @@ def derive_terms(
 
     c = hlo_cost.analyze(hlo_text, total_devices=n_chips)
 
-    ici_bw = meshmod.ICI_BW_PER_LINK * meshmod.ICI_LINKS
-    compute_s = c.flops / meshmod.PEAK_FLOPS_BF16
-    memory_s = c.bytes / meshmod.HBM_BW
+    peak_flops, mem_bw = _peaks("tpu")
+    ici_bw = _link_bw()
+    compute_s = c.flops / peak_flops
+    memory_s = c.bytes / mem_bw
     collective_s = c.comm_bytes / ici_bw
 
-    ideal_s = model_flops_total / (n_chips * meshmod.PEAK_FLOPS_BF16)
+    ideal_s = model_flops_total / (n_chips * peak_flops)
     step_s = max(compute_s, memory_s, collective_s)
     terms = {
         "compute": compute_s, "memory": memory_s, "collective": collective_s,

@@ -52,6 +52,15 @@ def main():
                     help="with --solve: keep the legacy module-wired "
                          "forward and only consume the solved param "
                          "placements (deprecated path)")
+    ap.add_argument("--offload-opt", action="store_true",
+                    help="park the optimizer moments on a host-class "
+                         "mesh axis (repro.axe.hetero): carves a host "
+                         "memory tier out of the device budget and "
+                         "shards mu/nu over it, freeing accelerator HBM")
+    ap.add_argument("--host-degree", type=int, default=2,
+                    help="with --offload-opt: size of the carved host "
+                         "mesh axis (must divide the device count; "
+                         "degrades to 1 — a no-op — when it does not)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -61,12 +70,25 @@ def main():
           f"(active {cfg.active_param_count()/1e9:.2f}B)")
 
     n_dev = len(jax.devices())
-    data_deg = args.mesh_data or (n_dev // args.mesh_model)
     from repro import compat
 
-    mesh = compat.make_mesh((data_deg, args.mesh_model), ("data", "model"))
-    mesh_shape = axe_rules.mesh_shape_of(mesh)
-    space = PhysicalSpace.from_mesh_shape(mesh_shape)
+    if args.offload_opt:
+        from repro.axe import hetero
+
+        host_deg = (args.host_degree
+                    if n_dev % (args.mesh_model * args.host_degree) == 0
+                    else 1)
+        data_deg = args.mesh_data or (n_dev // (args.mesh_model * host_deg))
+        mesh = compat.make_mesh(
+            (data_deg, args.mesh_model, host_deg), ("data", "model", "host")
+        )
+        space = PhysicalSpace.from_mesh_shape(
+            axe_rules.mesh_shape_of(mesh), classes={"host": hetero.HOST_CLASS}
+        )
+    else:
+        data_deg = args.mesh_data or (n_dev // args.mesh_model)
+        mesh = compat.make_mesh((data_deg, args.mesh_model), ("data", "model"))
+        space = PhysicalSpace.from_mesh_shape(axe_rules.mesh_shape_of(mesh))
     act_sharding.set_mesh(mesh if n_dev > 1 else None)
 
     api = build_model(cfg)
@@ -130,7 +152,25 @@ def main():
         from repro.optim.adamw import AdamWState
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        o_specs = axe_rules.opt_specs(p_specs)
+        o_specs = axe_rules.opt_specs(
+            p_specs,
+            offload_axes=("host",) if args.offload_opt else (),
+        )
+        if args.offload_opt:
+            from repro.axe import hetero
+
+            leaves = jax.tree.leaves(
+                o_specs, is_leaf=lambda x: hasattr(x, "placement")
+            )
+            parked = [s for s in leaves if hetero.is_parked(s)]
+            host_b = sum(
+                s.bytes_per_device(hetero.itemsize_of(s.dtype)) for s in parked
+            )
+            # mu and nu share the spec tree, so each parked leaf is held
+            # twice in the AdamW state
+            print(f"offload-opt: parked {len(parked)}/{len(leaves)} moment "
+                  f"leaves on the host class "
+                  f"({2 * host_b / 2**20:.1f} MiB/host-device)")
         p_sh = axe_rules.sharding_tree(p_specs, mesh)
         o_sh = axe_rules.sharding_tree(o_specs, mesh)
         scalar = NamedSharding(mesh, P())

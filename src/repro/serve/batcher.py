@@ -59,26 +59,42 @@ class PagePool:
     Serving-level admission control: a request leases
     ``ceil(cache_len / page_size)`` pages for its whole lifetime and
     returns them exactly once on retirement. Double leases and double
-    frees raise :class:`PagePoolError` — the test suite's invariant."""
+    frees raise :class:`PagePoolError` — the test suite's invariant.
 
-    def __init__(self, n_pages: int, page_size: int):
+    ``host_pages > 0`` enables the two-tier mode (repro.axe.hetero's
+    host class, applied to serving): a live lease can be *evicted* to
+    the host tier — its accelerator pages return to the pool while the
+    uid keeps a host-tier lease of the same size — and later *leased
+    back*. Page round trips are counted in ``transfer_pages`` (the
+    byte-level movement is the batcher's Transfer, not the pool's)."""
+
+    def __init__(self, n_pages: int, page_size: int, *, host_pages: int = 0):
         if n_pages <= 0 or page_size <= 0:
             raise ValueError("n_pages and page_size must be positive")
+        if host_pages < 0:
+            raise ValueError("host_pages must be non-negative")
         self.n_pages = n_pages
         self.page_size = page_size
+        self.host_pages = host_pages
         self._free: List[int] = list(range(n_pages))
         self._leased: Dict[int, Tuple[int, ...]] = {}
+        self._host: Dict[int, int] = {}       # uid -> n pages parked on host
         self.freed_count: Dict[int, int] = {}
+        self.transfer_pages: Dict[str, int] = {"out": 0, "in": 0}
 
     @property
     def available(self) -> int:
         return len(self._free)
 
+    @property
+    def host_available(self) -> int:
+        return self.host_pages - sum(self._host.values())
+
     def pages_for(self, cache_len: int) -> int:
         return -(-cache_len // self.page_size)
 
     def alloc(self, uid: int, n: int) -> Tuple[int, ...]:
-        if uid in self._leased:
+        if uid in self._leased or uid in self._host:
             raise PagePoolError(f"uid {uid} already holds a lease")
         if n > len(self._free):
             raise PagePoolError(
@@ -89,15 +105,57 @@ class PagePool:
         self._leased[uid] = pages
         return pages
 
+    def evict(self, uid: int) -> int:
+        """Move a live lease to the host tier: the accelerator pages
+        return to the pool, the uid keeps a host lease of equal size."""
+        pages = self._leased.get(uid)
+        if pages is None:
+            if uid in self._host:
+                raise PagePoolError(f"uid {uid} is already evicted")
+            raise PagePoolError(f"uid {uid} holds no lease to evict")
+        if len(pages) > self.host_available:
+            raise PagePoolError(
+                f"uid {uid} wants {len(pages)} host pages, only "
+                f"{self.host_available} of {self.host_pages} free"
+            )
+        del self._leased[uid]
+        self._free.extend(pages)
+        self._host[uid] = len(pages)
+        self.transfer_pages["out"] += len(pages)
+        return len(pages)
+
+    def lease_back(self, uid: int) -> Tuple[int, ...]:
+        """Return an evicted lease to the accelerator tier."""
+        n = self._host.get(uid)
+        if n is None:
+            raise PagePoolError(f"uid {uid} holds no host lease")
+        if n > len(self._free):
+            raise PagePoolError(
+                f"uid {uid} wants {n} pages back, only {len(self._free)} free"
+            )
+        pages = tuple(self._free[:n])
+        del self._free[:n]
+        del self._host[uid]
+        self._leased[uid] = pages
+        self.transfer_pages["in"] += n
+        return pages
+
     def free(self, uid: int) -> None:
         pages = self._leased.pop(uid, None)
         if pages is None:
+            if self._host.pop(uid, None) is not None:
+                # finishing while parked releases the host lease
+                self.freed_count[uid] = self.freed_count.get(uid, 0) + 1
+                return
             raise PagePoolError(f"uid {uid} holds no lease (double free?)")
         self._free.extend(pages)
         self.freed_count[uid] = self.freed_count.get(uid, 0) + 1
 
     def leased_pages(self) -> Dict[int, Tuple[int, ...]]:
         return dict(self._leased)
+
+    def host_leased(self) -> Dict[int, int]:
+        return dict(self._host)
 
 
 @dataclasses.dataclass
@@ -111,6 +169,21 @@ class _Slot:
     result: Optional[RequestResult] = None
 
 
+@dataclasses.dataclass
+class _Parked:
+    """A preempted request living on the host tier: its saved decode
+    state plus the host-resident copy of its cache slice."""
+
+    uid: int
+    pos: int
+    remaining: int
+    tokens: List[int]
+    last_tok: int
+    result: RequestResult
+    cache: object                 # numpy cache slice [n_super, 1, ...]
+    parked_at: int
+
+
 class ContinuousBatcher:
     """Continuous batching driver over a :class:`ServeEngine`.
 
@@ -122,14 +195,25 @@ class ContinuousBatcher:
     def __init__(self, engine, *, page_size: int = 16,
                  n_pages: Optional[int] = None,
                  temperature: Optional[float] = None,
-                 top_k: Optional[int] = None):
+                 top_k: Optional[int] = None,
+                 offload: bool = False,
+                 host_pages: Optional[int] = None):
         self.engine = engine
         self.n_slots = engine.batch_size
         per_slot = -(-engine.max_seq // page_size)
+        if host_pages is None:
+            host_pages = self.n_slots * per_slot if offload else 0
         self.pool = PagePool(
             n_pages if n_pages is not None else self.n_slots * per_slot,
             page_size,
+            host_pages=host_pages,
         )
+        self.offload = offload
+        self.parked: List[_Parked] = []
+        #: bytes moved across the host link by page-out/page-in, and the
+        #: Transfer-tagged movement log the tests/dryrun assert on
+        self.transfer_bytes = 0
+        self.transfer_log: List[Tuple[str, int, str]] = []
         self.temperature = (
             engine.temperature if temperature is None else temperature
         )
@@ -198,6 +282,77 @@ class ContinuousBatcher:
         if slot.remaining == 0:
             self._retire(slot)
 
+    # -- host-tier preemption (two-tier PagePool) -------------------------
+    def _cache_slice(self, index: int):
+        """The one-slot cache slice, copied to host memory (the
+        Transfer "slice": page-out of a leased cache)."""
+        return jax.tree.map(
+            lambda big: np.asarray(
+                jax.lax.dynamic_slice_in_dim(big, index, 1, axis=1)
+            ),
+            self.cache,
+        )
+
+    def _park(self, slot: _Slot) -> None:
+        """Preempt a live slot: evict its pages to the host tier, copy
+        its cache slice to host memory, and save its decode state so a
+        later lease-back resumes with identical tokens (sampling is
+        uid/pos-keyed, so parking never changes a request's stream)."""
+        sliced = self._cache_slice(slot.index)
+        self.transfer_bytes += sum(a.nbytes for a in jax.tree.leaves(sliced))
+        self.transfer_log.append(("page_out", slot.uid, "Transfer"))
+        self.pool.evict(slot.uid)
+        self.parked.append(_Parked(
+            uid=slot.uid, pos=slot.pos, remaining=slot.remaining,
+            tokens=slot.tokens, last_tok=slot.last_tok, result=slot.result,
+            cache=sliced, parked_at=self.step_count,
+        ))
+        slot.uid = None
+        slot.pos = 0
+        slot.remaining = 0
+        slot.tokens = None
+        slot.last_tok = 0
+        slot.result = None
+
+    def _resume(self, parked: _Parked, slot: _Slot) -> None:
+        """Lease an evicted request back onto the accelerator tier (the
+        Transfer "gather": page-in of the host-resident slice)."""
+        self.pool.lease_back(parked.uid)
+        self.transfer_bytes += sum(
+            a.nbytes for a in jax.tree.leaves(parked.cache)
+        )
+        self.transfer_log.append(("page_in", parked.uid, "Transfer"))
+        self.cache = jax.tree.map(
+            lambda big, new: jax.lax.dynamic_update_slice_in_dim(
+                big, jnp.asarray(new).astype(big.dtype), slot.index, axis=1
+            ),
+            self.cache, parked.cache,
+        )
+        slot.uid = parked.uid
+        slot.pos = parked.pos
+        slot.remaining = parked.remaining
+        slot.tokens = parked.tokens
+        slot.last_tok = parked.last_tok
+        slot.result = parked.result
+
+    def _page_out_for(self, needed: int, protect: set) -> bool:
+        """Evict live slots (largest remaining work first, uid as the
+        deterministic tie-break) until ``needed`` accelerator pages are
+        free. ``protect`` uids (resumed this tick) are never re-parked —
+        that would thrash the host link without progress. Returns False
+        when eviction cannot make room."""
+        while self.pool.available < needed:
+            live = [
+                s for s in self.slots
+                if s.uid is not None and s.uid not in protect
+                and len(self.pool.leased_pages().get(s.uid, ())) <= self.pool.host_available
+            ]
+            if not live:
+                return False
+            victim = max(live, key=lambda s: (s.remaining, s.uid))
+            self._park(victim)
+        return True
+
     def _retire(self, slot: _Slot) -> None:
         self.pool.free(slot.uid)
         res = slot.result
@@ -252,6 +407,19 @@ class ContinuousBatcher:
         # arrivals whose time has come
         while self.pending and self.pending[0].arrival <= self.step_count:
             self.queue.append(self.pending.pop(0))
+        # lease parked requests back first (FIFO by park order): they
+        # were admitted before anything still queued
+        resumed: set = set()
+        while self.parked:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            need = self.pool.host_leased().get(self.parked[0].uid, 0)
+            if need > self.pool.available:
+                break
+            p = self.parked.pop(0)
+            self._resume(p, slot)
+            resumed.add(p.uid)
         # admit while there is a slot AND pages for the whole request
         while self.queue:
             slot = self._free_slot()
@@ -261,19 +429,26 @@ class ContinuousBatcher:
             cache_len = min(
                 len(req.prompt) + req.max_new_tokens, self.engine.max_seq
             )
-            if self.pool.pages_for(cache_len) > self.pool.n_pages:
+            need = self.pool.pages_for(cache_len)
+            if need > self.pool.n_pages:
                 raise PagePoolError(
-                    f"uid {req.uid} needs {self.pool.pages_for(cache_len)} "
-                    f"pages; the pool only has {self.pool.n_pages}"
+                    f"uid {req.uid} needs {need} pages; the pool only has "
+                    f"{self.pool.n_pages}"
                 )
-            if self.pool.pages_for(cache_len) > self.pool.available:
-                break  # head-of-line waits for pages (deterministic order)
+            if need > self.pool.available:
+                # head-of-line waits for pages (deterministic order);
+                # in offload mode, page cold requests out to the host
+                # tier instead of stalling the line
+                if not (self.offload and self._page_out_for(need, resumed)
+                        and self._free_slot() is not None):
+                    break
+                slot = self._free_slot()
             self.queue.pop(0)
             self._admit(req, slot)
 
         live = [s for s in self.slots if s.uid is not None]
         if not live:
-            done = not (self.queue or self.pending)
+            done = not (self.queue or self.pending or self.parked)
             self.step_count += 1
             return not done
 
