@@ -118,6 +118,61 @@ def run_offload(batch: int, seq: int) -> list:
     )]
 
 
+def run_overlap(batch: int, seq: int) -> list:
+    """One compute/communication-overlap row: the MoE config (comm is a
+    meaningful fraction of its step) compiled with the overlap schedule
+    (``model_executable(..., overlap=True)``, docs/overlap.md) against
+    the synchronous executable on the *same solved plan*, so the A/B
+    isolates the schedule. Bit-comparability is asserted before timing
+    (the schedule reorders collective issue only), and the legs share
+    the drift-symmetric interleaved rounds (:func:`_interleaved`) so the
+    tokens/s delta is not measurement drift."""
+    import numpy as np
+
+    from repro import axe, compat
+    from repro.configs import get_config, smoke_variant
+    from repro.models.model_zoo import build_model
+
+    n_dev = len(jax.devices())
+    model_deg = 4 if n_dev % 4 == 0 else n_dev
+    mesh = compat.make_mesh((n_dev // model_deg, model_deg), ("data", "model"))
+
+    arch = "qwen3-moe-235b-a22b"
+    cfg = smoke_variant(get_config(arch))
+    cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (batch * seq,), 0, cfg.vocab_size, jnp.int32
+    )
+    exe_s = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype)
+    exe_o = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype,
+                                 plan=exe_s.solve_result, overlap=True)
+    ins = axe.model_inputs(exe_s.graph, cfg, params)
+    out_s = np.asarray(jax.block_until_ready(exe_s(ins, tokens)))
+    out_o = np.asarray(jax.block_until_ready(exe_o(ins, tokens)))
+    if not np.array_equal(out_s, out_o):
+        err = float(np.max(np.abs(out_s - out_o)))
+        raise RuntimeError(f"overlap forward is not bit-equal (max|d|={err:.2e})")
+    prefetched = sum(len(r.prefetched) for r in exe_o.lowering_trace)
+    if prefetched == 0:
+        raise RuntimeError("overlap schedule hoisted no collectives")
+    # the solver's view of the same plan under the overlap objective:
+    # how many ops get their comm charged at max(comm, compute)
+    res = axe.solve(exe_s.graph, overlap=True)
+    hidden_ops = sum(1 for d in res.trace if d.hidden_comm_s > 0)
+    us_s, us_o = _interleaved([(exe_s, ins), (exe_o, ins)], tokens)
+    tok_s = batch * seq / (us_s / 1e6)
+    tok_o = batch * seq / (us_o / 1e6)
+    return [row(
+        f"graph.forward.{arch}.overlap", us_o,
+        f"compiled forward {batch}x{seq} overlap tokens/s={tok_o:.0f} "
+        f"(sync {tok_s:.0f}) prefetched={prefetched} "
+        f"hidden_ops={hidden_ops} "
+        f"hidden={res.hidden_comm_s * 1e6:.1f}us/dev bit-equal",
+    )]
+
+
 def run(batch: int, seq: int, *, fuse: bool = True) -> list:
     from repro import axe, compat
     from repro.configs import get_config, smoke_variant
@@ -182,10 +237,17 @@ def main() -> int:
                     help="also measure the dense config with its "
                          "embedding table host-parked (repro.axe.hetero) "
                          "against the all-accelerator twin")
+    ap.add_argument("--overlap", action="store_true",
+                    help="also measure the MoE config under the "
+                         "compute/communication-overlap schedule "
+                         "(docs/overlap.md) against its synchronous twin "
+                         "on the same solved plan")
     args = ap.parse_args()
     rows = run(args.batch, args.seq, fuse=not args.no_fuse)
     if args.offload:
         rows += run_offload(args.batch, args.seq)
+    if args.overlap:
+        rows += run_overlap(args.batch, args.seq)
     path = write_bench_json(
         "graph", rows, filename=BENCH_GRAPH_JSON,
     )

@@ -4,13 +4,18 @@ Compares a freshly measured ``BENCH_kernels.json`` (written by the
 ``--program`` modes of bench_gemm / bench_mha via
 ``benchmarks.common.write_bench_json``) against the committed baseline
 and fails when any row regresses more than ``--threshold`` (default
-20%). Rows present in only one file are reported but never fail the
-gate — new benchmarks should not need a baseline edit to land, and a
-renamed row should fail loudly in review, not here.
+20%). Rows present in only one file are reported — a measured row with
+no baseline is called out as **new, ungated** (it has no regression
+budget at all), and ``--strict-new`` turns those into a nonzero exit so
+the nightly gate forces every new benchmark row to land with a
+committed baseline instead of silently riding ungated. Without
+``--strict-new`` they never fail the gate — a renamed row should fail
+loudly in review, not here.
 
 Usage:
     python benchmarks/check_regression.py \
-        --baseline BENCH_kernels.json --current bench_out/BENCH_kernels.json
+        --baseline BENCH_kernels.json --current bench_out/BENCH_kernels.json \
+        [--strict-new]
 """
 from __future__ import annotations
 
@@ -22,14 +27,18 @@ from typing import Dict, List, Tuple
 
 def find_regressions(
     baseline: Dict, current: Dict, threshold: float = 0.20
-) -> Tuple[List[str], List[str]]:
-    """(regressions, notes) comparing two BENCH_kernels.json payloads.
+) -> Tuple[List[str], List[str], List[str]]:
+    """(regressions, notes, new_rows) comparing two BENCH_*.json payloads.
 
     A row regresses when ``current_us > baseline_us * (1 + threshold)``.
-    Notes cover rows/sections missing on either side and improvements.
+    ``new_rows`` lists measured rows with no baseline — they carry no
+    regression budget (ungated) until a baseline is committed; the CLI's
+    ``--strict-new`` turns a nonempty list into a failure. Notes cover
+    everything else informational: missing rows/sections, improvements.
     """
     regressions: List[str] = []
     notes: List[str] = []
+    new_rows: List[str] = []
     base_sections = baseline.get("sections", {})
     cur_sections = current.get("sections", {})
     for section in sorted(set(base_sections) | set(cur_sections)):
@@ -41,7 +50,8 @@ def find_regressions(
             notes.append(f"{section}: missing from current run")
         for name in sorted(set(b_rows) | set(c_rows)):
             if name not in b_rows:
-                notes.append(f"{section}/{name}: new row (no baseline)")
+                new_rows.append(f"{section}/{name}: new row, ungated "
+                                f"(no baseline to regress against)")
                 continue
             if name not in c_rows:
                 notes.append(f"{section}/{name}: missing from current run")
@@ -61,7 +71,7 @@ def find_regressions(
                     f"{section}/{name}: improved {b_us:.1f} -> {c_us:.1f} us "
                     f"({100 * (1 - ratio):.1f}% faster)"
                 )
-    return regressions, notes
+    return regressions, notes, new_rows
 
 
 def main() -> int:
@@ -72,6 +82,12 @@ def main() -> int:
                     help="freshly measured JSON to gate")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="allowed slowdown fraction (0.20 = +20%%)")
+    ap.add_argument("--strict-new", action="store_true",
+                    help="fail (exit 1) when the current run measures "
+                         "rows absent from the baseline — the nightly "
+                         "gate's mode, so new benchmark rows must land "
+                         "with a committed baseline instead of riding "
+                         "ungated")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -79,14 +95,25 @@ def main() -> int:
     with open(args.current) as f:
         current = json.load(f)
 
-    regressions, notes = find_regressions(baseline, current, args.threshold)
+    regressions, notes, new_rows = find_regressions(
+        baseline, current, args.threshold
+    )
     for n in notes:
         print(f"note: {n}")
+    for n in new_rows:
+        print(f"{'STRICT-NEW' if args.strict_new else 'note'}: {n}")
+    failed = False
     if regressions:
         print(f"\n{len(regressions)} kernel regression(s) past "
               f"+{100 * args.threshold:.0f}%:")
         for r in regressions:
             print(f"  REGRESSION {r}")
+        failed = True
+    if args.strict_new and new_rows:
+        print(f"\n{len(new_rows)} new, ungated row(s) (--strict-new): "
+              f"commit a baseline for them")
+        failed = True
+    if failed:
         return 1
     print(f"\nno regressions past +{100 * args.threshold:.0f}% "
           f"(baseline {args.baseline}, current {args.current})")

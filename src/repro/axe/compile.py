@@ -49,7 +49,14 @@ from repro.axe.propagate import (
     epilogue_steps,
     step_node,
 )
-from repro.axe.solve import SolveResult, evaluate_env, finalize_entries, solve
+from repro.axe.solve import (
+    SolveResult,
+    evaluate_env,
+    finalize_entries,
+    producer_indices,
+    redist_overlappable,
+    solve,
+)
 from repro.axe.spec import AxeSpec
 from repro.core import collective as coll
 from repro.core.scopes import Scope, scope
@@ -528,12 +535,17 @@ class LoweredOp:
     collectives: Tuple[Tuple[str, Tuple[str, ...]], ...]  # (operand, steps)
     comm_bytes: int
     schedule: Optional[str] = None
+    #: operands whose collectives the overlap schedule issues one entry
+    #: early, hiding them under the previous op's compute (docs/overlap.md)
+    prefetched: Tuple[str, ...] = ()
 
     def describe(self) -> str:
         cols = "; ".join(f"{o}:{'+'.join(s)}" for o, s in self.collectives)
         sched = f"  sched={self.schedule}" if self.schedule else ""
         comm = f"  comm={self.comm_bytes}B" if self.comm_bytes else ""
-        return f"{self.op} [{self.kind} -> {self.backend}]{sched}{comm}" + (
+        pre = (f"  prefetch=[{', '.join(self.prefetched)}]"
+               if self.prefetched else "")
+        return f"{self.op} [{self.kind} -> {self.backend}]{sched}{comm}{pre}" + (
             f"  [{cols}]" if cols else ""
         )
 
@@ -576,12 +588,14 @@ class Executable:
     def __init__(self, graph: GraphSpec, mesh, plan: LayoutPlan,
                  assignment: Mapping[str, AxeSpec], *,
                  interpret: Optional[bool] = None,
-                 solve_result: Optional[SolveResult] = None):
+                 solve_result: Optional[SolveResult] = None,
+                 overlap: bool = False):
         self.graph = graph
         self.mesh = mesh
         self.plan = plan
         self.assignment = dict(assignment)
         self.solve_result = solve_result
+        self.overlap = bool(overlap)
         self.interpret = (
             jax.default_backend() != "tpu" if interpret is None else bool(interpret)
         )
@@ -620,8 +634,28 @@ class Executable:
             if e.op.kind == "finalize":
                 self._out_specs[e.op.out] = e.out_spec
 
+        # the overlap schedule: hoist every overlappable redistribution
+        # (repro.axe.solve.redist_overlappable — the same predicate the
+        # solver's max(comm, compute) objective charges) one entry
+        # earlier, so the body issues it before the previous op's
+        # compute and the collective's latency hides under it.
+        # _prefetch: issue slot -> [(consumer entry idx, redistribution)];
+        # _hoisted: {(consumer entry idx, operand)} consumed from the
+        # prefetch buffer instead of re-issued in place.
+        self._prefetch: Dict[int, List] = {}
+        self._hoisted: set = set()
+        if self.overlap:
+            producer = producer_indices(graph.nodes)
+            for i, e in enumerate(plan.entries):
+                if e.op.kind == "finalize":
+                    continue
+                for r in e.redistributions:
+                    if redist_overlappable(r, i, e.op, producer):
+                        self._prefetch.setdefault(i - 1, []).append((i, r))
+                        self._hoisted.add((i, r.operand))
+
         self.lowering_trace: Tuple[LoweredOp, ...] = tuple(
-            self._lower_entry(e) for e in plan.entries
+            self._lower_entry(e, i) for i, e in enumerate(plan.entries)
         )
         self._issued: List[Tuple[str, str, Tuple[str, ...]]] = []
         self._jitted = None
@@ -630,7 +664,7 @@ class Executable:
         self.fusion_report = None
 
     # -- introspection ---------------------------------------------------
-    def _lower_entry(self, entry: PlanEntry) -> LoweredOp:
+    def _lower_entry(self, entry: PlanEntry, idx: int) -> LoweredOp:
         from repro.tune import planner as tune_planner
 
         node = entry.op
@@ -655,16 +689,35 @@ class Executable:
             ),
             comm_bytes=entry.comm_bytes,
             schedule=sched,
+            prefetched=tuple(
+                op for (j, op) in sorted(self._hoisted) if j == idx
+            ),
         )
 
     def collective_sequence(self) -> Tuple[Tuple[str, str, Tuple[str, ...]], ...]:
         """Every redistribution the body issues, in execution order:
-        ``(op, operand, step type names)``."""
-        return tuple(
-            (row.op, operand, steps)
-            for row in self.lowering_trace
-            for operand, steps in row.collectives
-        )
+        ``(op, operand, step type names)``. Under the overlap schedule a
+        hoisted collective appears at its *issue* slot (one entry early),
+        still attributed to the consuming op — this is exactly the order
+        ``_body`` issues, so the dryrun issued==planned cross-check holds
+        in both modes."""
+        if not self._prefetch:
+            return tuple(
+                (row.op, operand, steps)
+                for row in self.lowering_trace
+                for operand, steps in row.collectives
+            )
+        entries = self.plan.entries
+        seq: List[Tuple[str, str, Tuple[str, ...]]] = []
+        for i, row in enumerate(self.lowering_trace):
+            for tgt, r in self._prefetch.get(i, ()):
+                seq.append((entries[tgt].op.name, r.operand,
+                            tuple(type(s).__name__ for s in r.steps)))
+            for operand, steps in row.collectives:
+                if (i, operand) in self._hoisted:
+                    continue
+                seq.append((row.op, operand, steps))
+        return tuple(seq)
 
     @property
     def observed_collectives(self):
@@ -720,9 +773,27 @@ class Executable:
         side: Dict[str, Any] = {}
         mesh_shape = self.graph.space.mesh_shape
 
+        prefetched: Dict[Tuple[int, str], Any] = {}
         with scope(Scope.DEVICE):
-            for entry in self.plan.entries:
+            for ei, entry in enumerate(self.plan.entries):
                 node = entry.op
+                # issue the collectives scheduled to hide under THIS
+                # entry's compute (each feeds a later entry; its input
+                # is already final — see redist_overlappable)
+                # interpret mode (CPU) keeps the monolithic lowerings —
+                # the double-buffered ring costs extra primitives with
+                # no latency to hide there; the schedule still reorders
+                # issue, which is what the bench A/B measures. On real
+                # accelerators the ring form engages (same dispatch
+                # convention as the program stages' XLA variants).
+                for tgt, r in self._prefetch.get(ei, ()):
+                    prefetched[(tgt, r.operand)] = coll.apply_plan(
+                        env[r.operand], r.steps, overlap=not self.interpret
+                    )
+                    self._issued.append(
+                        (self.plan.entries[tgt].op.name, r.operand,
+                         tuple(type(s).__name__ for s in r.steps))
+                    )
                 if node.kind == "finalize":
                     x = env[node.out]
                     for r in entry.redistributions:
@@ -742,6 +813,12 @@ class Executable:
                         # a fused chain intermediate (not a node input):
                         # the fused runner applies it between segments
                         internal.setdefault(r.operand, []).append(r)
+                    elif (ei, r.operand) in self._hoisted:
+                        # issued one entry early; consume the buffer
+                        # (already recorded in _issued at the issue slot)
+                        vals[r.operand] = prefetched.pop((ei, r.operand))
+                        specs[r.operand] = r.dst
+                        continue
                     elif r.dst.shape == r.src.shape:
                         vals[r.operand] = coll.apply_plan(vals[r.operand], r.steps)
                         specs[r.operand] = r.dst
@@ -961,8 +1038,17 @@ def compile(  # noqa: A001 - the paper-facing API name
     interpret: Optional[bool] = None,
     beam: int = 4,
     fuse: bool = False,
+    overlap: bool = False,
 ) -> Executable:
     """Compile ``graph`` for ``mesh`` under ``plan`` (see module doc).
+
+    ``overlap=True`` does two things (docs/overlap.md): the layout
+    solver (when it runs, i.e. ``plan=None``) scores overlappable comm
+    at ``max(comm, compute)``, and the executable's body hoists each
+    overlappable collective one entry early so its latency hides under
+    the previous op's compute. The schedule reorders collective *issue*
+    only — every op still consumes bit-identical operand values, so
+    overlap and sync executables agree bit-for-bit.
 
     ``plan`` may be a :class:`~repro.axe.solve.SolveResult`, a
     :class:`~repro.axe.propagate.LayoutPlan`, a plain ``name → AxeSpec``
@@ -1001,12 +1087,12 @@ def compile(  # noqa: A001 - the paper-facing API name
                 "or plan=None"
             )
         if plan is None:
-            res = solve(unfused, beam=beam)
+            res = solve(unfused, beam=beam, overlap=overlap)
             plan = {n: res.assignment[n] for n in graph.inputs}
 
     solve_result: Optional[SolveResult] = None
     if plan is None:
-        plan = solve(graph, beam=beam)
+        plan = solve(graph, beam=beam, overlap=overlap)
     if isinstance(plan, SolveResult):
         solve_result = plan
         layout = plan.plan
@@ -1036,7 +1122,7 @@ def compile(  # noqa: A001 - the paper-facing API name
         )
     exe = Executable(
         graph, mesh, layout, assignment,
-        interpret=interpret, solve_result=solve_result,
+        interpret=interpret, solve_result=solve_result, overlap=overlap,
     )
     exe.fusion_report = fusion_report
     return exe
@@ -1140,6 +1226,7 @@ def model_executable(
     fuse: bool = False,
     classes=None,
     offload: Sequence[str] = (),
+    overlap: bool = False,
 ) -> Executable:
     """The consumer-facing constructor: build the model-zoo graph for
     ``cfg`` at (batch, seq) and compile it. ``layers=None`` compiles the
@@ -1192,11 +1279,12 @@ def model_executable(
         # solve on the pre-rewrite graph (see compile's docstring) with
         # the offload targets pinned to parked placements; no seeded
         # budget — the rules never park
-        res = solve(gs, beam=beam, compare_seeded=False, offload=offload)
+        res = solve(gs, beam=beam, compare_seeded=False, offload=offload,
+                    overlap=overlap)
         plan = ({n: res.assignment[n] for n in gs_run.inputs}
                 if fuse else res)
     return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam,
-                   fuse=fuse)
+                   fuse=fuse, overlap=overlap)
 
 
 def decode_inputs(graph: GraphSpec, cfg, params, cache) -> Dict[str, Any]:
@@ -1252,6 +1340,7 @@ def decode_executable(
     beam: int = 4,
     dtype: Optional[str] = None,
     fuse: bool = False,
+    overlap: bool = False,
 ) -> Executable:
     """Build the single-token decode-step graph for ``cfg`` (cache
     tensors as first-class inputs/outputs) and compile it — the serving
@@ -1291,7 +1380,7 @@ def decode_executable(
         )
         plan = None
     return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam,
-                   fuse=fuse)
+                   fuse=fuse, overlap=overlap)
 
 
 def compiled_loss_fn(exe: Executable, cfg) -> Callable:

@@ -100,6 +100,7 @@ class _CallOptions:
     arg_specs: Tuple[Any, ...] = ()                       # operand AxeSpecs
     interpret: bool = False
     epilogue: Optional[Epilogue] = None
+    overlap: bool = False   # MESH stages pick async/double-buffered collectives
     # entry-stage-only overrides: (stage_name, schedule, blocks, impl)
     entry: Optional[Tuple[str, Optional[Any], Optional[Dict[str, int]], Optional[str]]] = None
 
@@ -183,6 +184,15 @@ class StageContext:
         support in-kernel application consume it; others ignore it and
         the caller applies the chain functionally on their result."""
         return self._opts.epilogue
+
+    @property
+    def overlap(self) -> bool:
+        """True when the caller asked MESH stages for async/double-
+        buffered collective issue (ppermute rings instead of monolithic
+        gathers — ``collective.lower_step(..., overlap=True)``), so
+        collective latency can hide under the following GRID compute.
+        Results are bit-identical either way (docs/overlap.md)."""
+        return self._opts.overlap
 
     # -- composition ----------------------------------------------------
     def run(self, stage_name: str, *args, **kw):
@@ -314,6 +324,7 @@ class Program:
         arg_specs: Sequence[Any] = (),
         interpret: Optional[bool] = None,
         epilogue: Optional[Epilogue] = None,
+        overlap: bool = False,
         **kw,
     ):
         """Run the program on ``args``.
@@ -327,6 +338,8 @@ class Program:
         restricts the dispatched stage to one variant. ``epilogue``
         attaches a fused :class:`Epilogue` — its tag joins the schedule
         key, so fused and plain launches tune and cache independently.
+        ``overlap`` asks MESH stages for async/double-buffered collective
+        issue (see :attr:`StageContext.overlap`).
         """
         name = stage or self.dispatch_stage()
         if interpret is None:
@@ -336,6 +349,7 @@ class Program:
             arg_specs=tuple(arg_specs or ()),
             interpret=bool(interpret),
             epilogue=epilogue,
+            overlap=bool(overlap),
             entry=(name, schedule, dict(blocks) if blocks else None, impl),
         )
         return self._run(name, args, kw, opts)

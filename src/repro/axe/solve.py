@@ -144,6 +144,61 @@ def transfer_seconds(transfer_bytes: int, space: PhysicalSpace) -> float:
     return hetero.transfer_seconds(transfer_bytes, space)
 
 
+# ---------------------------------------------------------------------------
+# compute/communication overlap (docs/overlap.md)
+# ---------------------------------------------------------------------------
+
+
+def producer_indices(nodes: Sequence[OpNode]) -> Dict[str, int]:
+    """Map each produced tensor name to the index of its producing node
+    (graph inputs are absent — they are ready before entry 0)."""
+    return {node.out: i for i, node in enumerate(nodes)}
+
+
+def redist_overlappable(r, idx: int, node: OpNode, producer_idx: Mapping[str, int]) -> bool:
+    """Can the redistribution ``r`` feeding entry ``idx`` be issued one
+    entry early, hiding under entry ``idx-1``'s compute?
+
+    Yes iff the collective's *input is already final* when entry ``idx-1``
+    starts — the operand is a graph input or was produced at entry
+    ``<= idx-2`` — and the exchange is a plain shape-preserving layout
+    change the executable can hoist without touching the op itself:
+
+    - ``idx > 0`` with nonempty steps (there is a preceding compute slot
+      to hide under, and something to hide);
+    - shape-preserving (``src.shape == dst.shape``): MoE dispatch/combine
+      style shape-changing exchanges are part of the op's own dataflow;
+    - the operand is a direct input of ``node`` (fused-chain internal
+      redistributions live inside the fused kernel, not the schedule);
+    - no class-crossing ``Transfer`` steps (host-link traffic is paced by
+      the class link, not hidden under ICI-adjacent compute).
+
+    Finalize pseudo-entries have no following compute and never overlap.
+    """
+    from repro.core import collective as coll
+
+    if idx <= 0 or not r.steps:
+        return False
+    if r.src.shape != r.dst.shape:
+        return False
+    if r.operand not in node.inputs:
+        return False
+    if any(isinstance(s, coll.Transfer) for s in r.steps):
+        return False
+    p = producer_idx.get(r.operand)
+    return p is None or p <= idx - 2
+
+
+def overlappable_comm_bytes(
+    redists, idx: int, node: OpNode, producer_idx: Mapping[str, int]
+) -> int:
+    """Bytes of entry ``idx``'s comm that an overlap schedule can hide."""
+    return sum(
+        r.comm_bytes for r in redists
+        if redist_overlappable(r, idx, node, producer_idx)
+    )
+
+
 def op_seconds(
     kind: str,
     operands: Sequence[AxeSpec],
@@ -233,25 +288,36 @@ def evaluate_env(
     env: Mapping[str, AxeSpec],
     *,
     backend: str = "tpu",
+    overlap: bool = False,
 ) -> Tuple[LayoutPlan, float, int]:
     """Propagate a full input assignment and score it: returns the plan
     (with finalize entries), the objective in seconds, and its total
     communication bytes. The seeded baseline and the solved winner go
-    through this same function, so comparisons are apples-to-apples."""
+    through this same function, so comparisons are apples-to-apples.
+
+    With ``overlap=True`` each entry's overlappable comm (see
+    :func:`redist_overlappable`) is charged at ``max(comm, compute)``
+    instead of ``comm + compute``: the hidden portion
+    ``min(op_s, overlappable_comm_s)`` is subtracted from the sum."""
     from repro.axe.propagate import propagate
 
     plan = propagate(graph.nodes, dict(env))
     plan.entries.extend(finalize_entries(graph.outputs(), plan.env))
+    producer = producer_indices(graph.nodes)
     objective = 0.0
-    for e in plan.entries:
+    for idx, e in enumerate(plan.entries):
         if e.op.kind != "finalize":
             # tensor names are single-assignment, so plan.env holds each
             # operand's spec exactly as the op saw it
             operands = [plan.env[i] for i in e.op.inputs]
-            objective += op_seconds(
+            op_s = op_seconds(
                 e.op.kind, operands, e.out_spec, backend,
                 epilogue=epilogue_kinds(e.op),
             )
+            objective += op_s
+            if overlap:
+                ov = overlappable_comm_bytes(e.redistributions, idx, e.op, producer)
+                objective -= min(op_s, comm_seconds(ov))
         objective += comm_seconds(e.comm_bytes)
         objective += transfer_seconds(e.transfer_bytes, plan.space)
     return plan, objective, plan.total_comm_bytes
@@ -274,14 +340,24 @@ class Decision:
     op_time_s: float
     cumulative_s: float
     transfer_bytes: int = 0
+    # comm-second split under the overlap objective: hidden is the part
+    # charged at max(comm, compute) — min(op_s, overlappable_comm_s) —
+    # exposed is the rest. Invariant (tests/test_overlap.py):
+    # hidden + exposed == comm_seconds(comm_bytes), and hidden == 0
+    # whenever the solve ran without overlap.
+    hidden_comm_s: float = 0.0
+    exposed_comm_s: float = 0.0
 
     def describe(self) -> str:
         parts = [f"{self.op} [{self.kind}]"]
         for tensor, chosen, n in self.bound:
             parts.append(f"  bind {tensor} := {chosen}  ({n} candidates)")
         xfer = f" xfer={self.transfer_bytes} B/dev" if self.transfer_bytes else ""
+        hid = (f" hidden={self.hidden_comm_s * 1e6:.1f}us"
+               f" exposed={self.exposed_comm_s * 1e6:.1f}us"
+               if self.hidden_comm_s > 0 else "")
         parts.append(
-            f"  -> {self.out_spec}  comm={self.comm_bytes} B/dev{xfer} "
+            f"  -> {self.out_spec}  comm={self.comm_bytes} B/dev{xfer}{hid} "
             f"op={self.op_time_s * 1e6:.1f} us  J={self.cumulative_s * 1e3:.3f} ms"
         )
         return "\n".join(parts)
@@ -297,6 +373,8 @@ class Decision:
             "transfer_bytes": self.transfer_bytes,
             "op_time_s": self.op_time_s,
             "cumulative_s": self.cumulative_s,
+            "hidden_comm_s": self.hidden_comm_s,
+            "exposed_comm_s": self.exposed_comm_s,
         }
 
 
@@ -315,6 +393,9 @@ class SolveResult:
     explored: int = 0
     beam: int = 0
     transfer_bytes: int = 0
+    overlap: bool = False
+    hidden_comm_s: float = 0.0    # total comm seconds hidden under compute
+    exposed_comm_s: float = 0.0   # total comm seconds left on the critical path
 
     @property
     def comm_improvement(self) -> Optional[float]:
@@ -334,6 +415,11 @@ class SolveResult:
             + f"J={self.objective_s * 1e3:.3f} ms  "
             f"(beam={self.beam}, {self.explored} states explored)"
         ]
+        if self.overlap:
+            lines.append(
+                f"overlap: comm hidden={self.hidden_comm_s * 1e3:.3f} ms  "
+                f"exposed={self.exposed_comm_s * 1e3:.3f} ms"
+            )
         if self.seeded_comm_bytes is not None:
             lines.append(
                 f"seeded baseline: comm={self.seeded_comm_bytes / 2**20:.1f} MiB/dev  "
@@ -357,6 +443,9 @@ class SolveResult:
             "seeded_comm_bytes": self.seeded_comm_bytes,
             "explored": self.explored,
             "beam": self.beam,
+            "overlap": self.overlap,
+            "hidden_comm_s": self.hidden_comm_s,
+            "exposed_comm_s": self.exposed_comm_s,
             "trace": [d.to_dict() for d in self.trace],
         }
 
@@ -392,6 +481,7 @@ def solve(
     max_candidates: int = 96,
     compare_seeded: bool = True,
     offload: Sequence[str] = (),
+    overlap: bool = False,
 ) -> SolveResult:
     """Search the graph's input-layout space (see module docstring).
 
@@ -403,6 +493,12 @@ def solve(
     parked on a non-default device class (repro.axe.hetero): their
     candidate lists are restricted to host-parked placements, so the
     solver chooses *how* to park them, not whether.
+
+    ``overlap=True`` scores comm the overlap schedule can hide (see
+    :func:`redist_overlappable`) at ``max(comm, compute)`` instead of
+    ``comm + compute``, so beam search prefers comm-heavier placements
+    whose collectives disappear under compute (docs/overlap.md). The
+    seeded baseline is evaluated under the same objective.
     """
     offload = tuple(offload)
     if offload and not graph.space.has_classes:
@@ -414,8 +510,9 @@ def solve(
     seeded_plan = seeded_obj = seeded_comm = None
     if compare_seeded:
         seeded_plan, seeded_obj, seeded_comm = evaluate_env(
-            graph, seeded_env, backend=backend
+            graph, seeded_env, backend=backend, overlap=overlap
         )
+    producer_idx = producer_indices(graph.nodes)
     states: List[_State] = [_State({}, {}, [], 0.0, 0, True)]
     explored = 0
 
@@ -501,7 +598,15 @@ def solve(
                 t_bytes = sum(r.transfer_bytes for r in redists)
                 op_s = op_seconds(node.kind, operands, out_spec, backend,
                                   epilogue=epilogue_kinds(node))
-                step_s = (op_s + comm_seconds(comm)
+                hidden_s = 0.0
+                if overlap:
+                    ov = overlappable_comm_bytes(redists, ni, node, producer_idx)
+                    # charge overlapped comm at max(comm, compute):
+                    # op_s + comm_s - min(op_s, ov_s) == max(op_s, ov_s)
+                    # when all comm is overlappable
+                    hidden_s = min(op_s, comm_seconds(ov))
+                exposed_s = comm_seconds(comm) - hidden_s
+                step_s = (op_s + exposed_s
                           + transfer_seconds(t_bytes, graph.space))
                 env[node.out] = out_spec
                 bindings = dict(st.bindings)
@@ -520,6 +625,8 @@ def solve(
                     op_time_s=op_s,
                     cumulative_s=st.cost_s + step_s,
                     transfer_bytes=t_bytes,
+                    hidden_comm_s=hidden_s,
+                    exposed_comm_s=exposed_s,
                 )
                 next_states.append(_State(
                     env, bindings, st.trace + [decision],
@@ -603,7 +710,10 @@ def solve(
         if name not in best.env:
             best.env[name] = seeded_env[name]
     assignment = {name: best.env[name] for name in graph.inputs}
-    plan, objective, comm_bytes = evaluate_env(graph, assignment, backend=backend)
+    plan, objective, comm_bytes = evaluate_env(
+        graph, assignment, backend=backend, overlap=overlap
+    )
+    hidden_total = sum(d.hidden_comm_s for d in best.trace)
     return SolveResult(
         plan=plan,
         assignment=assignment,
@@ -616,4 +726,7 @@ def solve(
         seeded_comm_bytes=seeded_comm,
         explored=explored,
         beam=beam,
+        overlap=overlap,
+        hidden_comm_s=hidden_total,
+        exposed_comm_s=comm_seconds(comm_bytes) - hidden_total,
     )

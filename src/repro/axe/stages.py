@@ -12,6 +12,11 @@ framework:
   collectives; its variants are cross-device schedules (e.g. ``ring``
   vs ``psum_scatter``), and the collectives themselves come from
   redistribution plans (``axe.propagate`` / ``core.collective``).
+  Under ``overlap`` (``StageContext.overlap``, docs/overlap.md) a MESH
+  stage issues the *async* lowerings — double-buffered ppermute rings
+  (``collective.ring_all_gather``) instead of monolithic gathers — so
+  collective latency hides under the following GRID compute; the values
+  produced are bit-identical, only the issue structure changes.
 * **GRID** — the body builds a Pallas launch: operand tilings go
   through ``axe.lower.block_lowering`` (the unified TilingError path)
   and the per-cell body is a BLOCK stage invoked by name.

@@ -7,6 +7,14 @@ placement of two DTensorSpecs and emits an ordered plan of collective
 steps. ``lower_step`` maps each step to the corresponding ``jax.lax``
 collective inside a ``shard_map`` body — the TPU/ICI analogue of the
 paper's NVSHMEM-backed distributed copies.
+
+``lower_step(..., overlap=True)`` selects the *async* lowerings: an
+AllGather becomes :func:`ring_all_gather`, the ppermute double-buffer
+from ``kernels.collective_matmul`` generalized to a plain gather —
+p-1 chunk rotations the XLA latency-hiding scheduler can interleave
+with unrelated compute issued after it, instead of one monolithic
+barrier. The result is bit-identical to the tiled ``lax.all_gather``;
+only the issue structure changes (docs/overlap.md).
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import dataclasses
 from typing import List, Mapping, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.dtensor import DTensorSpec
 
@@ -207,9 +216,38 @@ def plan_transfer_bytes(
 # ---------------------------------------------------------------------------
 
 
-def lower_step(x: jax.Array, step: Step) -> jax.Array:
+def ring_all_gather(x: jax.Array, axis: str, dim: int) -> jax.Array:
+    """Double-buffered ring all-gather: p-1 ``ppermute`` chunk rotations,
+    each landed into the output with a dynamic-update-slice.
+
+    Bit-identical to ``jax.lax.all_gather(x, axis, axis=dim, tiled=True)``
+    (pure data movement, no arithmetic), but issued as a pipeline of
+    neighbor exchanges the latency-hiding scheduler can interleave with
+    compute issued after it — the async form ``max(comm, compute)``
+    charging assumes (docs/overlap.md)."""
+    from repro import compat
+
+    p = compat.axis_size(axis)
+    if p == 1:
+        return x
+    idx = jax.lax.axis_index(axis)
+    chunk = x.shape[dim]
+    out = jnp.zeros(x.shape[:dim] + (chunk * p,) + x.shape[dim + 1 :], x.dtype)
+    out = jax.lax.dynamic_update_slice_in_dim(out, x, idx * chunk, axis=dim)
+    buf = x
+    perm = [(s, (s + 1) % p) for s in range(p)]
+    for t in range(1, p):
+        buf = jax.lax.ppermute(buf, axis, perm)
+        src = (idx - t) % p
+        out = jax.lax.dynamic_update_slice_in_dim(out, buf, src * chunk, axis=dim)
+    return out
+
+
+def lower_step(x: jax.Array, step: Step, *, overlap: bool = False) -> jax.Array:
     """Lower one plan step inside a shard_map body."""
     if isinstance(step, AllGather):
+        if overlap:
+            return ring_all_gather(x, step.axis, step.dim)
         return jax.lax.all_gather(x, step.axis, axis=step.dim, tiled=True)
     if isinstance(step, ReduceScatter):
         return jax.lax.psum_scatter(x, step.axis, scatter_dimension=step.dim, tiled=True)
@@ -237,7 +275,7 @@ def lower_step(x: jax.Array, step: Step) -> jax.Array:
     raise TypeError(f"unknown step {step}")
 
 
-def apply_plan(x: jax.Array, plan: Sequence[Step]) -> jax.Array:
+def apply_plan(x: jax.Array, plan: Sequence[Step], *, overlap: bool = False) -> jax.Array:
     for step in plan:
-        x = lower_step(x, step)
+        x = lower_step(x, step, overlap=overlap)
     return x

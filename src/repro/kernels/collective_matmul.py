@@ -120,7 +120,9 @@ def _kshard(ctx, a, b, *, axis_name: str | None = None, out_dtype=None):
     if ctx.impl != "ring" or p == 1:
         partial = ctx.run("partial", a, b)
         plan = _scatter_plan((a.shape[0], b.shape[1]), axis_name, p)
-        return coll.apply_plan(partial, plan).astype(out_dtype)
+        # ctx.overlap selects the async lowerings (ring gathers) for any
+        # data-movement steps of the plan — bit-identical, issue-only
+        return coll.apply_plan(partial, plan, overlap=ctx.overlap).astype(out_dtype)
 
     m = a.shape[0]
     assert m % p == 0, f"M={m} must divide over {axis_name}={p}"

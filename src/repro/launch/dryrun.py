@@ -140,6 +140,7 @@ def solve_cell(
     classes: str = None,
     host_degree: int = 2,
     offload: tuple = (),
+    overlap: bool = False,
 ):
     """Solve the whole-model layout for one cell — deviceless, like
     ``--layout-plan``, but the compiler *chooses* the placements: beam
@@ -191,7 +192,8 @@ def solve_cell(
         ctx = hetero.use_class_table(table) if table else contextlib.nullcontext()
         with ctx:
             res = solve(gs, beam=beam, backend="tpu",
-                        compare_seeded=not classes, offload=offload)
+                        compare_seeded=not classes, offload=offload,
+                        overlap=overlap)
         if table is not None:
             record["hetero"] = _hetero_record(res, table)
     except Exception as e:  # record an error row; never abort a sweep
@@ -239,12 +241,18 @@ def execute_cell(
     classes: str = None,
     host_degree: int = 2,
     offload: tuple = (),
+    overlap: bool = False,
 ):
     """Compile the solved plan with ``axe.compile`` and *run* it on
     this host's devices (smoke-reduced config): checks the numerics
     against the reference model forward and cross-checks the
     redistribution collectives the traced body issued against the plan
-    and the solver's per-op Decision comm accounting."""
+    and the solver's per-op Decision comm accounting.
+
+    ``overlap=True`` solves under the ``max(comm, compute)`` objective
+    and compiles the overlap schedule (docs/overlap.md); the record then
+    carries the hidden/exposed comm-second split, and the issued==planned
+    cross-check runs against the interleaved issue order."""
     import contextlib
     import dataclasses as _dc
 
@@ -321,10 +329,11 @@ def execute_cell(
         ctx = hetero.use_class_table(table) if table else contextlib.nullcontext()
         with ctx:
             res = solve(graph, beam=beam, backend="tpu",
-                        compare_seeded=not classes, offload=offload)
+                        compare_seeded=not classes, offload=offload,
+                        overlap=overlap)
         if table is not None:
             record["hetero"] = _hetero_record(res, table)
-        exe = axe_compile(graph, mesh, plan=res)
+        exe = axe_compile(graph, mesh, plan=res, overlap=overlap)
 
         api = build_model(cfg)
         params = api.init(jax.random.PRNGKey(0))
@@ -387,21 +396,47 @@ def execute_cell(
         record.update(
             status="ok",
             fused=fuse,
+            overlap=overlap,
             collectives=len(planned),
             comm_bytes=exe.plan.total_comm_bytes,
             solved_comm_bytes=res.comm_bytes,
             seeded_comm_bytes=res.seeded_comm_bytes,
             transfer_bytes=exe.plan.total_transfer_bytes,
         )
+        if overlap:
+            # the exposed-comm report: which ops hide comm under the
+            # previous op's compute and how much stays on the critical
+            # path — the overlap-smoke CI leg asserts hidden_ops >= 1
+            hidden_ops = [d.op for d in res.trace if d.hidden_comm_s > 0]
+            record.update(
+                hidden_comm_s=res.hidden_comm_s,
+                exposed_comm_s=res.exposed_comm_s,
+                hidden_ops=len(hidden_ops),
+                prefetched_collectives=sum(
+                    len(row.prefetched) for row in exe.lowering_trace
+                ),
+            )
         if verbose:
             tagf = " fused" if fuse else ""
             tagx = (f" transfers={transfers} "
                     f"xfer={exe.plan.total_transfer_bytes / 2**10:.1f} KiB/dev"
                     if classes else "")
+            tago = ""
+            if overlap:
+                tago = (f" hidden={res.hidden_comm_s * 1e6:.1f}us/"
+                        f"exposed={res.exposed_comm_s * 1e6:.1f}us "
+                        f"({record['hidden_ops']} ops overlap)")
             print(f"EXEC {arch}{tagf} mesh={space.signature()} "
                   f"max|Δ|={record['max_abs_diff']:.2e} "
                   f"collectives={len(planned)} (issued == planned == decisions) "
-                  f"comm={exe.plan.total_comm_bytes / 2**10:.1f} KiB/dev{tagx} OK")
+                  f"comm={exe.plan.total_comm_bytes / 2**10:.1f} KiB/dev{tagx}{tago} OK")
+            if overlap:
+                for d in res.trace:
+                    if d.hidden_comm_s > 0:
+                        print(f"  overlap {d.op}: comm={d.comm_bytes} B/dev "
+                              f"hidden={d.hidden_comm_s * 1e6:.2f}us "
+                              f"exposed={d.exposed_comm_s * 1e6:.2f}us "
+                              f"(charged max(comm, compute))")
             if "hetero" in record:
                 _print_hetero(record)
     except Exception as e:  # record an error row; never abort a sweep
@@ -617,6 +652,17 @@ def main():
                     help="with --fuse: print/record which patterns fired, "
                          "the intermediates eliminated, and comm bytes "
                          "before/after the rewrite (implies --fuse)")
+    ap.add_argument("--overlap", dest="overlap", action="store_true",
+                    default=False,
+                    help="with --solve/--execute: charge overlappable comm "
+                         "at max(comm, compute) in the solver objective and "
+                         "run the compute/communication-overlap schedule "
+                         "(prefetched collectives) in the executable; "
+                         "reports hidden vs exposed comm seconds "
+                         "(docs/overlap.md)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="synchronous collectives (the default; the "
+                         "explicit flag pins a sweep row)")
     ap.add_argument("--layers", type=int, default=2,
                     help="decoder depth of the solved model graph")
     ap.add_argument("--beam", type=int, default=4, help="layout solver beam width")
@@ -667,7 +713,7 @@ def main():
                 arch, batch=args.exec_batch, seq=args.exec_seq, beam=args.beam,
                 fuse=args.fuse, fusion_trace=args.fusion_trace,
                 classes=args.classes, host_degree=args.host_degree,
-                offload=offload,
+                offload=offload, overlap=args.overlap,
             )
             line = json.dumps(rec)
             if rec["status"] == "error":
@@ -685,7 +731,7 @@ def main():
                 trace=args.solve_trace,
                 fuse=args.fuse, fusion_trace=args.fusion_trace,
                 classes=args.classes, host_degree=args.host_degree,
-                offload=offload,
+                offload=offload, overlap=args.overlap,
             )
             line = json.dumps(rec)
             if rec["status"] != "ok":

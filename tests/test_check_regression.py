@@ -25,30 +25,42 @@ def _payload(**rows_by_section):
 def test_no_regression_within_threshold():
     base = _payload(gemm={"gemm.kernel": 100.0})
     cur = _payload(gemm={"gemm.kernel": 115.0})
-    regs, _ = find_regressions(base, cur, 0.20)
+    regs, _, _ = find_regressions(base, cur, 0.20)
     assert regs == []
 
 
 def test_regression_past_threshold_detected():
     base = _payload(gemm={"gemm.kernel": 100.0}, mha={"mha.kernel": 50.0})
     cur = _payload(gemm={"gemm.kernel": 121.0}, mha={"mha.kernel": 50.0})
-    regs, _ = find_regressions(base, cur, 0.20)
+    regs, _, _ = find_regressions(base, cur, 0.20)
     assert len(regs) == 1 and "gemm.kernel" in regs[0]
 
 
-def test_missing_and_new_rows_are_notes_not_failures():
+def test_missing_and_new_rows_are_not_regressions():
     base = _payload(gemm={"gemm.kernel": 100.0, "gemm.gone": 10.0})
     cur = _payload(gemm={"gemm.kernel": 100.0, "gemm.new": 5.0})
-    regs, notes = find_regressions(base, cur, 0.20)
+    regs, notes, new_rows = find_regressions(base, cur, 0.20)
     assert regs == []
     assert any("gemm.gone" in n and "missing" in n for n in notes)
-    assert any("gemm.new" in n and "new row" in n for n in notes)
+    assert len(new_rows) == 1
+    assert "gemm.new" in new_rows[0] and "ungated" in new_rows[0]
+    # new rows are surfaced through new_rows, not buried in notes
+    assert not any("gemm.new" in n for n in notes)
+
+
+def test_new_section_rows_are_new_rows():
+    base = _payload(gemm={"gemm.kernel": 100.0})
+    cur = _payload(gemm={"gemm.kernel": 100.0}, graph={"graph.fwd": 5.0})
+    regs, notes, new_rows = find_regressions(base, cur, 0.20)
+    assert regs == []
+    assert any("graph" in n and "new section" in n for n in notes)
+    assert len(new_rows) == 1 and "graph/graph.fwd" in new_rows[0]
 
 
 def test_improvements_are_noted():
     base = _payload(gemm={"gemm.kernel": 100.0})
     cur = _payload(gemm={"gemm.kernel": 50.0})
-    regs, notes = find_regressions(base, cur, 0.20)
+    regs, notes, _ = find_regressions(base, cur, 0.20)
     assert regs == []
     assert any("improved" in n for n in notes)
 
@@ -69,7 +81,36 @@ def test_cli_exit_codes(tmp_path):
     assert b"REGRESSION" in bad.stdout
 
 
+def test_cli_strict_new_fails_on_ungated_rows(tmp_path):
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_payload(gemm={"gemm.kernel": 100.0})))
+    cur.write_text(json.dumps(
+        _payload(gemm={"gemm.kernel": 100.0, "gemm.new": 5.0})))
+    cmd = [sys.executable, str(REPO / "benchmarks" / "check_regression.py"),
+           "--baseline", str(base), "--current", str(cur)]
+    lax = subprocess.run(cmd, capture_output=True)
+    strict = subprocess.run(cmd + ["--strict-new"], capture_output=True)
+    assert lax.returncode == 0, lax.stdout
+    assert b"ungated" in lax.stdout  # still reported, just not fatal
+    assert strict.returncode == 1
+    assert b"STRICT-NEW" in strict.stdout
+    assert b"gemm.new" in strict.stdout
+
+
+def test_cli_strict_new_passes_when_baseline_covers_all_rows(tmp_path):
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(_payload(gemm={"gemm.kernel": 100.0})))
+    cur.write_text(json.dumps(_payload(gemm={"gemm.kernel": 105.0})))
+    cmd = [sys.executable, str(REPO / "benchmarks" / "check_regression.py"),
+           "--baseline", str(base), "--current", str(cur), "--strict-new"]
+    out = subprocess.run(cmd, capture_output=True)
+    assert out.returncode == 0, out.stdout
+
+
 def test_gate_accepts_committed_baseline_against_itself():
     baseline = json.loads((REPO / "BENCH_kernels.json").read_text())
-    regs, _ = find_regressions(baseline, baseline, 0.20)
+    regs, _, new_rows = find_regressions(baseline, baseline, 0.20)
     assert regs == []
+    assert new_rows == []
