@@ -173,6 +173,73 @@ def run_overlap(batch: int, seq: int) -> list:
     )]
 
 
+def run_cotune(batch: int, seq: int) -> list:
+    """One cotune row: the dense config compiled through the
+    solve<->tune fixed-point loop (``model_executable(cotune=True,
+    cotune_measure=True)``, docs/cotune.md) against the one-shot-solved
+    executable. The cotune leg autotunes the solver's matmul locals and
+    re-solves under the measured-corrected cost model, so its plan may
+    legitimately differ from the one-shot plan; numerics are checked to
+    tolerance (layout changes reassociate float reductions) and the two
+    legs share the drift-symmetric interleaved rounds
+    (:func:`_interleaved`) so the tokens/s delta is not measurement
+    drift."""
+    import numpy as np
+
+    from repro import axe, compat, tune
+    from repro.configs import get_config, smoke_variant
+    from repro.models.model_zoo import build_model
+
+    n_dev = len(jax.devices())
+    model_deg = 4 if n_dev % 4 == 0 else n_dev
+    mesh = compat.make_mesh((n_dev // model_deg, model_deg), ("data", "model"))
+
+    arch = "qwen3-4b"
+    cfg = smoke_variant(get_config(arch))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (batch * seq,), 0, cfg.vocab_size, jnp.int32
+    )
+    exe_1 = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype)
+    exe_c = axe.model_executable(cfg, mesh, batch, seq, dtype=cfg.dtype,
+                                 cotune=True, cotune_measure=True)
+    ct = exe_c.cotune_report
+    if ct is None:
+        raise RuntimeError("cotune executable carries no cotune_report")
+    if ct.objective_s > ct.iter0_objective_s * (1 + 1e-9):
+        raise RuntimeError(
+            f"cotune regressed the modeled objective: "
+            f"{ct.iter0_objective_s:.6e} -> {ct.objective_s:.6e}"
+        )
+    ins_1 = axe.model_inputs(exe_1.graph, cfg, params)
+    ins_c = axe.model_inputs(exe_c.graph, cfg, params)
+    out_1 = np.asarray(jax.block_until_ready(exe_1(ins_1, tokens)))
+    out_c = np.asarray(jax.block_until_ready(exe_c(ins_c, tokens)))
+    err = float(np.max(np.abs(out_1 - out_c)))
+    if err > 1e-5:
+        raise RuntimeError(f"cotuned forward deviates by {err:.2e}")
+    us_1, us_c = _interleaved([(exe_1, ins_1), (exe_c, ins_c)], tokens)
+    tok_1 = batch * seq / (us_1 / 1e6)
+    tok_c = batch * seq / (us_c / 1e6)
+    cm = ct.cost_model
+    table = len(cm) if cm is not None else 0
+    # the schedule cache now holds this run's measured entries; the
+    # nightly workflow merges it into the persistent service artifact
+    tune.ServiceArtifact.from_cache(tune.default_cache()).save(
+        "bench_out/schedule_service.json"
+    )
+    return [row(
+        f"graph.forward.{arch}.cotune", us_c,
+        f"compiled forward {batch}x{seq} cotuned tokens/s={tok_c:.0f} "
+        f"(one-shot {tok_1:.0f}) iters={len(ct.iterations)} "
+        f"converged={ct.converged} flipped={ct.flipped} "
+        f"J={ct.iter0_objective_s * 1e3:.2f}->"
+        f"{ct.objective_s * 1e3:.2f}ms table={table} "
+        f"max|d|={err:.1e}",
+    )]
+
+
 def run(batch: int, seq: int, *, fuse: bool = True) -> list:
     from repro import axe, compat
     from repro.configs import get_config, smoke_variant
@@ -242,12 +309,20 @@ def main() -> int:
                          "compute/communication-overlap schedule "
                          "(docs/overlap.md) against its synchronous twin "
                          "on the same solved plan")
+    ap.add_argument("--cotune", action="store_true",
+                    help="also measure the dense config through the "
+                         "solve<->tune fixed-point loop (repro.axe.cotune, "
+                         "docs/cotune.md) against its one-shot-solved twin; "
+                         "exports the run's measured schedules to "
+                         "bench_out/schedule_service.json")
     args = ap.parse_args()
     rows = run(args.batch, args.seq, fuse=not args.no_fuse)
     if args.offload:
         rows += run_offload(args.batch, args.seq)
     if args.overlap:
         rows += run_overlap(args.batch, args.seq)
+    if args.cotune:
+        rows += run_cotune(args.batch, args.seq)
     path = write_bench_json(
         "graph", rows, filename=BENCH_GRAPH_JSON,
     )

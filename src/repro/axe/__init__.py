@@ -77,6 +77,11 @@ from repro.axe.solve import (
     enumerate_specs,
     solve,
 )
+from repro.axe.cotune import (
+    CotuneIteration,
+    CotuneResult,
+    cotune,
+)
 from repro.axe.passes import (
     DeadCodeElimination,
     EpilogueFusion,
@@ -111,6 +116,8 @@ __all__ = [
     "BlockLowering",
     "ClassTable",
     "CompileError",
+    "CotuneIteration",
+    "CotuneResult",
     "DeadCodeElimination",
     "Decision",
     "DeviceClass",
@@ -148,6 +155,7 @@ __all__ = [
     "class_table",
     "compile",
     "compiled_loss_fn",
+    "cotune",
     "default_class_table",
     "decode_cache",
     "decode_executable",

@@ -662,6 +662,7 @@ class Executable:
         #: the FusionReport when the graph came through fuse_graph
         #: (set by compile(..., fuse=True) / model_executable)
         self.fusion_report = None
+        self.cotune_report = None
 
     # -- introspection ---------------------------------------------------
     def _lower_entry(self, entry: PlanEntry, idx: int) -> LoweredOp:
@@ -1227,6 +1228,10 @@ def model_executable(
     classes=None,
     offload: Sequence[str] = (),
     overlap: bool = False,
+    cotune: bool = False,
+    cotune_iters: int = 4,
+    cotune_measure: bool = False,
+    cost_model=None,
 ) -> Executable:
     """The consumer-facing constructor: build the model-zoo graph for
     ``cfg`` at (batch, seq) and compile it. ``layers=None`` compiles the
@@ -1242,7 +1247,17 @@ def model_executable(
     (``{"host": "host"}`` — repro.axe.hetero) and ``offload`` names
     graph inputs the solver must park on the non-default class; the
     executable then carries the class-crossing Transfer collectives in
-    its plan (docs/heterogeneous.md)."""
+    its plan (docs/heterogeneous.md).
+
+    ``cotune=True`` runs the solve↔tune fixed-point loop
+    (``repro.axe.cotune``, docs/cotune.md) instead of a one-shot solve:
+    measured schedule timings from the ambient cache (or an explicit
+    ``cost_model``) correct the solver's rooflines and the layout is
+    re-solved until the plan stops changing (≤ ``cotune_iters``
+    solves). With no measurements the loop degenerates to exactly the
+    one-shot solve, bit-identical plans. ``cotune_measure=True``
+    additionally autotunes the measurable local problems in-loop. The
+    loop trace lands on ``executable.cotune_report``."""
     import warnings
 
     from repro.axe.graphs import model_graph
@@ -1275,7 +1290,22 @@ def model_executable(
             UserWarning, stacklevel=2,
         )
         plan = None
-    if plan is None and offload:
+    cotune_report = None
+    if plan is None and cotune:
+        # same pre-rewrite graph + solve arguments compile() would use
+        # internally, so an empty measurement table yields bit-identical
+        # plans to cotune=False
+        from repro.axe.cotune import cotune as _cotune
+
+        ct = _cotune(
+            gs, beam=beam, max_iters=cotune_iters, cost_model=cost_model,
+            measure=cotune_measure, overlap=overlap, offload=offload,
+            compare_seeded=not offload,
+        )
+        cotune_report = ct
+        plan = ({n: ct.assignment[n] for n in gs_run.inputs}
+                if fuse else ct.result)
+    elif plan is None and offload:
         # solve on the pre-rewrite graph (see compile's docstring) with
         # the offload targets pinned to parked placements; no seeded
         # budget — the rules never park
@@ -1283,8 +1313,10 @@ def model_executable(
                     overlap=overlap)
         plan = ({n: res.assignment[n] for n in gs_run.inputs}
                 if fuse else res)
-    return compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam,
-                   fuse=fuse, overlap=overlap)
+    exe = compile(gs, mesh, plan, schedule_cache=schedule_cache, beam=beam,
+                  fuse=fuse, overlap=overlap)
+    exe.cotune_report = cotune_report
+    return exe
 
 
 def decode_inputs(graph: GraphSpec, cfg, params, cache) -> Dict[str, Any]:

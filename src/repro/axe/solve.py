@@ -206,6 +206,7 @@ def op_seconds(
     backend: str = "tpu",
     *,
     epilogue: Tuple[str, ...] = (),
+    cost_model=None,
 ) -> float:
     """Roofline time (max of compute and memory terms) of one op's
     per-device local problem under the given layouts.
@@ -215,7 +216,16 @@ def op_seconds(
     extra operands' bytes are counted (they are already in
     ``operands``), but *no* intermediate HBM round trips are charged —
     the fused chain stays in VMEM/registers, which is exactly the win
-    the solver should see relative to the unfused graph."""
+    the solver should see relative to the unfused graph.
+
+    ``cost_model`` injects table-corrected lookup (``tune.feedback``):
+    when given, the model owns the query — it overlays measured /
+    calibrated timings and falls back to this analytic path itself.
+    ``cost_model=None`` is the pure analytic roofline, memoized here."""
+    if cost_model is not None:
+        return cost_model.op_seconds(
+            kind, operands, out_spec, backend, epilogue=epilogue
+        )
     locals_ = tuple(s.local_shape() for s in operands)
     out_local = out_spec.local_shape()
     key = (kind, locals_, out_local, out_spec.dtype, backend, tuple(epilogue),
@@ -289,6 +299,7 @@ def evaluate_env(
     *,
     backend: str = "tpu",
     overlap: bool = False,
+    cost_model=None,
 ) -> Tuple[LayoutPlan, float, int]:
     """Propagate a full input assignment and score it: returns the plan
     (with finalize entries), the objective in seconds, and its total
@@ -312,7 +323,7 @@ def evaluate_env(
             operands = [plan.env[i] for i in e.op.inputs]
             op_s = op_seconds(
                 e.op.kind, operands, e.out_spec, backend,
-                epilogue=epilogue_kinds(e.op),
+                epilogue=epilogue_kinds(e.op), cost_model=cost_model,
             )
             objective += op_s
             if overlap:
@@ -482,6 +493,7 @@ def solve(
     compare_seeded: bool = True,
     offload: Sequence[str] = (),
     overlap: bool = False,
+    cost_model=None,
 ) -> SolveResult:
     """Search the graph's input-layout space (see module docstring).
 
@@ -499,6 +511,12 @@ def solve(
     ``comm + compute``, so beam search prefers comm-heavier placements
     whose collectives disappear under compute (docs/overlap.md). The
     seeded baseline is evaluated under the same objective.
+
+    ``cost_model`` (a ``tune.feedback.CostModel``) replaces the analytic
+    :func:`op_seconds` lookup with table-corrected costs — measured
+    timings when present, calibrated-ratio interpolation for
+    near-neighbors, the analytic roofline otherwise. ``None`` (default)
+    is bit-identical to the historical analytic-only behavior.
     """
     offload = tuple(offload)
     if offload and not graph.space.has_classes:
@@ -510,7 +528,8 @@ def solve(
     seeded_plan = seeded_obj = seeded_comm = None
     if compare_seeded:
         seeded_plan, seeded_obj, seeded_comm = evaluate_env(
-            graph, seeded_env, backend=backend, overlap=overlap
+            graph, seeded_env, backend=backend, overlap=overlap,
+            cost_model=cost_model,
         )
     producer_idx = producer_indices(graph.nodes)
     states: List[_State] = [_State({}, {}, [], 0.0, 0, True)]
@@ -597,7 +616,8 @@ def solve(
                 comm = sum(r.comm_bytes for r in redists)
                 t_bytes = sum(r.transfer_bytes for r in redists)
                 op_s = op_seconds(node.kind, operands, out_spec, backend,
-                                  epilogue=epilogue_kinds(node))
+                                  epilogue=epilogue_kinds(node),
+                                  cost_model=cost_model)
                 hidden_s = 0.0
                 if overlap:
                     ov = overlappable_comm_bytes(redists, ni, node, producer_idx)
@@ -711,7 +731,8 @@ def solve(
             best.env[name] = seeded_env[name]
     assignment = {name: best.env[name] for name in graph.inputs}
     plan, objective, comm_bytes = evaluate_env(
-        graph, assignment, backend=backend, overlap=overlap
+        graph, assignment, backend=backend, overlap=overlap,
+        cost_model=cost_model,
     )
     hidden_total = sum(d.hidden_comm_s for d in best.trace)
     return SolveResult(

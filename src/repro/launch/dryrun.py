@@ -141,13 +141,23 @@ def solve_cell(
     host_degree: int = 2,
     offload: tuple = (),
     overlap: bool = False,
+    cotune: bool = False,
+    cotune_measure: bool = False,
+    cotune_iters: int = 4,
 ):
     """Solve the whole-model layout for one cell — deviceless, like
     ``--layout-plan``, but the compiler *chooses* the placements: beam
     search over algebra-enumerated candidates (``repro.axe.solve``)
     against the rule-seeded baseline. Reports solved vs seeded comm
     bytes and the per-op decision trace, plus the planner schedule each
-    solved op keys (``tune.planner.schedule_from_specs``)."""
+    solved op keys (``tune.planner.schedule_from_specs``).
+
+    ``cotune=True`` replaces the one-shot solve with the solve↔tune
+    fixed-point loop (``repro.axe.cotune``): measured timings from the
+    ambient schedule cache correct the rooflines and the layout is
+    re-solved to a fixed point; the per-iteration trace lands in the
+    record's ``cotune`` block. ``cotune_measure=True`` autotunes the
+    measurable local problems in-loop (touches the schedule cache)."""
     from repro.axe.graphs import model_graph
     from repro.axe.solve import SolveError, solve
     from repro.axe.spec import PhysicalSpace
@@ -190,10 +200,20 @@ def solve_cell(
         # (the rules never park; the parked lineage must be free to
         # out-spend the seed on ICI comm to save accelerator memory)
         ctx = hetero.use_class_table(table) if table else contextlib.nullcontext()
+        ct = None
         with ctx:
-            res = solve(gs, beam=beam, backend="tpu",
-                        compare_seeded=not classes, offload=offload,
-                        overlap=overlap)
+            if cotune:
+                from repro.axe.cotune import cotune as _cotune
+
+                ct = _cotune(gs, beam=beam, backend="tpu",
+                             compare_seeded=not classes, offload=offload,
+                             overlap=overlap, max_iters=cotune_iters,
+                             measure=cotune_measure)
+                res = ct.result
+            else:
+                res = solve(gs, beam=beam, backend="tpu",
+                            compare_seeded=not classes, offload=offload,
+                            overlap=overlap)
         if table is not None:
             record["hetero"] = _hetero_record(res, table)
     except Exception as e:  # record an error row; never abort a sweep
@@ -202,6 +222,10 @@ def solve_cell(
             record["traceback"] = traceback.format_exc()[-2000:]
         return record
     record["solve"] = res.to_dict()
+    if ct is not None:
+        record["cotune"] = ct.to_dict()
+        if verbose:
+            print(ct.describe())
     if fuse and verbose and fusion_trace:
         print(rep.describe())
     # the tune-planner schedule each solved op dispatches to, keyed on
@@ -663,6 +687,18 @@ def main():
     ap.add_argument("--no-overlap", dest="overlap", action="store_false",
                     help="synchronous collectives (the default; the "
                          "explicit flag pins a sweep row)")
+    ap.add_argument("--cotune", action="store_true",
+                    help="with --solve: run the solve<->tune fixed-point "
+                         "loop (repro.axe.cotune) instead of a one-shot "
+                         "solve — measured schedule timings from the "
+                         "ambient cache correct the rooflines and the "
+                         "layout is re-solved until the plan stops "
+                         "changing; implies --solve (docs/cotune.md)")
+    ap.add_argument("--cotune-measure", action="store_true",
+                    help="with --cotune: autotune the measurable local "
+                         "problems in-loop (writes the schedule cache)")
+    ap.add_argument("--cotune-iters", type=int, default=4,
+                    help="max solve iterations of the cotune loop")
     ap.add_argument("--layers", type=int, default=2,
                     help="decoder depth of the solved model graph")
     ap.add_argument("--beam", type=int, default=4, help="layout solver beam width")
@@ -681,6 +717,10 @@ def main():
     args = ap.parse_args()
     if args.fusion_trace:
         args.fuse = True
+    if args.cotune_measure:
+        args.cotune = True
+    if args.cotune and not (args.solve or args.solve_compare):
+        args.solve = True
     if args.offload and not args.classes:
         ap.error("--offload requires --classes")
     offload = tuple(filter(None, (args.offload or "").split(",")))
@@ -732,11 +772,24 @@ def main():
                 fuse=args.fuse, fusion_trace=args.fusion_trace,
                 classes=args.classes, host_degree=args.host_degree,
                 offload=offload, overlap=args.overlap,
+                cotune=args.cotune, cotune_measure=args.cotune_measure,
+                cotune_iters=args.cotune_iters,
             )
             line = json.dumps(rec)
             if rec["status"] != "ok":
                 failures += 1
                 print(line)
+            elif args.cotune and not args.classes:
+                s, c = rec["solve"], rec["cotune"]
+                if c["final_objective_s"] > c["iter0_objective_s"] * (1 + 1e-9):
+                    failures += 1
+                print(f"COTUNE {arch} {shape} {mesh} "
+                      f"iters={c['iters']} converged={c['converged']} "
+                      f"flipped={c['flipped']} "
+                      f"J={1e3 * c['iter0_objective_s']:.2f}->"
+                      f"{1e3 * c['final_objective_s']:.2f} ms "
+                      f"comm={s['comm_bytes'] / 2**20:.1f} MiB/dev "
+                      f"{'OK' if c['final_objective_s'] <= c['iter0_objective_s'] * (1 + 1e-9) else 'WORSE'}")
             elif args.classes:
                 # no seeded budget under a class table (the rules never
                 # park) — report placement + transfer spend instead

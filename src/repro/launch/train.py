@@ -44,6 +44,13 @@ def main():
                          "forward pass through the compiled executable "
                          "(axe.compile) instead of the module wiring")
     ap.add_argument("--solve-beam", type=int, default=4)
+    ap.add_argument("--cotune", action="store_true",
+                    help="with --solve: run the solve<->tune fixed-point "
+                         "loop (repro.axe.cotune) — measured schedule "
+                         "timings correct the solver's rooflines and the "
+                         "layout is re-solved to a fixed point "
+                         "(docs/cotune.md)")
+    ap.add_argument("--cotune-iters", type=int, default=4)
     ap.add_argument("--fuse", action="store_true",
                     help="with --solve: rewrite the graph through the "
                          "fusion passes (repro.axe.passes) before "
@@ -123,7 +130,15 @@ def main():
             gs, rep = fuse_graph(gs)
             print(f"fusion: {len(rep.patterns_fired)} patterns fired, "
                   f"{len(rep.eliminated)} intermediates eliminated")
-        res = solve(gs, beam=args.solve_beam, backend="tpu")
+        if args.cotune:
+            from repro.axe.cotune import cotune as axe_cotune
+
+            ct = axe_cotune(gs, beam=args.solve_beam, backend="tpu",
+                            max_iters=args.cotune_iters)
+            res = ct.result
+            print(ct.describe())
+        else:
+            res = solve(gs, beam=args.solve_beam, backend="tpu")
         plan = axe_rules.from_plan(res)
         print(f"layout solver: comm {res.seeded_comm_bytes / 2**20:.1f} -> "
               f"{res.comm_bytes / 2**20:.1f} MiB/dev "

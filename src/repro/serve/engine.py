@@ -20,6 +20,10 @@ class ServeEngine:
     dispatches traced inside prefill/decode reuse schedules a prior
     autotune run measured for this model's shapes (keyed
     ``program_name/stage_name``) instead of re-planning per process.
+    ``tune_service`` additionally folds a persistent service artifact
+    (``tune.service`` — e.g. the CI-nightly merged one) into that cache
+    under the measured-beats-planned / newest-wins merge rules, so a
+    fresh host inherits tuned schedules without re-autotuning.
     ``force_schedule`` is the serve-time escape hatch — a
     ``Schedule.parse`` spec (e.g. ``"xla"``) applied to every dispatch,
     or a mapping pinning individual stages (e.g. ``{"matmul/tile":
@@ -58,6 +62,7 @@ class ServeEngine:
     temperature: float = 0.0
     rng_seed: int = 0
     schedule_cache: Optional[str] = None
+    tune_service: Optional[str] = None  # persistent service artifact path
     force_schedule: Optional[Union[str, Mapping[str, str]]] = None
     mesh: Optional[Any] = None       # jax.sharding.Mesh
     layout_plan: Optional[Any] = None  # SolveResult | LayoutPlan | {name: AxeSpec}
@@ -69,6 +74,13 @@ class ServeEngine:
 
         if self.schedule_cache is not None:
             tune.use_cache(self.schedule_cache)
+        if self.tune_service is not None:
+            # fold a shipped service artifact (tune.service — e.g. the
+            # CI-nightly merged one) into the live cache: this host
+            # inherits measured schedules instead of re-autotuning;
+            # entries only replace local ones when they win the merge
+            # order (measured beats planned, newest measurement wins)
+            tune.load_into(tune.default_cache(), self.tune_service)
         self.params = None
         self._compiled: Dict[tuple, Any] = {}
         self._warned: set = set()

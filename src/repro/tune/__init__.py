@@ -41,6 +41,13 @@ from repro.tune.autotuner import (
     measure,
 )
 from repro.tune.cache import ScheduleCache, default_cache, default_cache_path, use_cache
+from repro.tune.feedback import CostEntry, CostLookup, CostModel
+from repro.tune.service import (
+    ServiceArtifact,
+    device_fingerprint,
+    load_into,
+    merge_artifacts,
+)
 from repro.tune.schedule import (
     InvalidImplError,
     Schedule,
@@ -195,12 +202,16 @@ def get_schedule(
 
 
 __all__ = [
+    "CostEntry",
+    "CostLookup",
+    "CostModel",
     "DEFAULT_SCHEDULES",
     "DISABLE_ENV",
     "FORCE_ENV",
     "InvalidImplError",
     "Schedule",
     "ScheduleCache",
+    "ServiceArtifact",
     "TuneReport",
     "autotune_flash_attention",
     "autotune_matmul",
@@ -210,10 +221,13 @@ __all__ = [
     "default_cache",
     "register_stage_op",
     "default_cache_path",
+    "device_fingerprint",
     "force_schedule",
     "get_schedule",
     "layout_signature",
+    "load_into",
     "measure",
+    "merge_artifacts",
     "planner",
     "schedule_key",
     "use_cache",

@@ -107,7 +107,13 @@ def _tune(
     if best is None:
         raise RuntimeError(f"all {len(cands)} candidates failed for {key}")
 
-    cache.put(key, best[0], us=best[1], source="measured")
+    from repro.tune.service import device_fingerprint
+
+    cache.put(
+        key, best[0], us=best[1], source="measured",
+        measurements=tuple(measurements), device=device_fingerprint(),
+        updated_at=time.time(),
+    )
     return TuneReport(best[0], best[1], tuple(measurements))
 
 

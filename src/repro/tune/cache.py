@@ -5,18 +5,29 @@ persisted as JSON keyed by ``schedule_key(op, shapes, dtypes,
 layout_sig, backend)`` so later processes — trainers, servers,
 benchmarks — skip both planning and re-measurement.
 
-File format (version 1)::
+File format (version 2)::
 
     {
-      "version": 1,
+      "version": 2,
       "entries": {
         "matmul|2048x1024;1024x1536|float32,float32|dense|cpu": {
           "schedule": {"op": "matmul", "impl": "xla", "blocks": []},
           "us": 1234.5,
-          "source": "measured"
+          "source": "measured",
+          "measurements": [["kernel:bm=128,bn=128,bk=256", 1301.2],
+                           ["xla", 1234.5]],
+          "device": {"backend": "cpu", "device_kind": "cpu", "n_devices": 8},
+          "updated_at": 1754700000.0
         }
       }
     }
+
+``measurements`` is every candidate the autotuner timed (not just the
+winner) — the calibration data ``tune.feedback`` interpolates from;
+``device`` is the fingerprint of the machine that measured, and
+``updated_at`` a POSIX timestamp driving the service-merge
+newest-measurement-wins rule (``tune.service``). All three are optional:
+version-1 files load fine, the new fields just read as empty.
 
 Default location: ``$REPRO_TUNE_CACHE`` if set, else
 ``~/.cache/repro_axe/schedules.json``. Writes are atomic
@@ -30,11 +41,14 @@ import os
 import pathlib
 import tempfile
 import threading
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.tune.schedule import Schedule
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
+#: versions load() accepts — 1 is the pre-service format without
+#: measurements / device / updated_at
+COMPAT_VERSIONS = (1, 2)
 CACHE_ENV = "REPRO_TUNE_CACHE"
 
 
@@ -43,16 +57,38 @@ class CacheEntry:
     schedule: Schedule
     us: Optional[float] = None          # measured wall-time, if any
     source: str = "measured"            # "measured" | "planned" | "forced"
+    #: every (schedule.describe(), us) pair the autotuner timed for this
+    #: key — calibration data for tune.feedback, winner included
+    measurements: Tuple[Tuple[str, float], ...] = ()
+    #: fingerprint of the measuring device (tune.service.device_fingerprint)
+    device: Optional[Dict] = None
+    #: POSIX timestamp of the measurement (newest-wins merge rule)
+    updated_at: Optional[float] = None
 
     def to_dict(self) -> Dict:
-        return {"schedule": self.schedule.to_dict(), "us": self.us, "source": self.source}
+        d = {"schedule": self.schedule.to_dict(), "us": self.us, "source": self.source}
+        if self.measurements:
+            d["measurements"] = [[k, v] for k, v in self.measurements]
+        if self.device is not None:
+            d["device"] = dict(self.device)
+        if self.updated_at is not None:
+            d["updated_at"] = self.updated_at
+        return d
 
     @staticmethod
     def from_dict(d) -> "CacheEntry":
+        meas = tuple(
+            (str(k), float(v)) for k, v in d.get("measurements", ())
+        )
+        dev = d.get("device")
+        ts = d.get("updated_at")
         return CacheEntry(
             Schedule.from_dict(d["schedule"]),
             d.get("us"),
             str(d.get("source", "measured")),
+            meas,
+            dict(dev) if dev is not None else None,
+            float(ts) if ts is not None else None,
         )
 
 
@@ -92,8 +128,12 @@ class ScheduleCache:
         us: Optional[float] = None,
         source: str = "measured",
         persist: bool = True,
+        measurements: Tuple[Tuple[str, float], ...] = (),
+        device: Optional[Dict] = None,
+        updated_at: Optional[float] = None,
     ) -> CacheEntry:
-        entry = CacheEntry(schedule, us, source)
+        entry = CacheEntry(schedule, us, source, tuple(measurements),
+                           device, updated_at)
         with self._lock:
             self._entries[key] = entry
         if persist and self.path is not None:
@@ -111,7 +151,7 @@ class ScheduleCache:
             return 0
         try:
             raw = json.loads(self.path.read_text())
-            if raw.get("version") != CACHE_VERSION:
+            if raw.get("version") not in COMPAT_VERSIONS:
                 return 0
             loaded = {k: CacheEntry.from_dict(v) for k, v in raw.get("entries", {}).items()}
         except (json.JSONDecodeError, KeyError, TypeError, ValueError, OSError):

@@ -479,6 +479,32 @@ def stage_key_for(kind: str, in_specs: Sequence) -> Optional[str]:
     return _STAGE_KEYS[family]
 
 
+def spec_key_parts(
+    kind: str, in_specs: Sequence
+) -> Optional[Tuple[str, Tuple[Tuple[int, ...], ...], Tuple[str, ...], str]]:
+    """``(op, local_shapes, dtypes, layout_sig)`` — the schedule-cache
+    key parts one graph node's solved layouts induce, *without*
+    enumerating candidates. This is the key space ``plan_from_specs``
+    plans under and ``tune.feedback.CostModel`` looks measurements up
+    in; keeping it one function guarantees the two agree. None for op
+    kinds with no tunable backend stage."""
+    op = stage_key_for(kind, in_specs)
+    if op is None:
+        return None
+    from repro.tune.schedule import layout_signature
+
+    locals_ = [tuple(s.local_shape()) for s in in_specs]
+    dtypes = tuple(s.dtype for s in in_specs)
+    if op == _STAGE_KEYS["matmul"] and len(locals_[0]) > 2:
+        # flatten leading batch dims into M for the 2D tiled kernel
+        m = 1
+        for d in locals_[0][:-1]:
+            m *= d
+        locals_ = [(m, locals_[0][-1])] + locals_[1:]
+    sig = layout_signature(*in_specs)
+    return op, tuple(locals_), dtypes, sig
+
+
 @dataclasses.dataclass(frozen=True)
 class SpecPlan:
     """Ranked schedules for the per-device problem one solved layout
@@ -517,24 +543,14 @@ def plan_from_specs(
     autotuning through ``tune.autotune_program`` lands exactly where
     ``axe.compile`` looks. Returns None for op kinds with no planning
     family (elementwise, reshape, ...)."""
-    op = stage_key_for(kind, in_specs)
-    if op is None:
+    parts = spec_key_parts(kind, in_specs)
+    if parts is None:
         return None
-    from repro.tune.schedule import layout_signature
-
-    locals_ = [tuple(s.local_shape()) for s in in_specs]
-    dtypes = tuple(s.dtype for s in in_specs)
-    if op == _STAGE_KEYS["matmul"] and len(locals_[0]) > 2:
-        # flatten leading batch dims into M for the 2D tiled kernel
-        m = 1
-        for d in locals_[0][:-1]:
-            m *= d
-        locals_ = [(m, locals_[0][-1])] + locals_[1:]
-    sig = layout_signature(*in_specs)
+    op, locals_, dtypes, sig = parts
     cands = plan(
-        op, shapes=locals_, dtypes=dtypes, backend=backend, top_k=top_k
+        op, shapes=list(locals_), dtypes=dtypes, backend=backend, top_k=top_k
     )
-    return SpecPlan(op, tuple(locals_), dtypes, sig, tuple(cands))
+    return SpecPlan(op, locals_, dtypes, sig, tuple(cands))
 
 
 def schedule_from_specs(
